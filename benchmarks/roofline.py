@@ -1,0 +1,65 @@
+"""Roofline table: render the dry-run JSON results (EXPERIMENTS.md §Roofline).
+
+The dry-run itself needs 512 placeholder devices and therefore runs as a
+separate process (``PYTHONPATH=src python -m repro.launch.dryrun --all
+--both-meshes``); this benchmark only *reads* its results file.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).parent / "results" / "dryrun.json"
+
+
+def load(label: str | None = None) -> list:
+    if not RESULTS.exists():
+        return []
+    rows = json.loads(RESULTS.read_text())
+    if label:
+        rows = [r for r in rows if r.get("label") == label]
+    return rows
+
+
+def table(rows, mesh: str = "16x16") -> str:
+    out = ["| arch | shape | status | GiB/dev | fits | compute_s | memory_s "
+           "| collective_s | dominant | useful_flops | roofline_frac |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] != "OK":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | - | - | - | - "
+                       f"| - | - | - | - |")
+            continue
+        t = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | OK "
+            f"| {r['bytes_per_device']/2**30:.2f} | {r['fits_hbm']} "
+            f"| {t['compute_s']:.3g} | {t['memory_s']:.3g} "
+            f"| {t['collective_s']:.3g} | {t['dominant']} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    rows = load(label="baseline")
+    if not rows:
+        print("roofline/missing,0,run `python -m repro.launch.dryrun --all "
+              "--both-meshes` first")
+        return
+    for r in rows:
+        if r["status"] != "OK":
+            print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0,FAIL")
+            continue
+        t = r["roofline"]
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+              f"{t[ 'compute_s' ]*1e6:.0f},"
+              f"dominant={t['dominant']} frac={r['roofline_fraction']:.3f} "
+              f"fits={r['fits_hbm']}")
+
+
+if __name__ == "__main__":
+    main()

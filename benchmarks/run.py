@@ -1,0 +1,35 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness:
+
+  * hook_overhead            — paper Table 3 (getpid interception cost)
+  * svc_census               — paper Tables 1 & 2 (svc population)
+  * app_bandwidth            — paper Figures 5 & 6 (app-level overhead)
+  * collective_census        — adapted Table 1 (collective sites per arch)
+  * collective_hook_overhead — adapted Table 3 (hooked-step cost)
+  * roofline                 — dry-run roofline table (§Roofline)
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (app_bandwidth, collective_census,
+                            collective_hook_overhead, hook_overhead,
+                            roofline, svc_census)
+    suites = [hook_overhead, svc_census, app_bandwidth, collective_census,
+              collective_hook_overhead, roofline]
+    failures = 0
+    for mod in suites:
+        name = mod.__name__.split(".")[-1]
+        print(f"# === {name} ===", flush=True)
+        try:
+            mod.main()
+        except Exception:
+            failures += 1
+            print(f"{name}/ERROR,0,{traceback.format_exc(limit=2)!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

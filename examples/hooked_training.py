@@ -1,0 +1,61 @@
+"""End-to-end driver: train a (reduced) LM with the collective-hook layer.
+
+Demonstrates the paper's technique as a framework feature: a DDP train step
+whose gradient all-reduce is (a) censused, (b) traced, (c) compressed on the
+wire — while training still converges.
+
+    PYTHONPATH=src python examples/hooked_training.py [--steps 60]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.data.pipeline import TokenStream
+from repro.hooks import CastCompressHandler, TraceHandler, census_fn, hook_collectives
+from repro.launch.mesh import make_test_mesh
+from repro.train.step import init_train_state, make_ddp_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    run = RunConfig(attn_chunk=8, remat_policy="none", learning_rate=3e-3,
+                    warmup_steps=5, total_steps=args.steps, z_loss=0.0)
+    shape = ShapeConfig("demo", 64, 4, "train")
+    mesh = make_test_mesh(data=jax.device_count(), model=1)
+
+    state = init_train_state(cfg, run, jax.random.PRNGKey(0))
+    step = make_ddp_train_step(cfg, run, mesh)
+    stream = TokenStream(cfg, shape)
+
+    # 1. static census — how many collective sites does this step have?
+    batch0 = {k: jnp.asarray(v) for k, v in stream.batch_at(0).items()}
+    cen = census_fn(step, state, batch0)
+    print(f"collective census: {cen['total_sites']} sites, "
+          f"{cen['payload_bytes_per_step']/2**20:.1f} MiB/step on the wire")
+
+    # 2. train with a compression hook at the gradient boundary
+    tracer = TraceHandler()
+    hooked = jax.jit(hook_collectives(
+        step, {"psum": CastCompressHandler(min_bytes=1 << 12)}))
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch_at(i).items()}
+        state, metrics = hooked(state, batch)
+        if i % 10 == 0:
+            print(f"step {i:3d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e}")
+    print(f"done in {time.time()-t0:.1f}s — final loss "
+          f"{float(metrics['loss']):.4f} (compressed gradient wire)")
+
+
+if __name__ == "__main__":
+    main()

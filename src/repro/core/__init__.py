@@ -1,0 +1,29 @@
+"""ASC-Hook core: the paper's mechanism, reproduced on a simulated AArch64.
+
+Public surface::
+
+    from repro.core import (
+        Mechanism, prepare, run_prepared, run_with_c3, HookConfig,
+        scan_image, census, programs,
+    )
+"""
+from . import costmodel, isa, layout, programs
+from .completeness import C3Event, diagnose_c3, run_with_c3
+from .hookcfg import HookConfig, PinnedSite
+from .image import Image, build_minilibc, build_process
+from .machine import (HALT_EXIT, HALT_FUEL, HALT_SEGV, HALT_TRAP,
+                      DecodedImage, MachineState, decode_image, make_state,
+                      mem_read, mem_write, run_image)
+from .rewriter import RewriteReport, rewrite_all_to_signal, rewrite_image
+from .runtime import Mechanism, PreparedProcess, hook_invocations, prepare, run_prepared
+from .scanner import SvcSite, census, scan_image
+
+__all__ = [
+    "C3Event", "DecodedImage", "HALT_EXIT", "HALT_FUEL", "HALT_SEGV",
+    "HALT_TRAP", "HookConfig", "Image", "MachineState", "Mechanism",
+    "PinnedSite", "PreparedProcess", "RewriteReport", "SvcSite",
+    "build_minilibc", "build_process", "census", "costmodel", "decode_image",
+    "diagnose_c3", "hook_invocations", "isa", "layout", "make_state",
+    "mem_read", "mem_write", "prepare", "programs", "rewrite_all_to_signal",
+    "rewrite_image", "run_image", "run_prepared", "run_with_c3", "scan_image",
+]

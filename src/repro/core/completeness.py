@@ -1,0 +1,78 @@
+"""Completeness strategy C3: the trap → config → re-execute flow (Figure 4).
+
+When an *indirect* jump lands between the replaced pair, only ``br x8``
+executes and x8 still holds the syscall number (< 600).  Addresses
+``[0, 4096)`` are unmapped, so the jump faults.  The discrimination rule is
+the paper's: the fault is ours iff ``pc == x8`` and ``pc < MAX_SYSCALL_NR``
+— which cannot be confused with a NULL-pointer dereference or any other
+program fault.  The handler then walks ``x30`` back to the ``blr``, reads its
+destination register to recover the svc address, maps it to (library, offset)
+via the maps table, appends it to the config file, and the application is
+re-executed; run two uses R3 for that site.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+from . import isa
+from . import machine as M
+from .hookcfg import HookConfig
+from .isa import Asm, Op
+from .runtime import Mechanism, PreparedProcess, prepare, run_prepared
+
+
+@dataclasses.dataclass
+class C3Event:
+    syscall_nr: int
+    svc_addr: int
+    lib: str
+    offset: int
+
+
+def diagnose_c3(pp: PreparedProcess, state: M.MachineState) -> Optional[C3Event]:
+    """Apply the paper's signal-handler analysis to a faulted machine."""
+    if int(state.halted) != M.HALT_SEGV:
+        return None
+    pc = int(state.fault_pc)
+    x8 = int(state.regs[8])
+    if pc != x8 or pc >= 600:  # not our fault signature
+        return None
+    # "most indirect jumps use BLR, which saves the return address in x30"
+    x30 = int(state.regs[30])
+    blr_word = pp.image.word_at(x30 - 4)
+    d = isa.decode(blr_word)
+    if d.op != Op.BLR:
+        return None
+    svc_addr = int(state.regs[d.rn])
+    sec = pp.image.section_of(svc_addr)
+    if sec is None:
+        return None
+    return C3Event(syscall_nr=x8, svc_addr=svc_addr,
+                   lib=sec.name, offset=svc_addr - sec.base)
+
+
+def run_with_c3(app_builder: Callable[[], Asm], *,
+                cfg: Optional[HookConfig] = None,
+                virtualize: bool = False,
+                fuel: int = 2_000_000,
+                max_restarts: int = 4,
+                ) -> Tuple[M.MachineState, PreparedProcess, List[C3Event], int]:
+    """Run under ASC-Hook with the full two-run completeness loop.
+
+    Returns (final state, final prepared process, C3 events, #executions).
+    """
+    cfg = cfg or HookConfig()
+    events: List[C3Event] = []
+    for attempt in range(1, max_restarts + 1):
+        pp = prepare(app_builder(), Mechanism.ASC, virtualize=virtualize, cfg=cfg)
+        state = run_prepared(pp, fuel=fuel)
+        ev = diagnose_c3(pp, state)
+        if ev is None:
+            return state, pp, events, attempt
+        # append to the "config file" and re-execute (Figure 4)
+        if not cfg.enable_c3:
+            return state, pp, events, attempt
+        cfg.pin(lib=ev.lib, offset=ev.offset, syscall_nr=ev.syscall_nr)
+        events.append(ev)
+    return state, pp, events, max_restarts

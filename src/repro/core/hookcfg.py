@@ -1,0 +1,69 @@
+"""The completeness-strategy configuration file (paper §3.3).
+
+The paper drives its completeness strategies from a config file: which svc
+sites must be intercepted via signals, whether to use ``brk`` or an illegal
+instruction, and which strategies are enabled.  Sites can be pinned by
+(library, offset) — the shareable form, valid for every process using the
+same library build — or by raw virtual address, or by syscall number.
+Strategy C3 *appends* to this file at fault time and the application is
+re-executed (Figure 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class PinnedSite:
+    lib: str = ""
+    offset: int = -1
+    vaddr: int = -1
+    syscall_nr: int = -1
+
+    def matches(self, lib: str, offset: int, vaddr: int) -> bool:
+        if self.vaddr >= 0:
+            return self.vaddr == vaddr
+        if self.lib and self.offset >= 0:
+            return self.lib == lib and self.offset == offset
+        return False
+
+
+@dataclasses.dataclass
+class HookConfig:
+    # Paper default: completeness strategies are OFF (pure-R1/R2 fast path,
+    # "the primary purpose of our Completeness policy is for insurance").
+    # We default the *static* strategies ON because they are free at rewrite
+    # time; flip them off to measure the paper's default posture.
+    enable_c1: bool = True   # static: missing x8 assignment / broken ABI
+    enable_c2: bool = True   # static: direct-jump target between the pair
+    enable_c3: bool = True   # dynamic: trap -> config -> re-exec (Figure 4)
+    use_brk: bool = True     # brk vs illegal instruction for R3 sites
+    backward_window: int = 20  # paper: "the preceding 20 instructions"
+    max_l1_slots: int = 3840   # paper's slot budget; lower it to force R2
+    pinned: List[PinnedSite] = dataclasses.field(default_factory=list)
+
+    # -- persistence -----------------------------------------------------------
+    def save(self, path: str | pathlib.Path) -> None:
+        d = dataclasses.asdict(self)
+        pathlib.Path(path).write_text(json.dumps(d, indent=2))
+
+    @classmethod
+    def load(cls, path: str | pathlib.Path) -> "HookConfig":
+        p = pathlib.Path(path)
+        if not p.exists():
+            return cls()
+        d = json.loads(p.read_text())
+        pins = [PinnedSite(**x) for x in d.pop("pinned", [])]
+        return cls(pinned=pins, **d)
+
+    def pin(self, *, lib: str = "", offset: int = -1, vaddr: int = -1,
+            syscall_nr: int = -1) -> None:
+        site = PinnedSite(lib=lib, offset=offset, vaddr=vaddr, syscall_nr=syscall_nr)
+        if not any(p == site for p in self.pinned):
+            self.pinned.append(site)
+
+    def is_pinned(self, lib: str, offset: int, vaddr: int) -> bool:
+        return any(p.matches(lib, offset, vaddr) for p in self.pinned)

@@ -1,0 +1,182 @@
+"""Workload programs for the evaluation (paper §4).
+
+Each builder returns a fresh ``Asm`` for the application text, calling into
+the mini-libc exactly the way compiled C would (``bl`` to wrapper symbols).
+The set mirrors the paper's benchmarks at simulation scale:
+
+* ``getpid_loop``   — Table 3 microbenchmark (hook overhead per call);
+* ``read_loop``     — the MPI-BFS read-heavy workload (Figure 5);
+* ``mixed_ops``     — the SQLite speedtest1-like mixed syscall workload;
+* ``io_bandwidth``  — the IOR/redis/nginx-style bandwidth workload (Figure 6);
+* ``indirect_svc``  — the Figure 4 program: an indirect jump whose target is
+  an svc instruction (completeness strategy C3);
+* ``retry_loop``    — a direct back-edge onto an svc (strategy C2);
+* ``caller_x8``     — x8 assigned by the caller of a raw svc (strategy C1).
+"""
+from __future__ import annotations
+
+from . import isa
+from . import layout as L
+from .image import APP_BASE
+from .isa import Asm
+
+
+def _exit0(a: Asm) -> None:
+    a.emit(isa.movz(0, 0))
+    a.bl_to("libc.so:exit")
+
+
+_BURN_ID = [0]
+
+
+def _burn(a: Asm, n: int) -> None:
+    """~2n cycles of user-space compute (models the app work between
+    syscalls; calibrates workload syscall-density to the paper's apps)."""
+    if n <= 0:
+        return
+    _BURN_ID[0] += 1
+    lbl = f"burn{_BURN_ID[0]}"
+    a.emit(*isa.mov_imm48(25, n))
+    a.label(lbl)
+    a.emit(isa.subsi(25, 25, 1))
+    a.b_to(lbl, cond="ne")
+
+
+def getpid_loop(n: int = 1000) -> Asm:
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(*isa.mov_imm48(19, n))
+    a.label("loop")
+    a.bl_to("libc.so:getpid")
+    a.emit(isa.mov_r(20, 0))  # keep last pid for verification
+    a.emit(isa.subsi(19, 19, 1))
+    a.b_to("loop", cond="ne")
+    # store the observed pid for the transparency check
+    a.emit(isa.movz(10, L.SCRATCH & 0xFFFF), isa.movk(10, L.SCRATCH >> 16, 1))
+    a.emit(isa.str_imm(20, 10))
+    _exit0(a)
+    return a
+
+
+def read_loop(n: int = 256, nbytes: int = 1024, work: int = 0) -> Asm:
+    assert nbytes % 8 == 0
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(*isa.mov_imm48(19, n))
+    a.emit(*isa.mov_imm48(21, L.HEAP_BASE))
+    a.emit(*isa.mov_imm48(22, nbytes))
+    a.label("loop")
+    a.emit(isa.movz(0, 3))        # fd
+    a.emit(isa.mov_r(1, 21))      # buf
+    a.emit(isa.mov_r(2, 22))      # count
+    a.bl_to("libc.so:read")
+    _burn(a, work)
+    a.emit(isa.subsi(19, 19, 1))
+    a.b_to("loop", cond="ne")
+    a.emit(isa.movz(0, 1))
+    a.emit(isa.mov_r(1, 21))
+    a.emit(isa.mov_r(2, 22))
+    a.bl_to("libc.so:write")      # checksum flush
+    _exit0(a)
+    return a
+
+
+def mixed_ops(n: int = 64, nbytes: int = 512, work: int = 0) -> Asm:
+    assert nbytes % 8 == 0
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(*isa.mov_imm48(19, n))
+    a.emit(*isa.mov_imm48(21, L.HEAP_BASE))
+    a.label("loop")
+    a.emit(isa.movz(0, 0), isa.movz(1, 0), isa.movz(2, 0))
+    a.bl_to("libc.so:openat")
+    a.emit(isa.mov_r(23, 0))      # fd
+    a.emit(isa.mov_r(0, 23))
+    a.emit(isa.mov_r(1, 21))
+    a.emit(*isa.mov_imm48(2, nbytes))
+    a.bl_to("libc.so:read")
+    a.emit(isa.mov_r(0, 23))
+    a.emit(isa.mov_r(1, 21))
+    a.emit(*isa.mov_imm48(2, nbytes))
+    a.bl_to("libc.so:write")
+    a.emit(isa.mov_r(0, 23))
+    a.bl_to("libc.so:close")
+    _burn(a, work)
+    a.emit(isa.subsi(19, 19, 1))
+    a.b_to("loop", cond="ne")
+    _exit0(a)
+    return a
+
+
+def io_bandwidth(n: int = 128, nbytes: int = 4096, work: int = 0) -> Asm:
+    """Large sequential transfers: overhead should amortise (Figure 6)."""
+    assert nbytes % 8 == 0
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(*isa.mov_imm48(19, n))
+    a.emit(*isa.mov_imm48(21, L.HEAP_BASE))
+    a.label("loop")
+    a.emit(isa.movz(0, 3))
+    a.emit(isa.mov_r(1, 21))
+    a.emit(*isa.mov_imm48(2, nbytes))
+    a.bl_to("libc.so:read")
+    a.emit(isa.movz(0, 1))
+    a.emit(isa.mov_r(1, 21))
+    a.emit(*isa.mov_imm48(2, nbytes))
+    a.bl_to("libc.so:write")
+    _burn(a, work)
+    a.emit(isa.subsi(19, 19, 1))
+    a.b_to("loop", cond="ne")
+    _exit0(a)
+    return a
+
+
+def indirect_svc(n: int = 2) -> Asm:
+    """Figure 4: ``blr`` straight onto the (rewritten) svc inside getpid.
+
+    The caller supplies x8 = __NR_getpid itself — exactly the pattern where
+    only the second replacement instruction executes.
+    """
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(*isa.mov_imm48(19, n))
+    a.mov48_sym(9, "libc.so:getpid", delta=4)  # address of the svc itself
+    a.label("loop")
+    a.emit(isa.movz(8, L.SYS_GETPID, sf=0))    # caller-side x8 assignment
+    a.emit(isa.blr(9))
+    a.emit(isa.mov_r(20, 0))
+    a.emit(isa.subsi(19, 19, 1))
+    a.b_to("loop", cond="ne")
+    a.emit(isa.movz(10, L.SCRATCH & 0xFFFF), isa.movk(10, L.SCRATCH >> 16, 1))
+    a.emit(isa.str_imm(20, 10))
+    _exit0(a)
+    return a
+
+
+def retry_loop(retries: int = 3) -> Asm:
+    """Strategy C2: libc's retry_svc has a direct back-edge onto its svc."""
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(isa.movz(19, retries))
+    a.bl_to("libc.so:retry_svc")
+    a.emit(isa.movz(10, L.SCRATCH & 0xFFFF), isa.movk(10, L.SCRATCH >> 16, 1))
+    a.emit(isa.str_imm(0, 10))
+    _exit0(a)
+    return a
+
+
+def caller_x8(n: int = 4) -> Asm:
+    """Strategy C1: raw_svc has no x8 assignment in its preceding window."""
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(*isa.mov_imm48(19, n))
+    a.label("loop")
+    a.emit(isa.movz(8, L.SYS_GETPID, sf=0))
+    a.bl_to("libc.so:raw_svc")
+    a.emit(isa.mov_r(20, 0))
+    a.emit(isa.subsi(19, 19, 1))
+    a.b_to("loop", cond="ne")
+    a.emit(isa.movz(10, L.SCRATCH & 0xFFFF), isa.movk(10, L.SCRATCH >> 16, 1))
+    a.emit(isa.str_imm(20, 10))
+    _exit0(a)
+    return a

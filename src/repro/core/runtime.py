@@ -1,0 +1,96 @@
+"""The ASC-Hook runtime: the LD_PRELOAD-entry equivalent (paper §3.4).
+
+``prepare()`` plays the role of the constructor that runs before ``main``:
+it walks the process image (procfs analogue), scans, classifies and rewrites
+svc sites, installs the trampolines and the hook library, and registers the
+signal handler when any R3 site exists.  It also implements the comparison
+mechanisms of the paper's evaluation: pure signal interception, ptrace, and
+LD_PRELOAD function interposition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from . import layout as L
+from . import machine as M
+from .hookcfg import HookConfig
+from .image import HOOK_BASE, Image, build_process
+from .isa import Asm
+from .rewriter import RewriteReport, rewrite_all_to_signal, rewrite_image
+from .trampoline import build_hook_library, build_signal_handler
+
+
+class Mechanism(enum.Enum):
+    NONE = "none"
+    LD_PRELOAD = "ld_preload"
+    SIGNAL = "signal"
+    PTRACE = "ptrace"
+    ASC = "asc"
+
+
+@dataclasses.dataclass
+class PreparedProcess:
+    image: Image
+    decoded: M.DecodedImage
+    entry: int
+    sig_handler: int
+    mechanism: Mechanism
+    report: Optional[RewriteReport]
+    virtualize: bool
+
+
+AppBuilder = Callable[[], Asm]
+
+
+def prepare(app: Asm, mechanism: Mechanism, *,
+            virtualize: bool = False,
+            cfg: Optional[HookConfig] = None,
+            extra: Optional[Dict[str, Asm]] = None) -> PreparedProcess:
+    cfg = cfg or HookConfig()
+    preload = virtualize if mechanism is Mechanism.LD_PRELOAD else None
+    image = build_process(app, extra=extra, preload_virt=preload)
+
+    report = None
+    sig_handler = 0
+    if mechanism in (Mechanism.ASC, Mechanism.SIGNAL):
+        # hook library in its own namespace (dlmopen analogue, not rewritten)
+        hook = build_hook_library(virtualize_getpid=virtualize)
+        image.add_asm("hooklib.so", hook, rewrite=False)
+        hook_entry = image.sym("hooklib.so:hook_entry")
+        if mechanism is Mechanism.ASC:
+            report = rewrite_image(image, hook_entry, cfg)
+            needs_handler = report.needs_signal
+        else:
+            report = rewrite_all_to_signal(image, cfg)
+            needs_handler = True
+        if needs_handler:
+            handler = build_signal_handler()
+            image.add_asm("sighandler", handler, rewrite=False,
+                          symbols={"hook_entry": hook_entry})
+            sig_handler = image.sym("sighandler:sig_handler")
+
+    decoded = M.decode_image(image.words)
+    return PreparedProcess(
+        image=image, decoded=decoded, entry=image.sym("app:main"),
+        sig_handler=sig_handler, mechanism=mechanism, report=report,
+        virtualize=virtualize)
+
+
+def run_prepared(pp: PreparedProcess, *, fuel: int = 2_000_000) -> M.MachineState:
+    st = M.make_state(pp.entry, fuel=fuel)
+    import jax.numpy as jnp
+    st = st._replace(
+        sig_handler=jnp.int64(pp.sig_handler),
+        ptrace=jnp.int64(1 if pp.mechanism is Mechanism.PTRACE else 0),
+        virt_getpid=jnp.int64(1 if (pp.mechanism is Mechanism.PTRACE and pp.virtualize) else 0),
+    )
+    return M.run_image(pp.decoded, st)
+
+
+def hook_invocations(state: M.MachineState) -> int:
+    """Total hook executions across mechanisms (COUNTER word + ptrace count)."""
+    return M.mem_read(state, L.COUNTER) + int(state.hook_count)

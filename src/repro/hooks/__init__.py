@@ -1,0 +1,14 @@
+"""ASC-Hook adapted to SPMD: transparent collective interception."""
+from .completeness import (CompletenessReport, completeness_report,
+                           hlo_collective_census)
+from .handlers import (CastCompressHandler, RSAGHandler, TraceHandler,
+                       virtualize)
+from .interceptor import COLLECTIVE_PRIMS, hook_collectives, hooking
+from .scanner import CollectiveSite, census_fn, scan_jaxpr
+
+__all__ = [
+    "COLLECTIVE_PRIMS", "CastCompressHandler", "CollectiveSite",
+    "CompletenessReport", "RSAGHandler", "TraceHandler", "census_fn",
+    "completeness_report", "hlo_collective_census", "hook_collectives",
+    "hooking", "scan_jaxpr", "virtualize",
+]

@@ -1,0 +1,119 @@
+"""Shipped hook handlers — the framework's first-class interception features.
+
+* ``TraceHandler``     — telemetry: counts sites + payload bytes, then runs
+  the original op unchanged (transparent, like the paper's counting hook).
+* ``CastCompressHandler`` — gradient compression: cast the psum payload to a
+  narrower dtype on the wire (bf16/f16), halving collective bytes.  Designed
+  to pair with optimizer-level error feedback (repro.optim.compress).
+* ``RSAGHandler``      — schedule rewrite: psum -> reduce_scatter (+ deferred
+  all_gather), the ZeRO trick; same semantics, different collective mix, used
+  by the §Perf hillclimb.
+* ``virtualize``       — the Table-3-style hook: skip the collective entirely
+  and return a supplied value (used by microbenchmarks to isolate hook cost).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class TraceRecord:
+    primitive: str
+    shapes: Tuple
+    bytes: int
+
+
+class TraceHandler:
+    """Counting hook: transparent pass-through + site log."""
+
+    def __init__(self):
+        self.records: List[TraceRecord] = []
+
+    def __call__(self, name, args, params, do_original):
+        nbytes = sum(int(np.prod(a.shape, dtype=np.int64)) * a.dtype.itemsize
+                     for a in args if hasattr(a, "shape"))
+        self.records.append(TraceRecord(name, tuple(getattr(a, "shape", ())
+                                                    for a in args), nbytes))
+        return do_original()
+
+    @property
+    def count(self) -> int:
+        return len(self.records)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(r.bytes for r in self.records)
+
+
+class CastCompressHandler:
+    """Compress the wire payload of psum by casting to ``wire_dtype``.
+
+    The quantisation error is the caller's to feed back (error feedback lives
+    in the optimizer state — see repro.optim.compress) so the hook itself
+    stays stateless and shape-transparent.
+    """
+
+    def __init__(self, wire_dtype=jnp.bfloat16, min_bytes: int = 1 << 16):
+        self.wire_dtype = jnp.dtype(wire_dtype)
+        self.min_bytes = min_bytes
+        self.compressed_sites = 0
+
+    def __call__(self, name, args, params, do_original):
+        outs = []
+        new_args = []
+        for a in args:
+            big = (hasattr(a, "dtype") and a.dtype == jnp.float32 and
+                   a.size * 4 >= self.min_bytes)
+            if big:
+                self.compressed_sites += 1
+                new_args.append(a.astype(self.wire_dtype))
+            else:
+                new_args.append(a)
+        out = do_original(*new_args)
+        flat = out if isinstance(out, (tuple, list)) else (out,)
+        fixed = tuple(o.astype(jnp.float32) if o.dtype == self.wire_dtype
+                      else o for o in flat)
+        return type(out)(fixed) if isinstance(out, (tuple, list)) else fixed[0]
+
+
+class RSAGHandler:
+    """psum -> all_gather(reduce_scatter(x)): same result, ZeRO schedule.
+
+    Payloads whose leading dim is divisible by the axis size take the
+    RS+AG path; everything else falls through to the original psum.
+    """
+
+    def __init__(self, axis_size: int):
+        self.axis_size = axis_size
+        self.rewritten = 0
+
+    def __call__(self, name, args, params, do_original):
+        axes = params.get("axes") or (params.get("axis_name"),)
+        if len(args) != 1 or len(axes) != 1 or axes[0] is None:
+            return do_original()
+        (x,) = args
+        ax = axes[0]
+        n = self.axis_size
+        if not hasattr(x, "shape") or x.ndim == 0 or x.shape[0] % n != 0:
+            return do_original()
+        self.rewritten += 1
+        from jax._src.lax import parallel as _lp
+        scattered = jax.lax.psum_scatter(x, ax, scatter_dimension=0, tiled=True)
+        # all_gather_invariant: the gathered result is replicated across ax,
+        # matching psum's output type under shard_map's vma checking
+        return _lp.all_gather_invariant(scattered, ax, axis=0, tiled=True)
+
+
+def virtualize(value_fn: Callable[[Tuple], Any]):
+    """Return a handler that skips the collective and fabricates the result
+    (the 'hook returns a virtual value' microbenchmark of Table 3)."""
+
+    def handler(name, args, params, do_original):
+        return value_fn(args)
+
+    return handler

@@ -1,0 +1,87 @@
+"""Flash-decode (TPU Pallas): one query token vs a long KV cache.
+
+Grid is (B*Hkv, Skv/bk) with the KV axis innermost-sequential; the per-group
+query rows (GQA group size G) ride in one block so the MXU sees a (G, hd) x
+(hd, bk) matmul per tile.  ``kv_len`` masks the dead tail of a preallocated
+cache.  This is the decode_32k / long-context serving hot path where the
+roofline is HBM-bandwidth-bound (reading the cache once).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, bk: int, nk: int):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale             # (G, hd)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bk)
+
+    kv_len = kvlen_ref[0]
+    k_pos = ik * bk + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos < kv_len, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_3d(q, k, v, kv_len, *, bk: int = 512,
+                        interpret: bool = False):
+    """q: (BHkv, G, hd); k, v: (BHkv, Skv, hd); kv_len: () i32."""
+    BH, G, hd = q.shape
+    _, Skv, _ = k.shape
+    bk = min(bk, Skv)
+    assert Skv % bk == 0
+    nk = Skv // bk
+    scale = 1.0 / np.sqrt(hd)
+    kv_len_arr = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (1,))
+
+    kernel = functools.partial(_decode_kernel, scale=scale, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # kv_len scalar
+            pl.BlockSpec((1, G, hd), lambda h, j: (h, 0, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda h, j: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len_arr, q, k, v)

@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for flash-decode."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_3d
+from .ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret", "impl"))
+def decode_attention(q, k, v, kv_len, *, bk: int = 512,
+                     interpret: bool = False, impl: str = "pallas"):
+    """q: (B, 1, Hq, hd); k, v: (B, Skv, Hkv, hd) -> (B, 1, Hq, hd)."""
+    B, _, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    q3 = q.reshape(B, Hkv, G, hd).reshape(B * Hkv, G, hd)
+    k3 = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, hd)
+    v3 = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, hd)
+    if impl == "pallas":
+        o3 = decode_attention_3d(q3, k3, v3, kv_len, bk=bk, interpret=interpret)
+    else:
+        o3 = decode_attention_ref(q3, k3, v3, kv_len)
+    return o3.reshape(B, Hkv, G, hd).reshape(B, 1, Hq, hd)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for flash-decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """q: (BHkv, G, hd); k, v: (BHkv, Skv, hd); kv_len: scalar i32."""
+    _, Skv, hd = k.shape
+    s = jnp.einsum("hgd,hkd->hgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    mask = jnp.arange(Skv)[None, None, :] < kv_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hgk,hkd->hgd", p, v.astype(jnp.float32)).astype(q.dtype)

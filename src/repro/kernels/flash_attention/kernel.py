@@ -1,0 +1,108 @@
+"""Flash attention forward (TPU Pallas): online-softmax over KV tiles.
+
+TPU adaptation of the FlashAttention blocking (the HBM->VMEM analogue of the
+GPU's HBM->SRAM tiling): the grid is (batch*q_heads, Sq/bq, Skv/bk) with the
+KV axis innermost — TPU grid steps execute *sequentially* per core, so the
+running max/denominator/accumulator live in VMEM scratch across KV tiles and
+are flushed to the output ref on the last tile.  Block shapes keep the MXU
+dims hardware-aligned (bq, bk multiples of 8 sublanes; head_dim on lanes).
+
+Supports causal masking, local windows and GQA (the kv head of program h is
+h // group).  Forward only: the training path uses the XLA chunked attention
+(see DESIGN.md §kernels); this kernel is the serving/prefill hot path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  bq: int, bk: int, nk: int):
+    ik = pl.program_id(2)
+    iq = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale           # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                   # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+
+    q_pos = iq * bq + lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_3d(q, k, v, *, causal: bool = True, window: int = 0,
+                       bq: int = 128, bk: int = 128,
+                       interpret: bool = False):
+    """q: (BHq, Sq, hd); k, v: (BHkv, Skv, hd). Returns (BHq, Sq, hd).
+
+    BHq must be a multiple of BHkv (GQA grouping by ``//``)."""
+    BH, Sq, hd = q.shape
+    BHkv, Skv, _ = k.shape
+    assert BH % BHkv == 0
+    group = BH // BHkv
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0
+    nq, nk = Sq // bq, Skv // bk
+    scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        # running max / denominator / accumulator live in VMEM scratch,
+        # persistent across the (sequential, innermost) KV grid axis
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

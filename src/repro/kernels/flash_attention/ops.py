@@ -1,0 +1,29 @@
+"""Jit'd public wrapper: model-layout in, kernel-layout dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_3d
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret", "impl"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool = False,
+                    impl: str = "pallas"):
+    """q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd) -> (B, Sq, Hq, hd)."""
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    q3 = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, hd)
+    k3 = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, hd)
+    v3 = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, hd)
+    if impl == "pallas":
+        o3 = flash_attention_3d(q3, k3, v3, causal=causal, window=window,
+                                bq=bq, bk=bk, interpret=interpret)
+    else:
+        o3 = attention_ref(q3, k3, v3, causal=causal, window=window)
+    return o3.reshape(B, Hq, Sq, hd).transpose(0, 2, 1, 3)

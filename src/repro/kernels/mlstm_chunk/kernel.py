@@ -1,0 +1,98 @@
+"""mLSTM chunkwise cell (TPU Pallas): matrix memory with gated decay.
+
+Grid (B*H, S/K) with the chunk axis innermost-sequential; the (dh, dh)
+matrix memory C and the dh normaliser n persist in VMEM scratch across
+chunks.  Per chunk the kernel computes the intra-chunk gated score matrix
+(K x K, MXU matmul), the inter-chunk read of C, and the decayed state update
+— the same math as the chunkwise-parallel formulation in
+``repro.models.recurrent.mlstm_scan_chunked`` but with the state resident in
+VMEM instead of round-tripping HBM per chunk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, lf_ref, li_ref, h_ref, c_scr, n_scr,
+                  *, K: int, scale: float):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale       # (K, dh)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lf = lf_ref[0, :, 0].astype(jnp.float32)       # (K,)
+    li = li_ref[0, :, 0].astype(jnp.float32)
+
+    d_cum = jnp.cumsum(lf)                         # (K,)
+    # inter-chunk: decayed q reads the carried state
+    q_dec = q * jnp.exp(d_cum)[:, None]
+    C, n = c_scr[...], n_scr[...]
+    inter = jax.lax.dot_general(q_dec, C, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    inter_n = jax.lax.dot_general(q_dec, n[:, None], (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)[:, 0]
+    # intra-chunk gated scores
+    rel = d_cum[:, None] - d_cum[None, :] + li[None, :]
+    causal = (lax.broadcasted_iota(jnp.int32, (K, K), 0)
+              >= lax.broadcasted_iota(jnp.int32, (K, K), 1))
+    w = jnp.where(causal, jnp.exp(jnp.minimum(rel, 30.0)), 0.0)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * w
+    intra = jax.lax.dot_general(s, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    intra_n = jnp.sum(s, axis=1)
+
+    num = inter + intra
+    den = jnp.maximum(jnp.abs(inter_n + intra_n), 1.0)
+    h_ref[0] = (num / den[:, None]).astype(h_ref.dtype)
+
+    # state update
+    d_end = d_cum[K - 1]
+    k_dec = k * jnp.exp(d_end - d_cum + li)[:, None]
+    c_scr[...] = C * jnp.exp(d_end) + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    n_scr[...] = n * jnp.exp(d_end) + jnp.sum(k_dec, axis=0)
+
+
+def mlstm_chunk(q, k, v, log_f, log_i, *, K: int = 64,
+                interpret: bool = False):
+    """q/k/v: (BH, S, dh); log_f/log_i: (BH, S) -> h: (BH, S, dh)."""
+    BH, S, dh = q.shape
+    K = min(K, S)
+    assert S % K == 0
+    nc = S // K
+    scale = 1.0 / np.sqrt(dh)
+    lf = log_f[..., None]  # (BH, S, 1) — TPU-friendly 3D layout
+    li = log_i[..., None]
+
+    kernel = functools.partial(_mlstm_kernel, K=K, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, K, dh), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, K, dh), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, K, dh), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, K, 1), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, K, 1), lambda h, c: (h, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, K, dh), lambda h, c: (h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),
+            pltpu.VMEM((dh,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lf, li)

@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the chunkwise mLSTM."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import mlstm_chunk
+from .ref import mlstm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("K", "interpret", "impl"))
+def mlstm(q, k, v, log_f, log_i, *, K: int = 64, interpret: bool = False,
+          impl: str = "pallas"):
+    if impl == "pallas":
+        return mlstm_chunk(q, k, v, log_f, log_i, K=K, interpret=interpret)
+    return mlstm_ref(q, k, v, log_f, log_i).astype(q.dtype)

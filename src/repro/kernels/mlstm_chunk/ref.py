@@ -1,0 +1,35 @@
+"""Sequential (definitional) mLSTM oracle.
+
+    C_t = f_t C_{t-1} + i_t k_t v_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+    h_t = (q_t . C_t) / max(|q_t . n_t|, 1),   q scaled by 1/sqrt(dh)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def mlstm_ref(q, k, v, log_f, log_i):
+    """q/k/v: (BH, S, dh) ; log_f/log_i: (BH, S) -> (BH, S, dh) f32."""
+    BH, S, dh = q.shape
+    qf = q.astype(jnp.float32) / np.sqrt(dh)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    f = jnp.exp(log_f.astype(jnp.float32))
+    i = jnp.exp(jnp.minimum(log_i.astype(jnp.float32), 30.0))
+
+    def step(carry, xs):
+        C, n = carry
+        qt, kt, vt, ft, it = xs
+        C = ft[:, None, None] * C + it[:, None, None] * kt[:, :, None] * vt[:, None, :]
+        n = ft[:, None] * n + it[:, None] * kt
+        num = jnp.einsum("bd,bde->be", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bd,bd->b", qt, n)), 1.0)
+        return (C, n), num / den[:, None]
+
+    C0 = jnp.zeros((BH, dh, dh), jnp.float32)
+    n0 = jnp.zeros((BH, dh), jnp.float32)
+    xs = (qf.transpose(1, 0, 2), kf.transpose(1, 0, 2), vf.transpose(1, 0, 2),
+          f.transpose(1, 0), i.transpose(1, 0))
+    _, hs = lax.scan(step, (C0, n0), xs)
+    return hs.transpose(1, 0, 2)

@@ -1,0 +1,62 @@
+"""RG-LRU linear recurrence (TPU Pallas): blocked sequential scan.
+
+h_t = a_t * h_{t-1} + b_t, elementwise over the channel dim.  The grid is
+(B, dr/bd, S/bt) with time innermost-sequential: the carry h lives in VMEM
+scratch across time tiles; within a tile the recurrence steps over bt rows
+while the VPU vectorises across the bd channel lanes.  This is the TPU
+analogue of a chunked linear-scan kernel: HBM traffic is exactly one read of
+(a, b) and one write of h (the XLA associative_scan materialises log-depth
+intermediates instead).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, carry, *, bt: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        carry[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)  # (bt, bd)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    carry[...] = lax.fori_loop(0, bt, step, carry[...])
+
+
+def rglru_scan(a, b, h0, *, bt: int = 128, bd: int = 512,
+               interpret: bool = False):
+    """a, b: (B, S, dr) f32; h0: (B, dr) f32 -> h: (B, S, dr) f32."""
+    B, S, dr = a.shape
+    bt = min(bt, S)
+    bd = min(bd, dr)
+    assert S % bt == 0 and dr % bd == 0
+    nt, nd = S // bt, dr // bd
+
+    kernel = functools.partial(_rglru_kernel, bt=bt)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nd, nt),
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), lambda bb, d, t: (bb, t, d)),
+            pl.BlockSpec((1, bt, bd), lambda bb, d, t: (bb, t, d)),
+            pl.BlockSpec((1, bd), lambda bb, d, t: (bb, d)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, bd), lambda bb, d, t: (bb, t, d)),
+        out_shape=jax.ShapeDtypeStruct((B, S, dr), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bd,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

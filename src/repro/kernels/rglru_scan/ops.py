@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the RG-LRU scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import rglru_scan
+from .ref import rglru_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bd", "interpret", "impl"))
+def rglru(a, b, h0, *, bt: int = 128, bd: int = 512, interpret: bool = False,
+          impl: str = "pallas"):
+    if impl == "pallas":
+        return rglru_scan(a, b, h0, bt=bt, bd=bd, interpret=interpret)
+    return rglru_scan_ref(a, b, h0)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: the associative-scan RG-LRU recurrence."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def rglru_scan_ref(a, b, h0):
+    """h_t = a_t h_{t-1} + b_t with h_0 seed. a, b: (B, S, dr); h0: (B, dr)."""
+    # fold h0 into the first step: b'_0 = a_0 h0 + b_0
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        return (l[0] * r[0], r[0] * l[1] + r[1])
+
+    return lax.associative_scan(combine, (a, b), axis=1)[1]
+
+
+def rglru_scan_seq(a, b, h0):
+    """Sequential reference (the definitional recurrence)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = lax.scan(step, h0, (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

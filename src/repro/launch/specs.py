@@ -1,0 +1,139 @@
+"""ShapeDtypeStruct stand-ins + NamedShardings for every (arch × shape) cell.
+
+No device allocation happens here: model/optimizer state comes from
+``jax.eval_shape`` over the real init functions, inputs are synthesised
+directly, and shardings are built from the logical rules in
+``repro.parallel.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import lm
+from repro.optim.adamw import init_opt_state
+from repro.parallel import sharding as shd
+from repro.train.step import init_train_state
+
+
+def _named(mesh, spec: P) -> NamedSharding:
+    names = set(mesh.axis_names)
+
+    def keep(e):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            k = tuple(a for a in e if a in names)
+            return k if k else None
+        return e if e in names else None
+
+    return NamedSharding(mesh, P(*(keep(e) for e in spec)))
+
+
+def sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Dict[str, Any]:
+    """Input ShapeDtypeStructs for one step (train/prefill batches)."""
+    gb, seq = shape.global_batch, shape.seq_len
+    bsh2 = _named(mesh, P(shd.data_axes(), None, None))
+    out: Dict[str, Any] = {}
+    npfx = 0
+    if cfg.frontend is not None and cfg.kind != "encdec":
+        npfx = seq // cfg.frontend_len_div
+        out["prefix_emb"] = sds((gb, npfx, cfg.d_model), jnp.float32, bsh2)
+    if cfg.kind == "encdec":
+        out["enc_emb"] = sds((gb, seq // cfg.frontend_len_div, cfg.d_model),
+                             jnp.float32, bsh2)
+    out["tokens"] = sds((gb, seq - npfx), jnp.int32,
+                        _named(mesh, P(shd.data_axes(), None)))
+    return out
+
+
+def state_shapes(cfg: ModelConfig, run: RunConfig) -> Any:
+    return jax.eval_shape(
+        lambda k: init_train_state(cfg, run, k), jax.random.PRNGKey(0))
+
+
+def state_shardings(cfg: ModelConfig, run: RunConfig, mesh,
+                    state_tree: Optional[Any] = None) -> Any:
+    st = state_tree if state_tree is not None else state_shapes(cfg, run)
+    pspecs = shd.param_specs(st["params"])
+
+    def to_sh(spec):
+        return _named(mesh, spec)
+
+    out = {"params": jax.tree_util.tree_map(to_sh, pspecs),
+           "opt": {"m": jax.tree_util.tree_map(to_sh, pspecs),
+                   "v": jax.tree_util.tree_map(to_sh, pspecs),
+                   "step": _named(mesh, P())}}
+    if "ef" in st:
+        out["ef"] = jax.tree_util.tree_map(to_sh, pspecs)
+    return out
+
+
+def with_shardings(tree, shardings):
+    return jax.tree_util.tree_map(
+        lambda t, s: jax.ShapeDtypeStruct(t.shape, t.dtype, sharding=s),
+        tree, shardings)
+
+
+def train_inputs(cfg: ModelConfig, run: RunConfig, shape: ShapeConfig, mesh):
+    """(state_sds, batch_sds, state_shardings) for lowering train_step."""
+    st = state_shapes(cfg, run)
+    sh = state_shardings(cfg, run, mesh, st)
+    return with_shardings(st, sh), batch_specs(cfg, shape, mesh), sh
+
+
+def _strip_data_axes(spec: P) -> P:
+    drop = set(shd.data_axes())
+
+    def keep(e):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(a for a in e if a not in drop)
+            return kept if kept else None
+        return None if e in drop else e
+
+    return P(*(keep(e) for e in spec))
+
+
+def decode_inputs(cfg: ModelConfig, run: RunConfig, shape: ShapeConfig, mesh):
+    """(params_sds, cache_sds, tokens_sds, pos) for lowering decode_step."""
+    st = state_shapes(cfg, run)
+    psh = jax.tree_util.tree_map(lambda s: _named(mesh, s),
+                                 shd.param_specs(st["params"]))
+    params_sds = with_shardings(st["params"], psh)
+    gb, seq = shape.global_batch, shape.seq_len
+    n_data = 1
+    for ax in shd.data_axes():
+        n_data *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(ax, 1)
+    cache = jax.eval_shape(lambda: lm.init_decode_cache(cfg, gb, seq))
+    cspecs = shd.cache_spec(cfg, cache)
+    if gb % n_data != 0:
+        # batch too small to data-shard (long_500k, gb=1): replicate batch,
+        # TP still shards heads/state width
+        cspecs = jax.tree_util.tree_map(_strip_data_axes, cspecs)
+        tok_spec = P(None, None)
+    else:
+        tok_spec = P(shd.data_axes(), None)
+    csh = jax.tree_util.tree_map(lambda s: _named(mesh, s), cspecs)
+    cache_sds = with_shardings(cache, csh)
+    tokens = sds((gb, 1), jnp.int32, _named(mesh, tok_spec))
+    pos = sds((), jnp.int32, _named(mesh, P()))
+    return params_sds, cache_sds, tokens, pos, psh, csh
+
+
+def prefill_inputs(cfg: ModelConfig, run: RunConfig, shape: ShapeConfig, mesh):
+    st = state_shapes(cfg, run)
+    psh = jax.tree_util.tree_map(lambda s: _named(mesh, s),
+                                 shd.param_specs(st["params"]))
+    return with_shardings(st["params"], psh), batch_specs(cfg, shape, mesh), psh

@@ -1,0 +1,243 @@
+"""Model primitives: norms, rope, activations, chunked attention.
+
+Everything is functional: ``init_*`` returns param pytrees (plain dicts of
+jnp arrays), ``apply``-style functions are pure.  Compute dtype is bf16 with
+f32 accumulators for softmax/normalisation; params are stored f32 (the
+optimizer needs them) and cast at use.
+
+Attention is the memory-efficient *query-chunked* form: softmax over the full
+key range per query chunk under a ``lax.scan`` — exact (no online rescaling
+needed because keys are never chunked), with peak activation
+O(chunk × S) instead of O(S²).  Local attention additionally slices the key
+range to ``window + chunk`` per chunk, making 32k/500k-window workloads
+O(S · window).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+NEG_INF = -1e30
+
+
+def dense_init(key, shape, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, PARAM_DTYPE) * scale).astype(PARAM_DTYPE)
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def act_fn(name: str):
+    return {"swiglu": jax.nn.silu, "geglu": gelu, "gelu": gelu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _sdpa(q, k, v, mask, scale: float):
+    """q: (B, Sq, Hkv, G, hd); k/v: (B, Skv, Hkv, hd); mask: (B?, Sq, Skv).
+
+    GQA convention throughout the framework: query head hq = hkv * G + g."""
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out
+
+
+def attention(q, k, v, *, causal: bool, window: int = 0,
+              q_offset=0, kv_len=None, chunk: int = 0,
+              chunk_remat: bool = False):
+    """Grouped-query attention with optional causal mask / local window.
+
+    q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd).
+    ``q_offset``: absolute position of q[0] (decode/chunking).
+    ``kv_len``: number of valid kv positions (decode with preallocated cache).
+    ``chunk``: if >0 and Sq % chunk == 0 and Sq > chunk, scan over q chunks.
+    ``chunk_remat``: checkpoint each chunk — without it the scan's backward
+    stacks every chunk's probability matrix (the full S² tensor, measured at
+    ~11 GiB/layer on qwen1.5-110b train_4k); with it only one chunk's probs
+    are ever live and the backward recomputes per chunk (flash-style).
+    Returns (B, Sq, Hq, hd).
+    """
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+
+    kv_pos = jnp.arange(Skv)
+
+    def mask_for(q_positions):
+        m = jnp.ones((q_positions.shape[0], Skv), bool)
+        if causal:
+            m &= kv_pos[None, :] <= q_positions[:, None]
+        if window:
+            m &= kv_pos[None, :] > q_positions[:, None] - window
+        if kv_len is not None:
+            m &= kv_pos[None, :] < kv_len
+        return jnp.broadcast_to(m[None], (B,) + m.shape)
+
+    use_chunks = chunk and Sq > chunk and Sq % chunk == 0
+    if not use_chunks:
+        q_positions = q_offset + jnp.arange(Sq)
+        out = _sdpa(qg, k, v, mask_for(q_positions), scale)
+        return out.reshape(B, Sq, Hq, hd)
+
+    n_chunks = Sq // chunk
+    qc = qg.reshape(B, n_chunks, chunk, Hkv, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    if window and window + chunk < Skv:
+        # local attention: only the [pos-window, pos] key band is live.
+        band = window + chunk
+        pad = window
+        k_pad = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        v_pad = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+
+        def body(_, qi_i):
+            qi, i = qi_i
+            start = i * chunk  # band begins at (start - window) + pad = start
+            kb = lax.dynamic_slice_in_dim(k_pad, start, band, axis=1)
+            vb = lax.dynamic_slice_in_dim(v_pad, start, band, axis=1)
+            q_positions = q_offset + start + jnp.arange(chunk)
+            b_pos = start - window + jnp.arange(band)  # absolute key positions
+            m = (b_pos[None, :] >= 0)
+            if causal:
+                m &= b_pos[None, :] <= q_positions[:, None]
+            m &= b_pos[None, :] > q_positions[:, None] - window
+            m = jnp.broadcast_to(m[None], (B, chunk, band))
+            return None, _sdpa(qi, kb, vb, m, scale)
+
+        if chunk_remat:
+            body = jax.checkpoint(body)
+        _, outs = lax.scan(body, None, (qc, jnp.arange(n_chunks)))
+    else:
+        def body(_, qi_i):
+            qi, i = qi_i
+            q_positions = q_offset + i * chunk + jnp.arange(chunk)
+            return None, _sdpa(qi, k, v, mask_for(q_positions), scale)
+
+        if chunk_remat:
+            body = jax.checkpoint(body)
+        _, outs = lax.scan(body, None, (qc, jnp.arange(n_chunks)))
+
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hkv, G, hd)
+    return out.reshape(B, Sq, Hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (params + apply)
+# ---------------------------------------------------------------------------
+
+def init_attn(cfg: ModelConfig, key, *, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], (d, nq * hd)),
+        "wk": dense_init(ks[1], (d, nkv * hd)),
+        "wv": dense_init(ks[2], (d, nkv * hd)),
+        "wo": dense_init(ks[3], (nq * hd, d)),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((nq * hd,), PARAM_DTYPE)
+        p["bk"] = jnp.zeros((nkv * hd,), PARAM_DTYPE)
+        p["bv"] = jnp.zeros((nkv * hd,), PARAM_DTYPE)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), PARAM_DTYPE)
+        p["k_norm"] = jnp.ones((hd,), PARAM_DTYPE)
+    return p
+
+
+def attn_qkv(cfg: ModelConfig, p: dict, x, positions=None):
+    """Project + rope. x: (B, S, D) -> q (B,S,Hq,hd), k/v (B,S,Hkv,hd)."""
+    B, S, _ = x.shape
+    hd, nq, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, nq, hd)
+    k = k.reshape(B, S, nkv, hd)
+    v = v.reshape(B, S, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_out(cfg: ModelConfig, p: dict, o):
+    B, S = o.shape[:2]
+    return jnp.einsum("bsh,hd->bsd", o.reshape(B, S, -1), p["wo"].astype(o.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLP block
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], (d, ff)), "w2": dense_init(ks[1], (ff, d))}
+    if cfg.act in ("swiglu", "geglu"):
+        p["w3"] = dense_init(ks[2], (d, ff))
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p: dict, x):
+    a = act_fn(cfg.act)
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(x.dtype))
+    h = a(h)
+    if "w3" in p:
+        h = h * jnp.einsum("bsd,df->bsf", x, p["w3"].astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"].astype(x.dtype))

@@ -1,0 +1,508 @@
+"""The composable LM: decoder-only / enc-dec / hybrid / SSM, one code path.
+
+Layer stacks are *pattern-tiled* and scanned: params for one tile (=
+``cfg.block_pattern``) are stacked over ``n_tiles`` and the stack runs under
+``lax.scan`` (+ optional remat), so compile time is O(pattern), not O(L).
+A remainder of ``n_layers % len(pattern)`` runs as explicit tail blocks.
+
+Modes:
+  * ``train``   — full-sequence forward, no cache.
+  * ``prefill`` — full-sequence forward, returns the decode cache.
+  * ``decode``  — one token against the cache (KV / ring / recurrent state).
+
+Inputs are dicts:
+  * decoder-only: ``{"tokens": (B, S) i32[, "prefix_emb": (B, P, D)]}``
+    (``prefix_emb`` is the modality-frontend STUB for [vlm]/[audio] archs)
+  * enc-dec:      ``{"tokens": (B, S) i32, "enc_emb": (B, S_enc, D)}``
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.parallel.sharding import (constrain, data_axes, head_axes,
+                                     mesh_axis_size, tp_axis)
+from . import moe as moe_lib
+from . import recurrent as rec
+from .layers import (COMPUTE_DTYPE, PARAM_DTYPE, apply_mlp, attention,
+                     attn_out, attn_qkv, dense_init, init_attn, init_mlp,
+                     rms_norm)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, kind: str, key, *, cross: bool) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"ln1": jnp.ones((cfg.d_model,), PARAM_DTYPE)}
+    if kind in ("attn", "local_attn"):
+        p["attn"] = init_attn(cfg, ks[0])
+    elif kind == "rglru":
+        p["rglru"] = rec.init_rglru(cfg, ks[0])
+    elif kind == "mlstm":
+        p["mlstm"] = rec.init_mlstm(cfg, ks[0])
+    elif kind == "slstm":
+        p["slstm"] = rec.init_slstm(cfg, ks[0])
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    if cross:
+        p["ln_x"] = jnp.ones((cfg.d_model,), PARAM_DTYPE)
+        p["xattn"] = init_attn(cfg, ks[1], cross=True)
+    if cfg.d_ff > 0 and kind not in ("mlstm", "slstm"):
+        p["ln2"] = jnp.ones((cfg.d_model,), PARAM_DTYPE)
+        if cfg.moe is not None:
+            p["moe"] = moe_lib.init_moe(cfg, ks[2])
+        else:
+            p["mlp"] = init_mlp(cfg, ks[2])
+    return p
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _tile_split(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...]]:
+    pat = cfg.block_pattern
+    return cfg.n_layers // len(pat), tuple(pat[: cfg.n_layers % len(pat)])
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, cfg.n_layers + cfg.enc_layers + 4)
+    n_tiles, tail = _tile_split(cfg)
+    pat = cfg.block_pattern
+    cross = cfg.kind == "encdec"
+
+    params: Params = {
+        # 1/sqrt(d) so tied-head logits are O(1) at init (emb_scale archs
+        # multiply the input side back up by sqrt(d))
+        "embed": {"tok": dense_init(keys[-1], (cfg.padded_vocab, cfg.d_model),
+                                    scale=1.0 / np.sqrt(cfg.d_model))},
+        "final_norm": jnp.ones((cfg.d_model,), PARAM_DTYPE),
+    }
+    ki = iter(range(cfg.n_layers + cfg.enc_layers))
+    tiles: Dict[str, Params] = {}
+    for bi, kind in enumerate(pat):
+        tiles[f"b{bi}"] = _stack([
+            _init_block(cfg, kind, keys[next(ki)], cross=cross)
+            for _ in range(n_tiles)])
+    params["tiles"] = tiles
+    if tail:
+        params["tail"] = {f"b{bi}": _init_block(cfg, kind, keys[next(ki)], cross=cross)
+                          for bi, kind in enumerate(tail)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[-2], (cfg.d_model, cfg.padded_vocab))
+    if cfg.frontend is not None:
+        params["frontend_proj"] = dense_init(keys[-3], (cfg.d_model, cfg.d_model))
+    if cfg.kind == "encdec":
+        enc_tiles = _stack([
+            _init_block(cfg, "attn", keys[next(ki)], cross=False)
+            for _ in range(cfg.enc_layers)])
+        params["enc_tiles"] = {"b0": enc_tiles}
+        params["enc_norm"] = jnp.ones((cfg.d_model,), PARAM_DTYPE)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _init_block_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
+                      *, cross_len: int = 0) -> Params:
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    c: Params = {}
+    if kind == "attn":
+        c["k"] = jnp.zeros((batch, seq_len, hkv, hd), COMPUTE_DTYPE)
+        c["v"] = jnp.zeros((batch, seq_len, hkv, hd), COMPUTE_DTYPE)
+    elif kind == "local_attn":
+        w = min(cfg.window, seq_len)
+        c["k"] = jnp.zeros((batch, w, hkv, hd), COMPUTE_DTYPE)
+        c["v"] = jnp.zeros((batch, w, hkv, hd), COMPUTE_DTYPE)
+        c["slot_pos"] = jnp.full((w,), -1, jnp.int32)
+    elif kind == "rglru":
+        c.update(rec.init_rglru_cache(cfg, batch))
+    elif kind == "mlstm":
+        c.update(rec.init_mlstm_cache(cfg, batch))
+    elif kind == "slstm":
+        c.update(rec.init_slstm_cache(cfg, batch))
+    if cross_len:
+        c["xk"] = jnp.zeros((batch, cross_len, hkv, hd), COMPUTE_DTYPE)
+        c["xv"] = jnp.zeros((batch, cross_len, hkv, hd), COMPUTE_DTYPE)
+    return c
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Params:
+    n_tiles, tail = _tile_split(cfg)
+    cross_len = (seq_len // cfg.frontend_len_div) if cfg.kind == "encdec" else 0
+    cache: Params = {"tiles": {}}
+    for bi, kind in enumerate(cfg.block_pattern):
+        one = _init_block_cache(cfg, kind, batch, seq_len, cross_len=cross_len)
+        cache["tiles"][f"b{bi}"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_tiles,) + x.shape), one)
+    if tail:
+        cache["tail"] = {f"b{bi}": _init_block_cache(cfg, kind, batch, seq_len,
+                                                     cross_len=cross_len)
+                         for bi, kind in enumerate(tail)}
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _self_attention(cfg: ModelConfig, run: RunConfig, p: Params, h, *,
+                    kind: str, mode: str, cache, pos, causal: bool):
+    B, S, _ = h.shape
+    window = cfg.window if kind == "local_attn" else 0
+    h_ax, hd_ax = head_axes(cfg.n_heads, cfg.hd)
+    kvh_ax, kvhd_ax = head_axes(cfg.n_kv_heads, cfg.hd)
+
+    if mode == "decode":
+        positions = jnp.broadcast_to(pos[None, None], (B, 1))
+        q, k, v = attn_qkv(cfg, p, h, positions)
+        if kind == "local_attn":
+            w = cache["k"].shape[1]
+            slot = (pos % w).astype(jnp.int32)
+            ck = lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+            cv = lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+            spos = cache["slot_pos"].at[slot].set(pos.astype(jnp.int32))
+            live = (spos >= 0) & (spos > pos - cfg.window)
+            logits_mask = jnp.broadcast_to(live[None, None, :], (B, 1, w))
+            o = _masked_decode_attn(q, ck, cv, logits_mask)
+            new_cache = dict(cache, k=ck, v=cv, slot_pos=spos)
+        else:
+            ck = lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+            cv = lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+            ck = constrain(ck, data_axes(), None, kvh_ax, kvhd_ax)
+            cv = constrain(cv, data_axes(), None, kvh_ax, kvhd_ax)
+            o = attention(q, ck, cv, causal=False, kv_len=pos + 1)
+            new_cache = dict(cache, k=ck, v=cv)
+        return attn_out(cfg, p, o), new_cache
+
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    q, k, v = attn_qkv(cfg, p, h, positions)
+    if run.attn_act_constraints:
+        # explicit head-layout constraints; default OFF — propagation from
+        # the flat projection shardings picks better GQA layouts (measured:
+        # forcing hd-sharding on kv caused involuntary resharding storms)
+        q = constrain(q, data_axes(), None, h_ax, hd_ax)
+        k = constrain(k, data_axes(), None, kvh_ax, kvhd_ax)
+        v = constrain(v, data_axes(), None, kvh_ax, kvhd_ax)
+    o = attention(q, k, v, causal=causal, window=window, chunk=run.attn_chunk,
+                  chunk_remat=run.attn_chunk_remat)
+    out = attn_out(cfg, p, o)
+
+    new_cache = None
+    if mode == "prefill":
+        if kind == "local_attn":
+            w = min(cfg.window, S)
+            ck, cv = k[:, -w:], v[:, -w:]
+            last_pos = jnp.arange(S - w, S, dtype=jnp.int32)
+            slots = last_pos % w
+            kk = jnp.zeros_like(ck).at[:, slots].set(ck)
+            vv = jnp.zeros_like(cv).at[:, slots].set(cv)
+            sp = jnp.full((w,), -1, jnp.int32).at[slots].set(last_pos)
+            new_cache = {"k": kk, "v": vv, "slot_pos": sp}
+        else:
+            pad = run.decode_budget
+            if pad:
+                zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+                k, v = jnp.pad(k, zp), jnp.pad(v, zp)
+            new_cache = {"k": k, "v": v}
+    return out, new_cache
+
+
+def _masked_decode_attn(q, k, v, mask):
+    """q: (B,1,Hq,hd); k/v: (B,W,Hkv,hd); mask: (B,1,W)."""
+    B, _, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, 1, Hkv, G, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) / np.sqrt(hd)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return o.reshape(B, 1, Hq, hd)
+
+
+def _cross_attention(cfg: ModelConfig, p: Params, h, enc_out=None, cache=None):
+    """Cross-attn: K/V from encoder output (prefill/train) or cache (decode)."""
+    if cache is not None and enc_out is None:
+        k, v = cache["xk"], cache["xv"]
+    else:
+        B, Se, _ = enc_out.shape
+        k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"].astype(enc_out.dtype))
+        v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"].astype(enc_out.dtype))
+        k = k.reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+        v = v.reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+    B, S, _ = h.shape
+    q = jnp.einsum("bsd,dh->bsh", h, p["wq"].astype(h.dtype))
+    q = q.reshape(B, S, cfg.n_heads, cfg.hd)
+    o = attention(q, k, v, causal=False)
+    out = attn_out(cfg, p, o)
+    return out, {"xk": k, "xv": v}
+
+
+def apply_block(cfg: ModelConfig, run: RunConfig, kind: str, p: Params, x, *,
+                mode: str, cache=None, pos=None, enc_out=None, causal=True):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    decode = mode == "decode"
+
+    if kind in ("attn", "local_attn"):
+        y, new_cache = _self_attention(cfg, run, p["attn"], h, kind=kind,
+                                       mode=mode, cache=cache, pos=pos,
+                                       causal=causal)
+        new_cache = new_cache or {}
+    elif kind == "rglru":
+        y, st = rec.apply_rglru(cfg, p["rglru"], h, cache if decode else None)
+        new_cache = st if mode in ("prefill", "decode") else {}
+    elif kind == "mlstm":
+        y, st = rec.apply_mlstm(cfg, p["mlstm"], h,
+                                cache if decode else None,
+                                chunk=run.mlstm_chunk)
+        new_cache = st if mode in ("prefill", "decode") else {}
+    elif kind == "slstm":
+        y, st = rec.apply_slstm(cfg, p["slstm"], h, cache if decode else None)
+        new_cache = st if mode in ("prefill", "decode") else {}
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    x = x + y
+
+    if "xattn" in p:
+        hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        y, xkv = _cross_attention(cfg, p["xattn"], hx, enc_out=enc_out,
+                                  cache=cache)
+        x = x + y
+        if mode in ("prefill", "decode"):
+            new_cache = dict(new_cache, **xkv)
+
+    if "ln2" in p:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            y, aux = moe_lib.apply_moe(cfg, p["moe"], h2,
+                                       expert_scan=run.moe_expert_scan)
+        else:
+            y = apply_mlp(cfg, p["mlp"], h2)
+        x = x + y
+    if (mode == "train" and run.seq_shard and tp_axis() is not None
+            and x.shape[1] % max(1, mesh_axis_size(tp_axis())) == 0):
+        # Megatron-SP: the inter-block activation (== the saved scan carry)
+        # lives sequence-sharded over the TP axis; XLA re-gathers it inside
+        # the block (same wire volume as the TP all-reduce it replaces) and
+        # per-device saved-activation memory drops by the TP degree.
+        x = constrain(x, data_axes(), tp_axis(), None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def _run_stack(cfg: ModelConfig, run: RunConfig, params: Params, x, *,
+               mode: str, cache=None, pos=None, enc_out=None, causal=True,
+               tiles_key: str = "tiles", tail_key: str = "tail"):
+    """Scan the pattern-tiled stack; returns (x, new_cache, aux)."""
+    pat = cfg.block_pattern if tiles_key == "tiles" else ("attn",)
+    want_cache = mode in ("prefill", "decode")
+
+    def tile_body(carry, scanned):
+        x, aux = carry
+        tp, tc = scanned
+        new_tc = {}
+        for bi, kind in enumerate(pat):
+            bc = tc.get(f"b{bi}") if tc else None
+            x, nc, a = apply_block(cfg, run, kind, tp[f"b{bi}"], x, mode=mode,
+                                   cache=bc, pos=pos, enc_out=enc_out,
+                                   causal=causal)
+            new_tc[f"b{bi}"] = nc
+            aux = aux + a
+        return (x, aux), (new_tc if want_cache else 0)
+
+    body = tile_body
+    if mode == "train" and run.remat_policy != "none":
+        policy = {
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            "full": jax.checkpoint_policies.everything_saveable,
+        }[run.remat_policy]
+        body = jax.checkpoint(tile_body, policy=policy, prevent_cse=False)
+
+    tiles = params.get(tiles_key)
+    tile_caches = (cache or {}).get(tiles_key) if cache else None
+    n_tiles = jax.tree_util.tree_leaves(tiles)[0].shape[0]
+    if tile_caches is None:
+        tile_caches = jnp.zeros((n_tiles,), jnp.int32)  # dummy scan input
+
+        def body_nc(carry, scanned):
+            tp, _ = scanned
+            return body(carry, (tp, None))
+
+        scan_body, xs = body_nc, (tiles, tile_caches)
+    else:
+        scan_body, xs = body, (tiles, tile_caches)
+    aux0 = jnp.zeros((), jnp.float32)
+    (x, aux), new_tiles_cache = lax.scan(scan_body, (x, aux0), xs)
+
+    new_cache: Params = {}
+    if want_cache:
+        new_cache[tiles_key] = new_tiles_cache
+
+    tail = params.get(tail_key)
+    if tail:
+        _, tail_kinds = _tile_split(cfg)
+        tail_caches = (cache or {}).get(tail_key) if cache else None
+        new_tail = {}
+        for bi, kind in enumerate(tail_kinds):
+            bc = tail_caches.get(f"b{bi}") if tail_caches else None
+            x, nc, a = apply_block(cfg, run, kind, tail[f"b{bi}"], x, mode=mode,
+                                   cache=bc, pos=pos, enc_out=enc_out,
+                                   causal=causal)
+            new_tail[f"b{bi}"] = nc
+            aux = aux + a
+        if want_cache:
+            new_cache[tail_key] = new_tail
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# model entry points
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ModelConfig, params: Params, tokens, prefix_emb=None):
+    emb = params["embed"]["tok"]
+    x = emb[tokens].astype(COMPUTE_DTYPE)
+    if cfg.emb_scale:
+        x = x * float(np.sqrt(cfg.d_model))  # weak-typed: stays bf16
+    if prefix_emb is not None:
+        pe = prefix_emb.astype(COMPUTE_DTYPE)
+        pe = jnp.einsum("bpd,de->bpe", pe,
+                        params["frontend_proj"].astype(COMPUTE_DTYPE))
+        x = jnp.concatenate([pe, x], axis=1)
+    return constrain(x, data_axes(), None, None)
+
+
+def _encode(cfg: ModelConfig, run: RunConfig, params: Params, enc_emb):
+    x = enc_emb.astype(COMPUTE_DTYPE)
+    x = jnp.einsum("bpd,de->bpe", x, params["frontend_proj"].astype(COMPUTE_DTYPE))
+    x, _, _ = _run_stack(cfg, run, params, x, mode="train", causal=False,
+                         tiles_key="enc_tiles", tail_key="enc_tail")
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _backbone(cfg: ModelConfig, run: RunConfig, params: Params,
+              batch: Dict[str, Any], mode: str):
+    """Embed + stacks + final norm. Returns (x_normed, aux, cache, n_prefix)."""
+    tokens = batch["tokens"]
+    enc_out = None
+    prefix = batch.get("prefix_emb")
+    if cfg.kind == "encdec":
+        enc_out = _encode(cfg, run, params, batch["enc_emb"])
+    x = _embed(cfg, params, tokens, prefix)
+    x, cache, aux = _run_stack(cfg, run, params, x, mode=mode,
+                               enc_out=enc_out, causal=True)
+    n_prefix = 0 if prefix is None else prefix.shape[1]
+    if n_prefix:
+        x = x[:, n_prefix:]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux, cache, n_prefix
+
+
+def _head_weight(cfg: ModelConfig, params: Params):
+    if cfg.tie_embeddings:
+        return params["embed"]["tok"].astype(COMPUTE_DTYPE).T
+    return params["lm_head"].astype(COMPUTE_DTYPE)
+
+
+def forward(cfg: ModelConfig, run: RunConfig, params: Params,
+            batch: Dict[str, Any], mode: str = "train"):
+    """Full-sequence forward. Returns (logits, aux, cache|None)."""
+    x, aux, cache, _ = _backbone(cfg, run, params, batch, mode)
+    logits = jnp.einsum("bsd,dv->bsv", x, _head_weight(cfg, params))
+    logits = constrain(logits, data_axes(), None, tp_axis())
+    return logits, aux, (cache if mode == "prefill" else None)
+
+
+def _ce_sums(cfg: ModelConfig, run: RunConfig, w, x, targets):
+    """CE/z-loss sums for one chunk without keeping f32 logits around."""
+    lg = jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+    lg = constrain(lg, data_axes(), None, tp_axis())
+    vocab_ids = lax.broadcasted_iota(jnp.int32, lg.shape, 2)
+    lg = jnp.where(vocab_ids < cfg.vocab, lg, -1e30)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(lse - picked), jnp.sum(lse ** 2)
+
+
+def loss_fn(cfg: ModelConfig, run: RunConfig, params: Params,
+            batch: Dict[str, Any]):
+    """Next-token CE (+z-loss, +MoE aux). Returns (loss, metrics).
+
+    With ``run.loss_chunk`` the head projection + softmax-xent run per
+    sequence chunk under remat, so the full (B, S, V) f32 logits tensor is
+    never resident — the standard fused-xent memory optimisation at 150k+
+    vocabularies.
+    """
+    x, aux, _, _ = _backbone(cfg, run, params, batch, "train")
+    tokens = batch["tokens"]
+    targets = tokens[:, 1:]
+    xs = x[:, :-1]
+    B, Sm1, _ = xs.shape
+    w = _head_weight(cfg, params)
+    n_tok = B * Sm1
+
+    chunk = run.loss_chunk
+    if chunk and Sm1 > chunk:
+        nc = Sm1 // chunk
+        main = nc * chunk
+        xc = xs[:, :main].reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3)
+        tc = targets[:, :main].reshape(B, nc, chunk).transpose(1, 0, 2)
+
+        def body(carry, xt):
+            ce_s, z_s = carry
+            xck, tck = xt
+            c, z = jax.checkpoint(
+                lambda a, b: _ce_sums(cfg, run, w, a, b))(xck, tck)
+            return (ce_s + c, z_s + z), None
+
+        (ce_sum, z_sum), _ = lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (xc, tc))
+        if main < Sm1:  # remainder (the -1 from the target shift)
+            c, z = _ce_sums(cfg, run, w, xs[:, main:], targets[:, main:])
+            ce_sum, z_sum = ce_sum + c, z_sum + z
+    else:
+        ce_sum, z_sum = _ce_sums(cfg, run, w, xs, targets)
+
+    ce = ce_sum / n_tok
+    zl = run.z_loss * z_sum / n_tok
+    loss = ce + zl + aux
+    metrics = {"ce": ce, "z_loss": zl, "aux": aux, "loss": loss}
+    return loss, metrics
+
+
+def prefill(cfg: ModelConfig, run: RunConfig, params: Params,
+            batch: Dict[str, Any]):
+    logits, _, cache = forward(cfg, run, params, batch, mode="prefill")
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: ModelConfig, run: RunConfig, params: Params,
+                cache: Params, tokens, pos):
+    """One decode step. tokens: (B, 1); pos: scalar i32 absolute position."""
+    x = _embed(cfg, params, tokens)
+    x, new_cache, _ = _run_stack(cfg, run, params, x, mode="decode",
+                                 cache=cache, pos=pos, causal=True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, _head_weight(cfg, params))
+    return logits[:, 0], new_cache

@@ -1,0 +1,319 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma) and xLSTM (mLSTM / sLSTM).
+
+* RG-LRU: diagonal linear recurrence h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t x_t),
+  a_t = exp(c * r_t * log sigmoid(Lambda)).  Training uses
+  ``lax.associative_scan`` (parallel over seq); decode carries (h, conv taps).
+* mLSTM: matrix memory C (dk x dv per head) with exp input gate + sigmoid
+  forget gate, computed in the chunkwise-parallel form (intra-chunk
+  attention-like einsums + inter-chunk state carry).
+* sLSTM: exp-gated scalar memory with normaliser and max-stabiliser;
+  inherently sequential -> ``lax.scan`` over time (this is the paper's own
+  characterisation; its speed comes from fused kernels, not parallel scans).
+
+Sequential oracles for both xLSTM cells live in
+``repro/kernels/mlstm_chunk/ref.py`` and are property-tested against these.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from .layers import PARAM_DTYPE, dense_init, gelu
+
+RGLRU_C = 8.0
+CONV_WIDTH = 4
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def init_rglru(cfg: ModelConfig, key) -> dict:
+    d, dr = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": dense_init(ks[0], (d, dr)),       # value branch
+        "w_gate": dense_init(ks[1], (d, dr)),    # gelu gating branch
+        "conv": dense_init(ks[2], (CONV_WIDTH, dr), scale=0.3),
+        "w_r": dense_init(ks[3], (dr, dr)),      # recurrence gate
+        "w_i": dense_init(ks[4], (dr, dr)),      # input gate
+        "b_r": jnp.zeros((dr,), PARAM_DTYPE),
+        "b_i": jnp.zeros((dr,), PARAM_DTYPE),
+        # Lambda init so that a = sigmoid(Lambda) in (0.9, 0.999)
+        "lam": jnp.asarray(
+            np.log(np.linspace(0.9, 0.999, dr) / (1 - np.linspace(0.9, 0.999, dr))),
+            PARAM_DTYPE),
+        "w_down": dense_init(ks[5], (dr, d)),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv, width CONV_WIDTH. x: (B, S, dr), w: (W, dr).
+
+    state: (B, W-1, dr) previous taps for decode; returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, :W - 1])
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W))
+    return y, xp[:, -(W - 1):]
+
+
+def _rglru_gates(p, xc):
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xc, p["w_r"].astype(xc.dtype))
+                       + p["b_r"].astype(xc.dtype))
+    i = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xc, p["w_i"].astype(xc.dtype))
+                       + p["b_i"].astype(xc.dtype))
+    log_a_base = -jax.nn.softplus(-p["lam"].astype(jnp.float32))  # log sigmoid
+    log_a = RGLRU_C * r.astype(jnp.float32) * log_a_base
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, (beta * (i.astype(jnp.float32) * xc.astype(jnp.float32)))
+
+
+def apply_rglru(cfg: ModelConfig, p: dict, x, cache=None):
+    """x: (B, S, d). cache: {"h": (B, dr), "conv": (B, W-1, dr)} for decode.
+
+    Returns (y (B,S,d), new_cache)."""
+    dt = x.dtype
+    xv = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(dt))
+    gate = jnp.einsum("bsd,de->bse", x, p["w_gate"].astype(dt))
+    conv_state = None if cache is None else cache["conv"]
+    xc, new_conv = _causal_conv(xv, p["conv"], conv_state)
+    a, b = _rglru_gates(p, xc)
+
+    if cache is None:
+        # parallel associative scan over seq: (a, b) o (a', b') = (aa', a'b + b')
+        def combine(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+
+        h = lax.associative_scan(combine, (a, b), axis=1)[1]
+        new_h = h[:, -1]
+    else:
+        h0 = cache["h"].astype(jnp.float32)
+        h = (a[:, 0] * h0 + b[:, 0])[:, None]
+        new_h = h[:, 0]
+
+    y = gelu(gate) * h.astype(dt)
+    y = jnp.einsum("bse,ed->bsd", y, p["w_down"].astype(dt))
+    new_cache = {"h": new_h, "conv": new_conv.astype(jnp.float32)}
+    return y, new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int) -> dict:
+    dr = cfg.rnn_width
+    return {"h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, CONV_WIDTH - 1, dr), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (chunkwise parallel)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    di = 2 * d  # xLSTM up-projection factor 2
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, di)),
+        "w_gate": dense_init(ks[1], (d, di)),
+        "wq": dense_init(ks[2], (di, di)),
+        "wk": dense_init(ks[3], (di, di)),
+        "wv": dense_init(ks[4], (di, di)),
+        "wi": dense_init(ks[5], (di, cfg.n_heads), scale=0.02),
+        "wf": dense_init(ks[6], (di, cfg.n_heads), scale=0.02),
+        "bf": jnp.full((cfg.n_heads,), 3.0, PARAM_DTYPE),  # open forget gates
+        "bi": jnp.full((cfg.n_heads,), -2.0, PARAM_DTYPE),
+        "w_down": dense_init(ks[7], (di, d)),
+    }
+
+
+def mlstm_scan_chunked(q, k, v, log_f, log_i, C0, n0, chunk: int):
+    """Chunkwise mLSTM. q/k/v: (B, S, H, dh); log_f/log_i: (B, S, H).
+
+    Recurrence (per head):
+        C_t = f_t C_{t-1} + i_t k_t v_t^T ; n_t = f_t n_{t-1} + i_t k_t
+        h_t = q_t C_t / max(|q_t n_t|, 1)
+    Computed per chunk with cumulative log-decay; f = sigmoid, i = exp
+    (clamped) — both in f32 log-space for stability.
+    """
+    B, S, H, dh = q.shape
+    K = min(chunk, S)
+    if S % K:
+        # pad tail: f=1 (log 0) keeps state; i=-inf contributes nothing
+        pad = K - S % K
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        z3 = ((0, 0), (0, pad), (0, 0))
+        q, k, v = (jnp.pad(t, z4) for t in (q, k, v))
+        log_f = jnp.pad(log_f, z3)
+        log_i = jnp.pad(log_i, z3, constant_values=-1e30)
+        h, Cf, nf = mlstm_scan_chunked(q, k, v, log_f, log_i, C0, n0, chunk)
+        return h[:, :S], Cf, nf
+    nc = S // K
+    shp = (B, nc, K, H)
+    qs = q.reshape(B, nc, K, H, dh).transpose(1, 0, 2, 3, 4)
+    ks_ = k.reshape(B, nc, K, H, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nc, K, H, dh).transpose(1, 0, 2, 3, 4)
+    lfs = log_f.reshape(shp).transpose(1, 0, 2, 3)
+    lis = log_i.reshape(shp).transpose(1, 0, 2, 3)
+    scale = 1.0 / np.sqrt(dh)
+
+    def body(carry, xs):
+        C, n = carry                      # (B, H, dh, dh), (B, H, dh)
+        qc, kc, vc, lf, li = xs
+        qc32 = qc.astype(jnp.float32) * scale
+        kc32 = kc.astype(jnp.float32)
+        vc32 = vc.astype(jnp.float32)
+        d_cum = jnp.cumsum(lf, axis=1)    # (B, K, H) log prod f_{<=j}
+        # inter-chunk: q_j decayed by d_cum_j reads previous state
+        q_dec = qc32 * jnp.exp(d_cum)[..., None]
+        inter = jnp.einsum("bkhd,bhde->bkhe", q_dec, C)
+        inter_n = jnp.einsum("bkhd,bhd->bkh", q_dec, n)
+        # intra-chunk: decay from l to j is exp(d_j - d_l), gated by i_l
+        rel = d_cum[:, :, None, :] - d_cum[:, None, :, :] + li[:, None, :, :]
+        causal = jnp.tril(jnp.ones((K, K), bool))
+        rel = jnp.where(causal[None, :, :, None], rel, -jnp.inf)
+        w = jnp.exp(jnp.minimum(rel, 30.0))
+        scores = jnp.einsum("bjhd,blhd->bjlh", qc32, kc32) * w
+        intra = jnp.einsum("bjlh,blhe->bjhe", scores, vc32)
+        # the normaliser is n_t = sum of decayed i_l k_l; its dot with q_j is
+        # exactly the row-sum of the gated score matrix
+        intra_n = jnp.sum(scores, axis=2)
+        num = inter + intra
+        den = jnp.abs(inter_n + intra_n)
+        h = num / jnp.maximum(den, 1.0)[..., None]
+        # state update: decay to end of chunk
+        d_end = d_cum[:, -1]              # (B, H)
+        k_dec = kc32 * jnp.exp(d_end[:, None, :] - d_cum + li)[..., None]
+        C_new = C * jnp.exp(d_end)[..., None, None] + jnp.einsum(
+            "blhd,blhe->bhde", k_dec, vc32)
+        n_new = n * jnp.exp(d_end)[..., None] + jnp.sum(k_dec, axis=1)
+        return (C_new, n_new), h
+
+    (Cf, nf), hs = lax.scan(body, (C0, n0), (qs, ks_, vs, lfs, lis))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+    return h, Cf, nf
+
+
+def apply_mlstm(cfg: ModelConfig, p: dict, x, cache=None, chunk: int = 256):
+    """x: (B, S, d) -> (y, cache). cache: {"C","n"} for decode."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dt = x.dtype
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"].astype(dt))
+    gate = jnp.einsum("bsd,de->bse", x, p["w_gate"].astype(dt))
+    di = up.shape[-1]
+    dh = di // H
+    q = jnp.einsum("bse,ef->bsf", up, p["wq"].astype(dt)).reshape(B, S, H, dh)
+    k = jnp.einsum("bse,ef->bsf", up, p["wk"].astype(dt)).reshape(B, S, H, dh)
+    v = jnp.einsum("bse,ef->bsf", up, p["wv"].astype(dt)).reshape(B, S, H, dh)
+    log_f = -jax.nn.softplus(
+        -(jnp.einsum("bse,eh->bsh", up, p["wf"].astype(dt)).astype(jnp.float32)
+          + p["bf"].astype(jnp.float32)))
+    log_i = jnp.minimum(
+        jnp.einsum("bse,eh->bsh", up, p["wi"].astype(dt)).astype(jnp.float32)
+        + p["bi"].astype(jnp.float32), 10.0)
+
+    if cache is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        h, Cf, nf = mlstm_scan_chunked(q, k, v, log_f, log_i, C0, n0, chunk)
+    else:
+        C0, n0 = cache["C"], cache["n"]
+        h, Cf, nf = mlstm_scan_chunked(q, k, v, log_f, log_i, C0, n0, chunk=1)
+
+    y = h.reshape(B, S, di).astype(dt) * jax.nn.silu(gate)
+    y = jnp.einsum("bse,ed->bsd", y, p["w_down"].astype(dt))
+    return y, {"C": Cf, "n": nf}
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    di = 2 * cfg.d_model
+    H = cfg.n_heads
+    dh = di // H
+    return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential)
+# ---------------------------------------------------------------------------
+
+def init_slstm(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 9)
+    return {
+        "wz": dense_init(ks[0], (d, d)), "wi": dense_init(ks[1], (d, d), scale=0.02),
+        "wf": dense_init(ks[2], (d, d), scale=0.02), "wo": dense_init(ks[3], (d, d)),
+        # block-diagonal recurrent weights, one (dh, dh) block per head
+        "rz": dense_init(ks[4], (H, dh, dh)), "ri": dense_init(ks[5], (H, dh, dh), scale=0.02),
+        "rf": dense_init(ks[6], (H, dh, dh), scale=0.02), "ro": dense_init(ks[7], (H, dh, dh)),
+        "bf": jnp.full((d,), 3.0, PARAM_DTYPE),
+        "bi": jnp.zeros((d,), PARAM_DTYPE),
+        "w_down": dense_init(ks[8], (d, d)),
+        "norm": jnp.ones((d,), PARAM_DTYPE),
+    }
+
+
+def slstm_step(p, carry, xt, H: int):
+    """One sLSTM step. carry: (c, n, m, h) each (B, d) f32; xt: (B, d) f32."""
+    c, n, m, h = carry
+    B, d = xt.shape
+    dh = d // H
+    hb = h.reshape(B, H, dh)
+
+    def rec(w):
+        return jnp.einsum("bhd,hde->bhe", hb, w.astype(jnp.float32)).reshape(B, d)
+
+    z = jnp.tanh(xt @ p["wz"].astype(jnp.float32) + rec(p["rz"]))
+    o = jax.nn.sigmoid(xt @ p["wo"].astype(jnp.float32) + rec(p["ro"]))
+    li = xt @ p["wi"].astype(jnp.float32) + rec(p["ri"]) + p["bi"].astype(jnp.float32)
+    lf = -jax.nn.softplus(-(xt @ p["wf"].astype(jnp.float32) + rec(p["rf"])
+                            + p["bf"].astype(jnp.float32)))  # log sigmoid
+    m_new = jnp.maximum(lf + m, li)
+    c_new = jnp.exp(lf + m - m_new) * c + jnp.exp(li - m_new) * z
+    n_new = jnp.exp(lf + m - m_new) * n + jnp.exp(li - m_new)
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new)
+
+
+def apply_slstm(cfg: ModelConfig, p: dict, x, cache=None):
+    """x: (B, S, d) -> (y, cache {c,n,m,h})."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    if cache is None:
+        carry = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(4))
+        carry = (carry[0], carry[1], jnp.full((B, d), -1e30, jnp.float32), carry[3])
+    else:
+        carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+
+    xf = x.astype(jnp.float32)
+
+    def body(carry, xt):
+        new = slstm_step(p, carry, xt, H)
+        return new, new[3]
+
+    carry, hs = lax.scan(body, carry, xf.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2)
+    from .layers import rms_norm
+    h = rms_norm(h, p["norm"], cfg.norm_eps)
+    y = jnp.einsum("bsd,de->bse", h.astype(x.dtype), p["w_down"].astype(x.dtype))
+    new_cache = {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}
+    return y, new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32)}

@@ -1,0 +1,93 @@
+"""AdamW (decoupled weight decay) + cosine/warmup schedule + global clip.
+
+Pure-pytree implementation (no optax in this container).  Optimizer moments
+are f32 and shard exactly like their parameters (ZeRO: the param specs apply
+verbatim to m/v), which the dry-run relies on.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+Pytree = Any
+
+
+def init_opt_state(params: Pytree) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_at(run: RunConfig, step) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = run.learning_rate * (step + 1.0) / max(run.warmup_steps, 1)
+    prog = jnp.clip((step - run.warmup_steps)
+                    / max(run.total_steps - run.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * run.learning_rate * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < run.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+_NO_DECAY_SUFFIXES = ("ln1", "ln2", "ln_x", "norm", "final_norm", "enc_norm",
+                      "q_norm", "k_norm", "lam", "b_r", "b_i", "bf", "bi",
+                      "bq", "bk", "bv")
+
+
+def _decay_mask(params: Pytree) -> Pytree:
+    def walk(tree, name):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        return 0.0 if name in _NO_DECAY_SUFFIXES else 1.0
+
+    return walk(params, "")
+
+
+def adamw_update(params: Pytree, grads: Pytree, opt: Dict[str, Any],
+                 run: RunConfig) -> Tuple[Pytree, Dict[str, Any], Dict[str, Any]]:
+    grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+    step = opt["step"] + 1
+    lr = lr_at(run, step)
+    b1, b2, eps = run.b1, run.b2, run.eps
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mask = _decay_mask(params)
+
+    def upd(p, g, m, v, wd_on):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + run.weight_decay * wd_on * p
+        return (p - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt["m"])
+    flat_v = jax.tree_util.tree_leaves(opt["v"])
+    flat_mask = jax.tree_util.tree_leaves(mask)
+    out = [upd(p, g, m, v, w) for p, g, m, v, w
+           in zip(flat_p, flat_g, flat_m, flat_v, flat_mask)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics

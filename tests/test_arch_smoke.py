@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests (reduced configs, CPU, 1 device).
+
+For each of the 10 assigned architectures: instantiate the reduced config,
+run one forward/loss (asserting shapes + finiteness), and check
+prefill+decode against the full forward (cache transparency — the model-level
+analogue of the paper's interception-transparency property).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, LM_SHAPES, applicable_shapes, get_config, get_smoke
+from repro.configs.base import RunConfig
+from repro.models import lm
+
+RUN = RunConfig(attn_chunk=8, mlstm_chunk=4, remat_policy="none", decode_budget=8)
+KEY = jax.random.PRNGKey(1)
+
+
+def make_batch(cfg, B, S, extra_token=0):
+    toks = jax.random.randint(KEY, (B, S + extra_token), 0, cfg.vocab, jnp.int32)
+    batch = {"tokens": toks}
+    if cfg.frontend and cfg.kind != "encdec":
+        batch["prefix_emb"] = jax.random.normal(
+            KEY, (B, S // cfg.frontend_len_div, cfg.d_model), jnp.float32)
+    if cfg.kind == "encdec":
+        batch["enc_emb"] = jax.random.normal(
+            KEY, (B, S // cfg.frontend_len_div, cfg.d_model), jnp.float32)
+    return batch
+
+
+def _uncap_moe(cfg):
+    if cfg.moe:
+        return dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_loss_finite(arch):
+    cfg = get_smoke(arch)
+    params = lm.init_params(cfg, KEY)
+    B, S = 2, 32
+    batch = make_batch(cfg, B, S)
+    loss, metrics = jax.jit(lambda p, b: lm.loss_fn(cfg, RUN, p, b))(params, batch)
+    assert jnp.isfinite(loss)
+    # CE at init must be close to ln(vocab) (uniform predictions)
+    assert abs(float(metrics["ce"]) - np.log(cfg.vocab)) < 1.5
+    logits, aux, _ = lm.forward(cfg, RUN, params, batch, mode="train")
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = _uncap_moe(get_smoke(arch))
+    params = lm.init_params(cfg, KEY)
+    B, S = 2, 24
+    batch_full = make_batch(cfg, B, S, extra_token=1)
+    toks = batch_full["tokens"]
+    batch_pre = dict(batch_full, tokens=toks[:, :S])
+    npfx = 0
+    if cfg.frontend and cfg.kind != "encdec":
+        npfx = batch_full["prefix_emb"].shape[1]
+
+    logits_full, _, _ = lm.forward(cfg, RUN, params, batch_full, mode="train")
+    want = logits_full[:, S]
+    _, cache = lm.prefill(cfg, RUN, params, batch_pre)
+    got, new_cache = lm.decode_step(cfg, RUN, params, cache, toks[:, S:S + 1],
+                                    jnp.int32(S + npfx))
+    np.testing.assert_allclose(np.asarray(want, np.float32),
+                               np.asarray(got, np.float32), atol=2e-2, rtol=2e-2)
+    # cache structure preserved
+    assert jax.tree_util.tree_structure(cache) == jax.tree_util.tree_structure(new_cache)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned dimensions."""
+    cfg = get_config(arch)
+    expect = {
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab)
+    assert got == expect, f"{arch}: {got} != {expect}"
+
+
+def test_arch_feature_flags():
+    assert get_config("qwen3-4b").qk_norm and get_config("qwen3-1.7b").qk_norm
+    assert get_config("qwen1.5-110b").qkv_bias
+    assert get_config("gemma-7b").act == "geglu"
+    assert get_config("gemma-7b").hd == 256
+    assert get_config("recurrentgemma-2b").block_pattern == ("rglru", "rglru", "local_attn")
+    assert get_config("recurrentgemma-2b").window == 2048
+    assert get_config("dbrx-132b").moe.n_experts == 16
+    assert get_config("dbrx-132b").moe.top_k == 4
+    m = get_config("qwen2-moe-a2.7b").moe
+    assert (m.n_experts, m.top_k, m.n_shared) == (60, 4, 4)
+    assert get_config("seamless-m4t-medium").kind == "encdec"
+    assert get_config("llava-next-34b").frontend == "patch"
+    assert get_config("xlstm-350m").d_ff == 0
+
+
+def test_long_context_applicability():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md §4)."""
+    subq = {a for a in ARCHS if get_config(a).sub_quadratic}
+    assert subq == {"recurrentgemma-2b", "xlstm-350m"}
+    for a in ARCHS:
+        names = [s.name for s in applicable_shapes(get_config(a))]
+        if a in subq:
+            assert "long_500k" in names
+        else:
+            assert "long_500k" not in names
+
+
+def test_param_counts_in_family_range():
+    """Analytic 6ND param counts land near the family's nameplate size."""
+    expected_b = {
+        "gemma-7b": (7, 10), "qwen3-4b": (3, 6), "qwen1.5-110b": (95, 125),
+        "qwen3-1.7b": (1.2, 2.6), "dbrx-132b": (110, 145),
+        "llava-next-34b": (30, 40), "xlstm-350m": (0.25, 0.6),
+        "recurrentgemma-2b": (2, 4.5), "qwen2-moe-a2.7b": (12, 18),
+        "seamless-m4t-medium": (0.3, 1.5),
+    }
+    for a in ARCHS:
+        lo, hi = expected_b[a]
+        n = get_config(a).n_params() / 1e9
+        assert lo <= n <= hi, f"{a}: {n:.2f}B not in [{lo}, {hi}]"
+
+
+def test_moe_active_params_below_total():
+    cfg = get_config("dbrx-132b")
+    assert cfg.n_active_params() < 0.5 * cfg.n_params()
+
+
+def test_vocab_padding_divisible_for_tp():
+    for a in ARCHS:
+        assert get_config(a).padded_vocab % 256 == 0 or get_config(a).vocab % 256 == 0
+        assert get_config(a).padded_vocab >= get_config(a).vocab

@@ -1,0 +1,243 @@
+"""JAX machine semantics: ALU, flags, memory, syscalls, signals."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isa, layout as L
+from repro.core import machine as M
+from repro.core.image import APP_BASE, Image
+from repro.core.isa import Asm
+
+
+def run_main(asm: Asm, fuel: int = 100_000, **state_overrides) -> M.MachineState:
+    im = Image()
+    im.add_asm("app", asm, rewrite=True)
+    st0 = M.make_state(im.sym("app:main"), fuel=fuel)
+    if state_overrides:
+        st0 = st0._replace(**{k: jnp.int64(v) for k, v in state_overrides.items()})
+    return M.run_image(M.decode_image(im.words), st0)
+
+
+def exit_with_x0(a: Asm) -> Asm:
+    a.emit(isa.movz(8, L.SYS_EXIT, sf=0))
+    a.emit(isa.svc(0))
+    return a
+
+
+def test_mov_imm48_semantics():
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(*isa.mov_imm48(0, 0x1234_5678_9ABC))
+    exit_with_x0(a)
+    s = run_main(a)
+    assert int(s.halted) == M.HALT_EXIT
+    assert int(s.exit_code) == 0x1234_5678_9ABC
+
+
+def test_movk_preserves_other_hwords():
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(isa.movn(0, 0))            # x0 = ~0 = -1
+    a.emit(isa.movk(0, 0xBEEF, 1))    # patch hword 1
+    exit_with_x0(a)
+    s = run_main(a)
+    expect = (0xFFFFFFFFFFFFFFFF & ~(0xFFFF << 16)) | (0xBEEF << 16)
+    expect -= 1 << 64  # as signed i64
+    assert int(s.exit_code) == expect
+
+
+def test_mov_w_register_zeroes_top():
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(isa.movn(0, 0))            # x0 = -1
+    a.emit(isa.movz(0, 7, sf=0))      # mov w0, #7 clears upper 32 bits
+    exit_with_x0(a)
+    s = run_main(a)
+    assert int(s.exit_code) == 7
+
+
+@settings(max_examples=20, deadline=None)
+@given(x=st.integers(-(1 << 40), 1 << 40), y=st.integers(-(1 << 40), 1 << 40))
+def test_alu_semantics(x, y):
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(*isa.mov_imm48(1, abs(x) & ((1 << 47) - 1)))
+    if x < 0:
+        a.emit(isa.sub_r(1, isa.XZR, 1))
+    a.emit(*isa.mov_imm48(2, abs(y) & ((1 << 47) - 1)))
+    if y < 0:
+        a.emit(isa.sub_r(2, isa.XZR, 2))
+    a.emit(isa.add_r(3, 1, 2))
+    a.emit(isa.sub_r(4, 1, 2))
+    a.emit(isa.eor_r(5, 1, 2))
+    a.emit(isa.madd(6, 1, 2))
+    a.emit(isa.movz(0, 0))
+    exit_with_x0(a)
+    s = run_main(a)
+    xv = -( abs(x) & ((1 << 47) - 1)) if x < 0 else abs(x) & ((1 << 47) - 1)
+    yv = -( abs(y) & ((1 << 47) - 1)) if y < 0 else abs(y) & ((1 << 47) - 1)
+    mask = (1 << 64) - 1
+
+    def as_i64(v):
+        v &= mask
+        return v - (1 << 64) if v >= (1 << 63) else v
+
+    assert int(s.regs[3]) == as_i64(xv + yv)
+    assert int(s.regs[4]) == as_i64(xv - yv)
+    assert int(s.regs[5]) == as_i64(xv ^ yv)
+    assert int(s.regs[6]) == as_i64(xv * yv)
+
+
+@pytest.mark.parametrize("x,y,cond,taken", [
+    (5, 5, "eq", True), (5, 5, "ne", False),
+    (4, 5, "lt", True), (5, 4, "lt", False),
+    (5, 4, "gt", True), (4, 5, "ge", False),
+    (4, 5, "cc", True),   # unsigned borrow
+    (5, 4, "hi", True), (4, 4, "hi", False), (4, 4, "ls", True),
+])
+def test_conditions(x, y, cond, taken):
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(isa.movz(1, x), isa.movz(2, y))
+    a.emit(isa.cmp_r(1, 2))
+    a.b_to("yes", cond=cond)
+    a.emit(isa.movz(0, 0))
+    exit_with_x0(a)
+    a.label("yes")
+    a.emit(isa.movz(0, 1))
+    exit_with_x0(a)
+    s = run_main(a)
+    assert int(s.exit_code) == (1 if taken else 0)
+
+
+def test_stack_push_pop_pairs():
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(isa.movz(1, 111), isa.movz(2, 222))
+    a.emit(isa.stp_pre(1, 2, isa.SP, -16))
+    a.emit(isa.movz(1, 0), isa.movz(2, 0))
+    a.emit(isa.ldp_post(3, 4, isa.SP, 16))
+    a.emit(isa.add_r(0, 3, 4))
+    exit_with_x0(a)
+    s = run_main(a)
+    assert int(s.exit_code) == 333
+    assert int(s.sp) == L.STACK_TOP  # balanced
+
+
+def test_str_pre_ldr_post():
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(isa.movz(1, 77))
+    a.emit(isa.str_pre(1, isa.SP, -16))
+    a.emit(isa.ldr_post(0, isa.SP, 16))
+    exit_with_x0(a)
+    s = run_main(a)
+    assert int(s.exit_code) == 77 and int(s.sp) == L.STACK_TOP
+
+
+def test_byte_ops_rmw():
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(*isa.mov_imm48(1, L.HEAP_BASE))
+    a.emit(isa.movz(2, 0xAB))
+    a.emit(isa.strb(2, 1, 3))         # write byte 3
+    a.emit(isa.ldrb(0, 1, 3))
+    exit_with_x0(a)
+    s = run_main(a)
+    assert int(s.exit_code) == 0xAB
+    assert M.mem_read(s, L.HEAP_BASE) == 0xAB << 24
+
+
+def test_unaligned_access_faults():
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(*isa.mov_imm48(1, L.HEAP_BASE + 4))  # not 8-aligned
+    a.emit(isa.ldr_imm(0, 1, 0))
+    exit_with_x0(a)
+    s = run_main(a)
+    assert int(s.halted) == M.HALT_BADMEM
+
+
+def test_out_of_range_store_faults():
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(isa.movz(1, 0))             # NULL
+    a.emit(isa.str_imm(0, 1, 0))
+    exit_with_x0(a)
+    s = run_main(a)
+    assert int(s.halted) == M.HALT_BADMEM
+
+
+def test_jump_to_null_page_segfaults():
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(isa.movz(9, 172))
+    a.emit(isa.br(9))                  # jump to syscall-number-as-address
+    s = run_main(a)
+    assert int(s.halted) == M.HALT_SEGV
+    assert int(s.fault_pc) == 172
+
+
+def test_syscall_read_write_semantics():
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(isa.movz(0, 3))
+    a.emit(*isa.mov_imm48(1, L.HEAP_BASE))
+    a.emit(isa.movz(2, 64))
+    a.emit(isa.movz(8, L.SYS_READ, sf=0))
+    a.emit(isa.svc(0))
+    a.emit(isa.movz(0, 1))
+    a.emit(*isa.mov_imm48(1, L.HEAP_BASE))
+    a.emit(isa.movz(2, 64))
+    a.emit(isa.movz(8, L.SYS_WRITE, sf=0))
+    a.emit(isa.svc(0))
+    a.emit(isa.movz(0, 0))
+    exit_with_x0(a)
+    s = run_main(a)
+    assert int(s.halted) == M.HALT_EXIT
+    assert int(s.in_off) == 64
+    assert int(s.out_count) == 64
+    # read pattern: word j = 8*j; sum over 8 words = 8*(0+8+...+56)
+    assert int(s.out_sum) == sum(8 * j for j in range(8))
+
+
+def test_unknown_syscall_enosys():
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(isa.movz(8, 555, sf=0))
+    a.emit(isa.svc(0))
+    a.emit(isa.mov_r(0, 0))
+    exit_with_x0(a)
+    s = run_main(a)
+    assert int(s.exit_code) == -38
+
+
+def test_brk_without_handler_traps():
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(isa.brk(0))
+    s = run_main(a)
+    assert int(s.halted) == M.HALT_TRAP
+
+
+def test_fuel_exhaustion():
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.label("spin")
+    a.b_to("spin")
+    s = run_main(a, fuel=100)
+    assert int(s.halted) == M.HALT_FUEL
+    assert int(s.icount) == 100
+
+
+def test_kernel_cross_cost_charged():
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(isa.movz(8, L.SYS_GETPID, sf=0))
+    a.emit(isa.svc(0))
+    a.emit(isa.movz(0, 0))
+    exit_with_x0(a)
+    s = run_main(a)
+    from repro.core import costmodel as cm
+    assert int(s.cycles) >= 2 * cm.KERNEL_CROSS  # getpid + exit

@@ -1,0 +1,34 @@
+"""Dry-run smoke: the 512-device lowering path runs end-to-end (subprocess —
+the device-count flag must be set before jax initialises)."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).parent.parent
+
+
+@pytest.mark.parametrize("cell", [
+    ("qwen3-1.7b", "train_4k"),
+    ("recurrentgemma-2b", "long_500k"),
+])
+def test_dryrun_smoke_cell(tmp_path, cell):
+    arch, shape = cell
+    out = tmp_path / "dry.json"
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--smoke", "--out", str(out), "--label", "ci"],
+        env=env, capture_output=True, text=True, timeout=900, cwd=REPO)
+    assert res.returncode == 0, res.stderr[-2000:]
+    cells = json.loads(out.read_text())
+    assert len(cells) == 1
+    c = cells[0]
+    assert c["status"] == "OK", c.get("error")
+    assert c["roofline"]["dominant"] in ("compute", "memory", "collective")
+    assert c["hlo_dot_flops_per_device"] > 0
+    assert c["bytes_per_device"] > 0

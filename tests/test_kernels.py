@@ -1,0 +1,190 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Each kernel sweeps shapes and dtypes and must allclose against its ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mlstm_chunk.ops import mlstm
+from repro.kernels.mlstm_chunk.ref import mlstm_ref
+from repro.kernels.rglru_scan.ops import rglru
+from repro.kernels.rglru_scan.ref import rglru_scan_ref, rglru_scan_seq
+
+KEY = jax.random.PRNGKey(7)
+
+
+def rand(shape, dtype, key=KEY, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+TOLS = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
+        jnp.bfloat16: dict(atol=2e-2, rtol=2e-2)}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Skv,Hq,Hkv,hd,causal,window", [
+    (2, 128, 128, 4, 4, 64, True, 0),      # MHA causal
+    (1, 256, 256, 8, 2, 64, True, 0),      # GQA 4:1
+    (2, 128, 128, 4, 1, 128, True, 0),     # MQA
+    (1, 256, 256, 4, 4, 64, False, 0),     # bidirectional (encoder)
+    (1, 256, 256, 4, 2, 64, True, 64),     # local window
+    (1, 512, 512, 2, 2, 128, True, 128),   # longer + window
+])
+def test_flash_attention_matches_ref(B, Sq, Skv, Hq, Hkv, hd, causal, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = rand((B, Sq, Hq, hd), dtype, ks[0])
+    k = rand((B, Skv, Hkv, hd), dtype, ks[1])
+    v = rand((B, Skv, Hkv, hd), dtype, ks[2])
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=64, bk=64, interpret=True)
+    want = flash_attention(q, k, v, causal=causal, window=window, impl="ref")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               **TOLS[dtype])
+
+
+@pytest.mark.parametrize("bq,bk", [(32, 32), (64, 128), (128, 64)])
+def test_flash_attention_block_shape_invariance(bq, bk):
+    ks = jax.random.split(KEY, 3)
+    q = rand((1, 256, 4, 64), jnp.float32, ks[0])
+    k = rand((1, 256, 2, 64), jnp.float32, ks[1])
+    v = rand((1, 256, 2, 64), jnp.float32, ks[2])
+    got = flash_attention(q, k, v, causal=True, bq=bq, bk=bk, interpret=True)
+    want = flash_attention(q, k, v, causal=True, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_matches_model_attention():
+    """Kernel agrees with the model's chunked-XLA attention path."""
+    from repro.models.layers import attention as model_attn
+    ks = jax.random.split(KEY, 3)
+    q = rand((2, 256, 8, 64), jnp.float32, ks[0])
+    k = rand((2, 256, 2, 64), jnp.float32, ks[1])
+    v = rand((2, 256, 2, 64), jnp.float32, ks[2])
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = model_attn(q, k, v, causal=True, chunk=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Skv,Hq,Hkv,hd,kv_len", [
+    (2, 512, 8, 2, 64, 512),
+    (2, 512, 8, 2, 64, 300),    # masked tail
+    (1, 1024, 4, 1, 128, 1000),
+    (4, 256, 4, 4, 64, 256),
+])
+def test_decode_attention_matches_ref(B, Skv, Hq, Hkv, hd, kv_len, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = rand((B, 1, Hq, hd), dtype, ks[0])
+    k = rand((B, Skv, Hkv, hd), dtype, ks[1])
+    v = rand((B, Skv, Hkv, hd), dtype, ks[2])
+    got = decode_attention(q, k, v, jnp.int32(kv_len), bk=128, interpret=True)
+    want = decode_attention(q, k, v, jnp.int32(kv_len), impl="ref")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOLS[dtype])
+
+
+def test_decode_matches_full_attention_last_row():
+    """Decode of token t equals row t of full causal attention."""
+    ks = jax.random.split(KEY, 3)
+    S, Hq, Hkv, hd = 256, 8, 2, 64
+    q_full = rand((1, S, Hq, hd), jnp.float32, ks[0])
+    k = rand((1, S, Hkv, hd), jnp.float32, ks[1])
+    v = rand((1, S, Hkv, hd), jnp.float32, ks[2])
+    full = flash_attention(q_full, k, v, causal=True, impl="ref")
+    got = decode_attention(q_full[:, -1:], k, v, jnp.int32(S), interpret=True)
+    np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(full[:, -1]),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,dr,bt,bd", [
+    (2, 256, 256, 64, 128),
+    (1, 512, 512, 128, 512),
+    (3, 128, 1024, 32, 256),
+])
+def test_rglru_matches_ref(B, S, dr, bt, bd):
+    ks = jax.random.split(KEY, 3)
+    a = jax.nn.sigmoid(rand((B, S, dr), jnp.float32, ks[0]))  # decay in (0,1)
+    b = rand((B, S, dr), jnp.float32, ks[1], scale=0.5)
+    h0 = rand((B, dr), jnp.float32, ks[2])
+    got = rglru(a, b, h0, bt=bt, bd=bd, interpret=True)
+    want = rglru_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_rglru_associative_scan_matches_sequential():
+    """The oracle itself: parallel scan == definitional recurrence."""
+    ks = jax.random.split(KEY, 3)
+    a = jax.nn.sigmoid(rand((2, 100, 64), jnp.float32, ks[0]))
+    b = rand((2, 100, 64), jnp.float32, ks[1], scale=0.5)
+    h0 = rand((2, 64), jnp.float32, ks[2])
+    np.testing.assert_allclose(np.asarray(rglru_scan_ref(a, b, h0)),
+                               np.asarray(rglru_scan_seq(a, b, h0)),
+                               atol=1e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM chunkwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("BH,S,dh,K", [
+    (2, 128, 64, 32),
+    (4, 256, 128, 64),
+    (1, 256, 64, 256),   # single chunk == fully parallel
+    (1, 128, 64, 1),     # chunk of 1 == sequential
+])
+def test_mlstm_kernel_matches_sequential_oracle(BH, S, dh, K):
+    ks = jax.random.split(KEY, 5)
+    q = rand((BH, S, dh), jnp.float32, ks[0])
+    k = rand((BH, S, dh), jnp.float32, ks[1])
+    v = rand((BH, S, dh), jnp.float32, ks[2])
+    log_f = -jax.nn.softplus(-rand((BH, S), jnp.float32, ks[3], scale=2.0))
+    log_i = rand((BH, S), jnp.float32, ks[4], scale=1.0)
+    got = mlstm(q, k, v, log_f, log_i, K=K, interpret=True)
+    want = mlstm_ref(q, k, v, log_f, log_i)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-4, rtol=3e-3)
+
+
+def test_model_mlstm_chunked_matches_oracle():
+    """The model's jnp chunkwise path agrees with the sequential oracle."""
+    from repro.models.recurrent import mlstm_scan_chunked
+    ks = jax.random.split(KEY, 5)
+    B, S, H, dh = 2, 96, 2, 32
+    q = rand((B, S, H, dh), jnp.float32, ks[0])
+    k = rand((B, S, H, dh), jnp.float32, ks[1])
+    v = rand((B, S, H, dh), jnp.float32, ks[2])
+    log_f = -jax.nn.softplus(-rand((B, S, H), jnp.float32, ks[3], scale=2.0))
+    log_i = rand((B, S, H), jnp.float32, ks[4])
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    got, Cf, nf = mlstm_scan_chunked(q, k, v, log_f, log_i, C0, n0, chunk=32)
+    # oracle works on (BH, S, dh): interleave batch and head
+    def flat(x):
+        if x.ndim == 4:
+            return x.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+        return x.transpose(0, 2, 1).reshape(B * H, S)
+    # both the model path and the oracle scale q by 1/sqrt(dh) internally
+    want = mlstm_ref(flat(q), flat(k), flat(v), flat(log_f), flat(log_i))
+    np.testing.assert_allclose(
+        np.asarray(got.transpose(0, 2, 1, 3).reshape(B * H, S, dh)),
+        np.asarray(want), atol=3e-4, rtol=3e-3)

@@ -1,0 +1,162 @@
+"""Substrate tests: optimizer, data pipeline, compression, serving."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.data.pipeline import Prefetcher, TokenStream
+from repro.optim import compress as compress_lib
+from repro.optim.adamw import (adamw_update, clip_by_global_norm, global_norm,
+                               init_opt_state, lr_at)
+
+RUN = RunConfig(attn_chunk=8, mlstm_chunk=4, remat_policy="none",
+                warmup_steps=5, total_steps=50, learning_rate=1e-2)
+
+
+# -- optimizer -----------------------------------------------------------------
+
+def test_adamw_moves_toward_minimum():
+    params = {"w": jnp.asarray([4.0, -3.0])}
+    opt = init_opt_state(params)
+    run = RunConfig(learning_rate=0.1, warmup_steps=0, total_steps=200,
+                    weight_decay=0.0)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}  # d/dw ||w||^2
+        params, opt, _ = adamw_update(params, grads, opt, run)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_lr_schedule_shape():
+    run = RunConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_at(run, jnp.int32(s))) for s in range(100)]
+    assert lrs[0] < lrs[9]                  # warmup rises
+    assert abs(lrs[10] - run.learning_rate) < 1e-4  # peak
+    assert lrs[-1] < 0.1 * run.learning_rate        # cosine decays
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    assert float(gn) == pytest.approx(np.sqrt(10) * 100, rel=1e-5)
+
+
+def test_no_weight_decay_on_norms():
+    from repro.optim.adamw import _decay_mask
+    mask = _decay_mask({"tiles": {"b0": {"ln1": 1, "attn": {"wq": 1}}},
+                        "final_norm": 1})
+    assert mask["tiles"]["b0"]["ln1"] == 0.0
+    assert mask["tiles"]["b0"]["attn"]["wq"] == 1.0
+    assert mask["final_norm"] == 0.0
+
+
+# -- compression ----------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_error_feedback_preserves_gradient_sum(seed):
+    """EF property: sum of sent grads -> sum of true grads (bias-free)."""
+    key = jax.random.PRNGKey(seed)
+    g = {"w": jax.random.normal(key, (64,))}
+    ef = compress_lib.init_ef_state(g)
+    sent_total = jnp.zeros((64,))
+    for i in range(20):
+        sent, ef = compress_lib.compress_grads(g, ef, "int8")
+        sent_total = sent_total + sent["w"]
+    true_total = 20 * g["w"]
+    # residual bounded by one quantisation step, NOT accumulating over steps
+    q_step = float(jnp.max(jnp.abs(g["w"]))) / 127
+    assert float(jnp.max(jnp.abs(sent_total - true_total))) < 2 * q_step + 1e-5
+
+
+def test_wire_bytes_accounting():
+    g = {"w": jnp.zeros((1000,), jnp.float32)}
+    assert compress_lib.wire_bytes(g, "none") == 4000
+    assert compress_lib.wire_bytes(g, "bf16") == 2000
+    assert compress_lib.wire_bytes(g, "int8") == 1000
+
+
+# -- data pipeline ----------------------------------------------------------------
+
+def _shape(seq=32, gb=4):
+    return ShapeConfig("t", seq, gb, "train")
+
+
+def test_stream_determinism():
+    cfg = get_smoke("qwen3-4b")
+    a = TokenStream(cfg, _shape(), seed=3).batch_at(7)
+    b = TokenStream(cfg, _shape(), seed=3).batch_at(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = TokenStream(cfg, _shape(), seed=4).batch_at(7)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_stream_host_sharding_disjoint():
+    cfg = get_smoke("qwen3-4b")
+    h0 = TokenStream(cfg, _shape(gb=4), seed=0, host_id=0, n_hosts=2)
+    h1 = TokenStream(cfg, _shape(gb=4), seed=0, host_id=1, n_hosts=2)
+    assert h0.local_batch == 2
+    assert not np.array_equal(h0.batch_at(0)["tokens"], h1.batch_at(0)["tokens"])
+
+
+def test_stream_checkpointable():
+    cfg = get_smoke("qwen3-4b")
+    s = TokenStream(cfg, _shape(), seed=0)
+    next(s), next(s)
+    st_ = s.state_dict()
+    b3 = next(s)
+    s2 = TokenStream(cfg, _shape(), seed=0)
+    s2.load_state_dict(st_)
+    np.testing.assert_array_equal(next(s2)["tokens"], b3["tokens"])
+
+
+def test_prefetcher_yields_in_order():
+    cfg = get_smoke("qwen3-4b")
+    s = TokenStream(cfg, _shape(), seed=0)
+    want = [s.batch_at(i)["tokens"] for i in range(3)]
+    pf = Prefetcher(TokenStream(cfg, _shape(), seed=0), depth=2)
+    try:
+        for i in range(3):
+            np.testing.assert_array_equal(next(pf)["tokens"], want[i])
+    finally:
+        pf.close()
+
+
+def test_stream_tokens_in_vocab():
+    cfg = get_smoke("gemma-7b")
+    b = TokenStream(cfg, _shape(), seed=0).batch_at(0)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < cfg.vocab
+
+
+def test_stream_frontend_batches():
+    cfg = get_smoke("llava-next-34b")
+    b = TokenStream(cfg, _shape(seq=32), seed=0).batch_at(0)
+    assert "prefix_emb" in b
+    assert b["prefix_emb"].shape[1] == 32 // cfg.frontend_len_div
+    assert b["tokens"].shape[1] == 32 - b["prefix_emb"].shape[1]
+    cfg2 = get_smoke("seamless-m4t-medium")
+    b2 = TokenStream(cfg2, _shape(seq=32), seed=0).batch_at(0)
+    assert "enc_emb" in b2
+
+
+# -- serving ----------------------------------------------------------------------
+
+def test_serve_engine_greedy_matches_manual_decode():
+    from repro.models import lm
+    from repro.serve.engine import Request, ServeEngine
+    cfg = get_smoke("qwen3-1.7b")
+    run = RunConfig(attn_chunk=8, remat_policy="none", decode_budget=8)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, run, params, max_batch=2)
+    prompts = [np.arange(8, dtype=np.int32), np.arange(5, dtype=np.int32) + 3]
+    outs = eng.generate([Request(p, max_new_tokens=4) for p in prompts])
+    assert len(outs) == 2
+    assert all(o.tokens.shape == (4,) for o in outs)
+    assert all(o.tokens.max() < cfg.vocab for o in outs)
+    # deterministic
+    outs2 = eng.generate([Request(p, max_new_tokens=4) for p in prompts])
+    for a, b in zip(outs, outs2):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
