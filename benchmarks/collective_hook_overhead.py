@@ -1,104 +1,193 @@
-"""Adapted Table 3: cost of intercepting the collective boundary.
+"""Adapted Table 3, measured collectively: the one-dispatch benchmark census.
 
-Wall-clock per train step (small config, CPU) for: no hook, transparent
-trace hook, bf16-compression hook, RS+AG schedule rewrite.  A transparent
-hook must cost ~nothing (it only runs at trace time — the compiled artifact
-is identical, which we assert via the HLO text).
+The paper evaluates each interception mechanism with one process at a time.
+This suite runs the ENTIRE census — every mechanism x workload program x
+iteration count, 400 simulated processes — as a single device dispatch on
+the batched fleet engine (repro.core.fleet), and compares aggregate
+throughput against looping the scalar engine over the same grid.
+
+Census design:
+
+  * **Parameterised workloads** (``programs.*_param``): the iteration count
+    arrives in x19 at entry, so every iteration-count lane of a
+    (mechanism, workload) cell shares ONE image — 20 decode tables serve
+    400 processes, exactly the production-fleet shape (many processes, few
+    binaries) the image-dedup path (pack_fleet) exists for.
+  * **Calibrated lanes** (rate-benchmark style, like SPECrate): per-cell
+    base iteration counts derived from measured steps-per-iteration so
+    every full-weight lane runs ~8k instructions; fleet wall-clock is
+    bounded by the longest lane, so equal-work lanes measure engine
+    throughput rather than grid skew.  SCALES then provides the
+    iteration-count axis and the (n1 - n2) differential for per-call
+    cycles.
+  * **Best-of-two timing** on both engines (after a compile warm-up); the
+    timed fleet measurement is exactly one device dispatch.
+
+Reported: per-mechanism hooked-call cost (differential cycles, from the
+same dispatch) and aggregate steps/sec scalar vs fleet — the perf number
+run.py records into BENCH_fleet.json.
 """
 from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import get_smoke
-from repro.configs.base import RunConfig, ShapeConfig
-from repro.data.pipeline import TokenStream
-from repro.hooks import (CastCompressHandler, RSAGHandler, TraceHandler,
-                         hook_collectives)
-from repro.launch.mesh import make_test_mesh
-from repro.train.step import init_train_state, make_ddp_train_step
+from repro.core import (Mechanism, prepare, programs, run_fleet_prepared,
+                        run_prepared)
 
-RUN = RunConfig(attn_chunk=8, mlstm_chunk=4, remat_policy="none", z_loss=0.0)
-SHAPE = ShapeConfig("bench", 64, 4, "train")
-ARCH = "qwen3-1.7b"
+FUEL = 10_000_000
 
+MECHS = [
+    ("none", Mechanism.NONE, False),
+    ("ld_preload", Mechanism.LD_PRELOAD, True),
+    ("asc", Mechanism.ASC, True),
+    ("signal", Mechanism.SIGNAL, True),
+    ("ptrace", Mechanism.PTRACE, True),
+]
 
-import re
+WORKLOADS = {
+    "getpid": programs.getpid_loop_param,
+    "read": lambda: programs.read_loop_param(1024),
+    "mixed": lambda: programs.mixed_ops_param(512),
+    "io_bw": lambda: programs.io_bandwidth_param(4096),
+}
 
-
-def _canon_hlo(lowered) -> str:
-    """HLO text with source locations stripped (hook wrappers shift line
-    numbers; the computation itself is what must match): drops per-op
-    metadata and the FileNames/FileLocations/StackFrames header tables."""
-    txt = re.sub(r", metadata=\{[^}]*\}", "", lowered.as_text())
-    txt = re.sub(r"module @\S+", "module @M", txt)  # wrapper renames the jit
-    txt = re.sub(r"@jit_\w+", "@jit_F", txt)
-    keep = []
-    skipping = False
-    for line in txt.splitlines():
-        if line.strip() in ("FileNames", "FunctionNames", "FileLocations",
-                            "StackFrames"):
-            skipping = True
-            continue
-        if skipping:
-            if line.strip() == "":
-                skipping = False
-            continue
-        keep.append(line)
-    return "\n".join(keep)
+_BASE_ITERS = {  # ~8000 steps / measured steps-per-iter, rounded
+    "getpid": {"none": 1140, "ld_preload": 530, "asc": 140,
+               "signal": 260, "ptrace": 1140},
+    "read": {"none": 730, "ld_preload": 730, "asc": 130,
+             "signal": 230, "ptrace": 730},
+    "mixed": {"none": 220, "ld_preload": 220, "asc": 30,
+              "signal": 60, "ptrace": 220},
+    "io_bw": {"none": 350, "ld_preload": 350, "asc": 60,
+              "signal": 110, "ptrace": 350},
+}
+# 20 points in a NARROW band: the iteration-count axis and the per-call
+# differential only need distinct counts, while fleet efficiency is
+# mean/max lane work — a tight band keeps that near 0.9.
+SCALES = tuple(round(1.0 - 0.01 * i, 2) for i in range(20))
 
 
-def _time_step(fn, state, batch, iters=20):
-    jfn = jax.jit(fn)
-    out = jfn(state, batch)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = jfn(state, batch)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters, jfn.lower(state, batch)
+def census_grid():
+    """[(mech_name, mech, virt, workload, n)] — the full census."""
+    grid = []
+    for mname, mech, virt in MECHS:
+        for wname in WORKLOADS:
+            base = _BASE_ITERS[wname][mname]
+            for sc in SCALES:
+                grid.append((mname, mech, virt, wname, max(2, int(base * sc))))
+    return grid
+
+
+def _prepare_cells():
+    """One PreparedProcess per (mechanism, workload) — lanes share images."""
+    return {(mname, wname): prepare(WORKLOADS[wname](), mech, virtualize=virt)
+            for mname, mech, virt in MECHS for wname in WORKLOADS}
+
+
+_CACHE: dict = {}
+
+
+def run_census(chunk: int = 128, refresh: bool = False) -> dict:
+    if not refresh and chunk in _CACHE:
+        return _CACHE[chunk]
+    grid = census_grid()
+    cells = _prepare_cells()
+    pps = [cells[(g[0], g[3])] for g in grid]
+    lane_regs = [{19: g[4]} for g in grid]
+
+    # scalar engine: one dispatch per process (compile once, same shapes);
+    # best of two passes
+    run_prepared(pps[0], fuel=FUEL, regs=lane_regs[0])  # warm the jit cache
+    t_scalar = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        scalar_steps = 0
+        scalar_cycles = {}
+        for g, pp, rg in zip(grid, pps, lane_regs):
+            st = run_prepared(pp, fuel=FUEL, regs=rg)
+            scalar_steps += int(st.icount)
+            scalar_cycles[(g[0], g[3], g[4])] = int(st.cycles)
+        t_scalar = min(t_scalar, time.perf_counter() - t0)
+
+    # fleet engine: warm-up dispatch compiles (buffers are donated, so each
+    # pass re-packs); then the timed passes are ONE dispatch each
+    run_fleet_prepared(pps, fuel=FUEL, chunk=chunk, regs=lane_regs)
+    t_fleet = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        out = run_fleet_prepared(pps, fuel=FUEL, chunk=chunk, regs=lane_regs)
+        t_fleet = min(t_fleet, time.perf_counter() - t0)
+
+    icount = np.asarray(out.icount)
+    cycles = np.asarray(out.cycles)
+    fleet_steps = int(icount.sum())
+    assert fleet_steps == scalar_steps, "fleet/scalar census diverged"
+
+    # per-mechanism per-call cycles from the two largest iteration counts
+    per_call = {}
+    for mname, _, _ in MECHS:
+        per_call[mname] = {}
+        for wname in WORKLOADS:
+            cands = sorted(((g[4], i) for i, g in enumerate(grid)
+                            if (g[0], g[3]) == (mname, wname)), reverse=True)
+            n1, i1 = cands[0]
+            # first lane with a DISTINCT count (small bases collapse
+            # adjacent scale points to the same n)
+            n2, i2 = next((n, i) for n, i in cands if n != n1)
+            per_call[mname][wname] = round(
+                (int(cycles[i1]) - int(cycles[i2])) / (n1 - n2), 2)
+            assert int(cycles[i1]) == scalar_cycles[(mname, wname, n1)]
+
+    scalar_sps = scalar_steps / t_scalar
+    fleet_sps = fleet_steps / t_fleet
+    _CACHE[chunk] = {
+        "lanes": len(grid),
+        "distinct_images": len(cells),
+        "total_steps": fleet_steps,
+        "longest_lane_steps": int(icount.max()),
+        "mean_lane_steps": round(float(icount.mean()), 1),
+        "chunk": chunk,
+        "scalar_wall_s": round(t_scalar, 3),
+        "fleet_wall_s": round(t_fleet, 3),
+        "scalar_steps_per_sec": round(scalar_sps, 1),
+        "fleet_steps_per_sec": round(fleet_sps, 1),
+        "speedup": round(fleet_sps / scalar_sps, 2),
+        "scalar_dispatches": len(grid),
+        "fleet_dispatches": 1,
+        "per_call_cycles": per_call,
+    }
+    return _CACHE[chunk]
 
 
 def run() -> list:
-    mesh = make_test_mesh(data=jax.device_count(), model=1)
-    cfg = get_smoke(ARCH)
-    state = init_train_state(cfg, RUN, jax.random.PRNGKey(0))
-    batch = {k: jnp.asarray(v)
-             for k, v in TokenStream(cfg, SHAPE).batch_at(0).items()}
-    step = make_ddp_train_step(cfg, RUN, mesh)
-
-    variants = {
-        "baseline": step,
-        "trace_hook": hook_collectives(step, {"psum": TraceHandler()}),
-        "compress_bf16": hook_collectives(
-            step, {"psum": CastCompressHandler(min_bytes=1 << 10)}),
-        "rsag_rewrite": hook_collectives(
-            step, {"psum": RSAGHandler(axis_size=jax.device_count())}),
-    }
-    rows = []
-    base_s, base_hlo = None, None
-    for name, fn in variants.items():
-        secs, lowered = _time_step(fn, state, batch)
-        hlo = _canon_hlo(lowered)
-        if name == "baseline":
-            base_s, base_hlo = secs, hlo
-        rows.append({
-            "variant": name,
-            "s_per_step": round(secs, 4),
-            "overhead_pct": round((secs - base_s) / base_s * 100, 2),
-            "hlo_identical_to_base": hlo == base_hlo,
-        })
+    c = run_census()
+    rows = [{
+        "variant": "census",
+        "lanes": c["lanes"],
+        "scalar_steps_per_sec": c["scalar_steps_per_sec"],
+        "fleet_steps_per_sec": c["fleet_steps_per_sec"],
+        "speedup": c["speedup"],
+    }]
+    for mech, by_w in c["per_call_cycles"].items():
+        rows.append({"variant": f"per_call/{mech}", **by_w})
     return rows
 
 
 def main() -> None:
+    c = run_census()
     print("name,us_per_call,derived")
-    for r in run():
-        print(f"collective_hook/{r['variant']},{r['s_per_step']*1e6:.1f},"
-              f"overhead={r['overhead_pct']}% "
-              f"hlo_identical={r['hlo_identical_to_base']}")
+    print(f"collective_hook/census,0,"
+          f"lanes={c['lanes']} images={c['distinct_images']} "
+          f"scalar={c['scalar_steps_per_sec']:.0f}sps "
+          f"fleet={c['fleet_steps_per_sec']:.0f}sps "
+          f"speedup={c['speedup']}x dispatches={c['scalar_dispatches']}->1")
+    from repro.core import costmodel as cm
+    for mech, by_w in c["per_call_cycles"].items():
+        gp = by_w["getpid"]
+        print(f"collective_hook/{mech},{cm.cycles_to_ns(gp)/1000:.5f},"
+              + " ".join(f"{w}={v}" for w, v in by_w.items()))
 
 
 if __name__ == "__main__":

@@ -5,10 +5,20 @@ value (no kernel crossing for the hooked call), measured per mechanism on
 the simulated Neoverse-N1 cost model.  Differential measurement (N vs N/2
 iterations) cancels startup/exit costs; the residual per-iteration loop cost
 (~7 cycles) is subtracted via the no-interception virtual baseline.
+
+Execution engine: the whole mechanisms x iteration-counts grid — ten
+simulated processes — runs as ONE fleet dispatch (repro.core.fleet) instead
+of ten scalar ``lax.while_loop`` dispatches.  Per-lane results are
+bit-identical to the scalar engine (tests/test_fleet_parity.py), so the
+reported numbers are engine-independent; ``run(engine="scalar")`` keeps the
+old path for cross-checking.
 """
 from __future__ import annotations
 
-from repro.core import Mechanism, layout as L, prepare, programs, run_prepared
+import numpy as np
+
+from repro.core import (Mechanism, prepare, programs, run_fleet_prepared,
+                        run_prepared)
 from repro.core import costmodel as cm
 
 PAPER_NS = {  # Table 3
@@ -18,33 +28,57 @@ PAPER_NS = {  # Table 3
     "asc": 33.52524,
 }
 
+N_HI, N_LO = 400, 200
+FUEL = 10_000_000
 
-def per_call_cycles(mech: Mechanism, virtualize: bool = True,
-                    n_hi: int = 400, n_lo: int = 200) -> float:
-    hi = run_prepared(prepare(programs.getpid_loop(n_hi), mech,
-                              virtualize=virtualize), fuel=10_000_000)
-    lo = run_prepared(prepare(programs.getpid_loop(n_lo), mech,
-                              virtualize=virtualize), fuel=10_000_000)
-    return (int(hi.cycles) - int(lo.cycles)) / (n_hi - n_lo)
+# lane grid: (name, mechanism, virtualize); NONE is the loop-skeleton baseline
+GRID = [
+    ("none", Mechanism.NONE, False),
+    ("ld_preload", Mechanism.LD_PRELOAD, True),
+    ("asc", Mechanism.ASC, True),
+    ("signal", Mechanism.SIGNAL, True),
+    ("ptrace", Mechanism.PTRACE, True),
+]
 
 
-def run() -> list:
+def _prepare_lanes():
+    pps, keys = [], []
+    for name, mech, virt in GRID:
+        for n in (N_HI, N_LO):
+            pps.append(prepare(programs.getpid_loop(n), mech, virtualize=virt))
+            keys.append((name, n))
+    return pps, keys
+
+
+def _per_call_cycles(engine: str = "fleet") -> dict:
+    """{mechanism: raw per-call cycles} from the differential measurement."""
+    pps, keys = _prepare_lanes()
+    if engine == "fleet":
+        out = run_fleet_prepared(pps, fuel=FUEL)
+        cycles = np.asarray(out.cycles)
+    else:
+        cycles = np.array([int(run_prepared(pp, fuel=FUEL).cycles)
+                           for pp in pps])
+    by_key = dict(zip(keys, cycles))
+    return {name: (int(by_key[(name, N_HI)]) - int(by_key[(name, N_LO)]))
+            / (N_HI - N_LO)
+            for name, _, _ in GRID}
+
+
+def run(engine: str = "fleet") -> list:
+    raw = _per_call_cycles(engine)
+    skeleton = raw["none"] - cm.KERNEL_CROSS
     rows = []
-    # loop-body-only baseline: un-intercepted loop around the real syscall,
-    # minus the kernel crossing = the bare call+loop skeleton
-    base = per_call_cycles(Mechanism.NONE, virtualize=False)
-    skeleton = base - cm.KERNEL_CROSS
-    for name, mech in [("ld_preload", Mechanism.LD_PRELOAD),
-                       ("asc", Mechanism.ASC),
-                       ("signal", Mechanism.SIGNAL),
-                       ("ptrace", Mechanism.PTRACE)]:
-        cyc = per_call_cycles(mech) - skeleton
+    for name in ("ld_preload", "asc", "signal", "ptrace"):
+        cyc = raw[name] - skeleton
         ns = cm.cycles_to_ns(cyc)
         rows.append({
             "mechanism": name,
+            "cycles_per_call": round(cyc, 2),
             "ns_per_call": round(ns, 2),
             "paper_ns": PAPER_NS[name],
             "ratio_vs_paper": round(ns / PAPER_NS[name], 2),
+            "engine": engine,
         })
     asc = next(r for r in rows if r["mechanism"] == "asc")
     for r in rows:

@@ -1,32 +1,76 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness:
 
-  * hook_overhead            — paper Table 3 (getpid interception cost)
+  * hook_overhead            — paper Table 3 (getpid interception cost),
+                               one fleet dispatch for the whole grid
   * svc_census               — paper Tables 1 & 2 (svc population)
   * app_bandwidth            — paper Figures 5 & 6 (app-level overhead)
   * collective_census        — adapted Table 1 (collective sites per arch)
-  * collective_hook_overhead — adapted Table 3 (hooked-step cost)
+  * collective_hook_overhead — one-dispatch mechanisms x programs x
+                               iteration-counts census; scalar vs fleet
+                               steps/sec (the perf-tracking suite)
   * roofline                 — dry-run roofline table (§Roofline)
+
+Besides the CSV stream, writes ``benchmarks/results/BENCH_fleet.json`` with
+machine-readable per-mechanism per-call cycles and the scalar-vs-fleet
+throughput numbers, so the perf trajectory is tracked across PRs.
 """
+import importlib
+import json
+import pathlib
 import sys
 import traceback
 
+SUITES = ["hook_overhead", "svc_census", "app_bandwidth", "collective_census",
+          "collective_hook_overhead", "roofline"]
+
+BENCH_PATH = pathlib.Path(__file__).parent / "results" / "BENCH_fleet.json"
+
+
+def write_bench_json(payload: dict, path: pathlib.Path = BENCH_PATH) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True))
+
+
+def collect_fleet_bench() -> dict:
+    """The machine-readable fleet benchmark record (BENCH_fleet.json)."""
+    from benchmarks import collective_hook_overhead, hook_overhead
+    census = collective_hook_overhead.run_census()
+    table3 = hook_overhead.run(engine="fleet")
+    return {
+        "schema": "BENCH_fleet/v1",
+        "table3_per_mechanism": {
+            r["mechanism"]: {
+                "cycles_per_call": r["cycles_per_call"],
+                "ns_per_call": r["ns_per_call"],
+                "paper_ns": r["paper_ns"],
+                "x_vs_asc": r["x_vs_asc"],
+            } for r in table3
+        },
+        "census": census,
+    }
+
 
 def main() -> None:
-    from benchmarks import (app_bandwidth, collective_census,
-                            collective_hook_overhead, hook_overhead,
-                            roofline, svc_census)
-    suites = [hook_overhead, svc_census, app_bandwidth, collective_census,
-              collective_hook_overhead, roofline]
     failures = 0
-    for mod in suites:
-        name = mod.__name__.split(".")[-1]
+    for name in SUITES:
         print(f"# === {name} ===", flush=True)
         try:
+            mod = importlib.import_module(f"benchmarks.{name}")
             mod.main()
         except Exception:
             failures += 1
             print(f"{name}/ERROR,0,{traceback.format_exc(limit=2)!r}")
+    print("# === BENCH_fleet.json ===", flush=True)
+    try:
+        payload = collect_fleet_bench()
+        write_bench_json(payload)
+        c = payload["census"]
+        print(f"bench_fleet/written,0,path={BENCH_PATH} "
+              f"speedup={c['speedup']}x fleet={c['fleet_steps_per_sec']:.0f}sps")
+    except Exception:
+        failures += 1
+        print(f"bench_fleet/ERROR,0,{traceback.format_exc(limit=2)!r}")
     if failures:
         sys.exit(1)
 

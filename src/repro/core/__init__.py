@@ -7,15 +7,19 @@ Public surface::
         scan_image, census, programs,
     )
 """
-from . import costmodel, isa, layout, programs
+from . import costmodel, fleet, isa, layout, programs
 from .completeness import C3Event, diagnose_c3, run_with_c3
+from .fleet import (fleet_counters, fleet_step, fleet_summary, run_fleet,
+                    stack_images, stack_states, unstack_state)
 from .hookcfg import HookConfig, PinnedSite
 from .image import Image, build_minilibc, build_process
 from .machine import (HALT_EXIT, HALT_FUEL, HALT_SEGV, HALT_TRAP,
                       DecodedImage, MachineState, decode_image, make_state,
-                      mem_read, mem_write, run_image)
+                      mem_read, mem_read_block, mem_write, run_image)
 from .rewriter import RewriteReport, rewrite_all_to_signal, rewrite_image
-from .runtime import Mechanism, PreparedProcess, hook_invocations, prepare, run_prepared
+from .runtime import (Mechanism, PreparedProcess, hook_invocations,
+                      initial_state, pack_fleet, prepare, run_fleet_prepared,
+                      run_prepared)
 from .scanner import SvcSite, census, scan_image
 
 __all__ = [
@@ -23,7 +27,10 @@ __all__ = [
     "HALT_TRAP", "HookConfig", "Image", "MachineState", "Mechanism",
     "PinnedSite", "PreparedProcess", "RewriteReport", "SvcSite",
     "build_minilibc", "build_process", "census", "costmodel", "decode_image",
-    "diagnose_c3", "hook_invocations", "isa", "layout", "make_state",
-    "mem_read", "mem_write", "prepare", "programs", "rewrite_all_to_signal",
-    "rewrite_image", "run_image", "run_prepared", "run_with_c3", "scan_image",
+    "diagnose_c3", "fleet", "fleet_counters", "fleet_step", "fleet_summary",
+    "hook_invocations", "initial_state", "isa", "layout", "make_state",
+    "mem_read", "mem_read_block", "mem_write", "pack_fleet", "prepare",
+    "programs", "rewrite_all_to_signal", "rewrite_image", "run_fleet",
+    "run_fleet_prepared", "run_image", "run_prepared", "run_with_c3",
+    "scan_image", "stack_images", "stack_states", "unstack_state",
 ]

@@ -1,0 +1,596 @@
+"""Batched fleet execution engine: N simulated processes, one dispatch.
+
+The scalar machine (:mod:`machine`) interprets one process with a
+``lax.switch`` over op handlers inside a ``lax.while_loop`` — ideal for a
+single lane, terrible under ``jax.vmap``: batching a 40-way switch executes
+*every* handler for *every* lane each step, and each handler carries the
+full 256 KiB memory image through a select.  Measured on CPU that is ~14x
+slower per aggregate step than just looping the scalar engine.
+
+This module instead implements the step **natively batched**
+(:func:`fleet_step`): one fetch gather per decode field, register reads as
+``take_along_axis``, all scalar-register/ALU/branch semantics as masked
+selects, and — the part that makes it fast — memory traffic merged into at
+most two word gathers + two word scatters per step plus a static 34-word
+sigframe window, with the unbounded syscall-I/O fill/sum loops hidden
+behind a *batch-uniform* ``lax.cond`` (the predicate is a reduction over
+lanes, so XLA keeps it a real branch instead of flattening it).
+
+Execution is **chunked**: an inner ``lax.scan`` of K steps per
+``lax.while_loop`` iteration amortises the all-halted condition K-fold;
+finished lanes are masked to no-ops (every write in :func:`fleet_step` is
+gated on the lane being live), so per-lane results are bit-identical to the
+scalar engine for any K — tested exhaustively in
+``tests/test_fleet_parity.py``.
+
+Decode tables are deduplicated: lanes reference a table stack
+``[G, CODE_WORDS]`` through an ``img_ids`` indirection, so a census running
+the same program under many iteration counts or mechanisms only ships each
+distinct image once.  Entry points donate the state buffers
+(``donate_argnums``) and can optionally lane-partition the fleet across
+devices via :mod:`repro.parallel.sharding`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import costmodel as cm
+from . import layout as L
+from .isa import Op
+from .machine import (COST_TABLE, HALT_BADMEM, HALT_EXIT, HALT_FUEL,
+                      HALT_SEGV, HALT_TRAP, RUNNING, SIGFRAME_WORDS,
+                      DecodedImage, MachineState, _SIGFRAME_IDX)
+
+I64 = jnp.int64
+I32 = jnp.int32
+
+_MAX_IO_WORDS = 4096  # mirrors machine._MAX_IO_WORDS
+_COUNTER_IDX = (L.COUNTER - L.DATA_BASE) // 8
+
+DEFAULT_CHUNK = 8
+
+
+# ---------------------------------------------------------------------------
+# stacking helpers
+# ---------------------------------------------------------------------------
+
+def stack_images(imgs: Sequence[DecodedImage]) -> DecodedImage:
+    """Stack decode tables along a new leading axis -> [G, CODE_WORDS]."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *imgs)
+
+
+class FleetImages(NamedTuple):
+    """Fleet-side decode tables: the seven small fields of ``DecodedImage``
+    packed into one int64 word per instruction, so a fetch is two gathers
+    (packed + imm) instead of eight.  Field layout (low to high):
+    op:6  rd:5  rn:5  rm:5  sh:6  cond:4  sf:1."""
+
+    packed: jnp.ndarray  # int64[G, CODE_WORDS]
+    imm: jnp.ndarray     # int64[G, CODE_WORDS]
+
+
+def pack_images(imgs) -> FleetImages:
+    """DecodedImage stack [G, CODE_WORDS] (or list of scalar images) ->
+    :class:`FleetImages`."""
+    if isinstance(imgs, FleetImages):
+        return imgs
+    if not isinstance(imgs, DecodedImage):
+        imgs = stack_images(list(imgs))
+    f = [x.astype(I64) for x in
+         (imgs.op, imgs.rd, imgs.rn, imgs.rm, imgs.sh, imgs.cond, imgs.sf)]
+    packed = (f[0] | (f[1] << 6) | (f[2] << 11) | (f[3] << 16)
+              | (f[4] << 22) | (f[5] << 28) | (f[6] << 32))
+    return FleetImages(packed=packed, imm=imgs.imm)
+
+
+def stack_states(states: Sequence[MachineState]) -> MachineState:
+    """Stack machine states along a new leading lane axis -> [B, ...]."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_state(states: MachineState, lane: int) -> MachineState:
+    """Extract one lane of a batched state (host-side convenience)."""
+    return jax.tree_util.tree_map(lambda x: x[lane], states)
+
+
+# ---------------------------------------------------------------------------
+# the batched step
+# ---------------------------------------------------------------------------
+
+def _mem_ok_v(addr):
+    return (addr >= L.DATA_BASE) & (addr < L.MEM_LIMIT) & ((addr & 7) == 0)
+
+
+def _widx_v(addr):
+    return jnp.clip((addr - L.DATA_BASE) >> 3, 0, L.MEM_WORDS - 1)
+
+
+def _cond_holds_v(nzcv, cond):
+    n = (nzcv & 8) != 0
+    z = (nzcv & 4) != 0
+    c = (nzcv & 2) != 0
+    v = (nzcv & 1) != 0
+    t = jnp.ones_like(n)
+    preds = jnp.stack([
+        z, ~z, c, ~c, n, ~n, v, ~v,
+        c & ~z, ~(c & ~z), n == v, n != v,
+        ~z & (n == v), ~(~z & (n == v)), t, t,
+    ], axis=1)  # [B, 16]
+    sel = jnp.clip(cond, 0, 15).astype(I32)
+    return jnp.take_along_axis(preds, sel[:, None], axis=1)[:, 0]
+
+
+def fleet_step(img: FleetImages, ids: jnp.ndarray,
+               s: MachineState) -> MachineState:
+    """One masked step for every lane.  ``img`` leaves are [G, CODE_WORDS],
+    ``ids`` is the per-lane image index [B], state leaves are [B, ...].
+
+    Bit-identical per lane to :func:`machine.step` applied to live lanes and
+    the identity on halted/out-of-fuel lanes.
+    """
+    B = s.pc.shape[0]
+    lanes = jnp.arange(B)
+    regs0, sp0, pc0, nzcv0, mem0 = s.regs, s.sp, s.pc, s.nzcv, s.mem
+
+    act = (s.halted == RUNNING) & (s.icount < s.fuel)
+
+    # -- fetch: two gathers (packed fields + imm), then bit-unpack -----------
+    ok_fetch = (pc0 >= 0) & (pc0 < L.CODE_LIMIT) & ((pc0 & 3) == 0)
+    idx = jnp.clip(pc0 >> 2, 0, L.CODE_WORDS - 1)
+    w = img.packed[ids, idx]
+    imm = img.imm[ids, idx]
+    op = jnp.where(ok_fetch, (w & 63).astype(I32), I32(int(Op.NULLPAGE)))
+    rd = ((w >> 6) & 31).astype(I32)
+    rn = ((w >> 11) & 31).astype(I32)
+    rm = ((w >> 16) & 31).astype(I32)
+    sh = ((w >> 22) & 63).astype(I32)
+    cond = ((w >> 28) & 15).astype(I32)
+    sf = ((w >> 32) & 1).astype(I32)
+    sh64 = sh.astype(I64)
+
+    def m(*ops):
+        acc = op == I32(int(ops[0]))
+        for o in ops[1:]:
+            acc = acc | (op == I32(int(o)))
+        return acc & act
+
+    m_illegal, m_null = m(Op.ILLEGAL), m(Op.NULLPAGE)
+    m_movz, m_movk, m_movn = m(Op.MOVZ), m(Op.MOVK), m(Op.MOVN)
+    m_adrp, m_adr = m(Op.ADRP), m(Op.ADR)
+    m_addi, m_subi, m_subsi = m(Op.ADDI), m(Op.SUBI), m(Op.SUBSI)
+    m_addr, m_subr, m_subsr = m(Op.ADDR), m(Op.SUBR), m(Op.SUBSR)
+    m_orrr, m_andr, m_eorr, m_madd = m(Op.ORRR), m(Op.ANDR), m(Op.EORR), m(Op.MADD)
+    m_ldri, m_stri = m(Op.LDRI), m(Op.STRI)
+    m_ldrpost, m_strpre = m(Op.LDRPOST), m(Op.STRPRE)
+    m_stp, m_ldp, m_stppre, m_ldppost = m(Op.STP), m(Op.LDP), m(Op.STPPRE), m(Op.LDPPOST)
+    m_b, m_bl, m_br, m_blr, m_ret = m(Op.B), m(Op.BL), m(Op.BR), m(Op.BLR), m(Op.RET)
+    m_cbz, m_cbnz, m_bcond = m(Op.CBZ), m(Op.CBNZ), m(Op.BCOND)
+    m_svc, m_brk, m_nop = m(Op.SVC), m(Op.BRK), m(Op.NOP)
+    m_ldrb, m_strb, m_hlt, m_lsli = m(Op.LDRB), m(Op.STRB), m(Op.HLT), m(Op.LSLI)
+
+    # -- register reads (reg 31 is XZR for _rr, SP for _rsp) -----------------
+    zero = jnp.zeros((B,), I64)
+    ra = jnp.clip(imm, 0, 31).astype(I32)  # madd packs ra into imm
+    ridx = jnp.stack([jnp.minimum(rn, 30), jnp.minimum(rm, 30),
+                      jnp.minimum(rd, 30), jnp.minimum(ra, 30)],
+                     axis=1).astype(I32)
+    rvals = jnp.take_along_axis(regs0, ridx, axis=1)  # one gather, [B, 4]
+    rn_raw, rm_raw, rd_raw, ra_raw = (rvals[:, 0], rvals[:, 1],
+                                      rvals[:, 2], rvals[:, 3])
+    rn_rr = jnp.where(rn == 31, zero, rn_raw)
+    rn_rsp = jnp.where(rn == 31, sp0, rn_raw)
+    rm_rr = jnp.where(rm == 31, zero, rm_raw)
+    rd_rr = jnp.where(rd == 31, zero, rd_raw)
+    ra_rr = jnp.where(ra == 31, zero, ra_raw)
+    x0, x1, x2, x8 = regs0[:, 0], regs0[:, 1], regs0[:, 2], regs0[:, 8]
+
+    # -- memory addressing: <=2 word gathers, <=2 word scatters per step -----
+    post_index = m_ldrpost | m_ldppost
+    addr_a = jnp.where(post_index, rn_rsp, rn_rsp + imm)
+    byte_op = m_ldrb | m_strb
+    eff1 = jnp.where(byte_op, addr_a & ~jnp.int64(7), addr_a)
+    ok1 = jnp.where(byte_op,
+                    (addr_a >= L.DATA_BASE) & (addr_a < L.MEM_LIMIT),
+                    _mem_ok_v(eff1))
+    addr2 = addr_a + 8
+    ok2 = _mem_ok_v(addr2)
+    g1, g2 = _widx_v(eff1), _widx_v(addr2)
+    # Flat 1-D addressing: [B, MEM_WORDS] -> [B*MEM_WORDS] is a bitcast, and
+    # rank-1 gathers/scatters take XLA's fast in-place path on CPU.
+    mem_flat = mem0.reshape(-1)
+    lane_base = (lanes * L.MEM_WORDS).astype(I64)
+    # The word reads live behind a (vacuously true while any lane runs)
+    # batch-uniform cond.  Expressed as bare gathers, XLA's CPU pipeline
+    # wraps them in parallel-task `call`s whose buffer use its copy
+    # insertion cannot see through, and the whole [B, MEM_WORDS] carry gets
+    # defensively copied every step (~10x slowdown at fleet width 40);
+    # conditional branch reads keep the carry aliasable.
+    v1, v2 = lax.cond(
+        jnp.any(act),
+        lambda: (mem_flat[lane_base + g1], mem_flat[lane_base + g2]),
+        lambda: (jnp.zeros((B,), I64), jnp.zeros((B,), I64)))
+
+    byte_shift = (addr_a & 7) * 8
+    byte_val = (v1 >> byte_shift) & 0xFF
+    strb_word = ((v1 & ~(jnp.int64(0xFF) << byte_shift))
+                 | ((rd_rr & 0xFF) << byte_shift))
+
+    ld1 = jnp.where(ok1, v1, zero)   # ldri/ldrpost/ldp/ldppost first word
+    ld2 = jnp.where(ok2, v2, zero)   # ldp/ldppost second word
+
+    # -- ALU / mov / load value for the primary register write --------------
+    piece = imm << sh64
+    movk_v = (rd_rr & ~(jnp.int64(0xFFFF) << sh64)) | piece
+    mov_v = jnp.select([m_movz, m_movn, m_movk], [piece, ~piece, movk_v], zero)
+    mov_v = jnp.where(sf == 1, mov_v, mov_v & jnp.int64(0xFFFFFFFF))
+
+    slotA_val = jnp.select(
+        [m_movz | m_movk | m_movn,
+         m_adrp,
+         m_adr,
+         m_addi,
+         m_subi | m_subsi,
+         m_addr,
+         m_subr | m_subsr,
+         m_orrr,
+         m_andr,
+         m_eorr,
+         m_madd,
+         m_lsli,
+         m_ldri | m_ldrpost | m_ldp | m_ldppost,
+         m_ldrb,
+         m_bl | m_blr],
+        [mov_v,
+         (pc0 & ~jnp.int64(0xFFF)) + imm,
+         pc0 + imm,
+         rn_rsp + imm,
+         rn_rsp - imm,
+         rn_rr + rm_rr,
+         rn_rr - rm_rr,
+         rn_rr | rm_rr,
+         rn_rr & rm_rr,
+         rn_rr ^ rm_rr,
+         rn_rr * rm_rr + ra_rr,
+         rn_rr << sh64,
+         ld1,
+         byte_val,
+         pc0 + 4],
+        zero)
+    slotA_en = (m_movz | m_movk | m_movn | m_adrp | m_adr | m_addi | m_subi
+                | m_subsi | m_addr | m_subr | m_subsr | m_orrr | m_andr
+                | m_eorr | m_madd | m_lsli | m_ldri | m_ldrpost | m_ldp
+                | m_ldppost | m_ldrb | m_bl | m_blr)
+    slotA_idx = jnp.where(m_bl | m_blr, I32(30), rd)
+    slotA_sp = m_addi | m_subi  # _wsp ops: rd == 31 targets SP
+
+    # -- flags ---------------------------------------------------------------
+    subs = m_subsi | m_subsr
+    fa = jnp.where(m_subsi, rn_rsp, rn_rr)
+    fb = jnp.where(m_subsi, imm, rm_rr)
+    res = fa - fb
+    flag_n = (res < 0).astype(I64) * 8
+    flag_z = (res == 0).astype(I64) * 4
+    flag_c = (fa.astype(jnp.uint64) >= fb.astype(jnp.uint64)).astype(I64) * 2
+    flag_v = (((fa ^ fb) & (fa ^ res)) < 0).astype(I64)
+    nzcv = jnp.where(subs, flag_n + flag_z + flag_c + flag_v, nzcv0)
+
+    # -- syscalls (scalar effects; the I/O word loop is under a cond below) --
+    nr = x8
+    in_pt = s.ptrace != 0
+    sys_read = m_svc & (nr == L.SYS_READ)
+    sys_write = m_svc & (nr == L.SYS_WRITE)
+    sys_getpid = m_svc & (nr == L.SYS_GETPID)
+    sys_exit = m_svc & (nr == L.SYS_EXIT)
+    sys_sigret = m_svc & (nr == L.SYS_RT_SIGRETURN)
+    sys_openat = m_svc & (nr == L.SYS_OPENAT)
+    sys_close = m_svc & (nr == L.SYS_CLOSE)
+    sys_enosys = m_svc & ~(sys_read | sys_write | sys_getpid | sys_exit
+                           | sys_sigret | sys_openat | sys_close)
+
+    io_buf, io_n = x1, x2
+    io_k = jnp.clip(io_n >> 3, 0, _MAX_IO_WORDS)
+    io_ok = (_mem_ok_v(io_buf) & (io_buf + io_n <= L.MEM_LIMIT)
+             & (io_n >= 0) & ((io_n & 7) == 0))
+    io_start = _widx_v(io_buf)
+    io_do = (sys_read | sys_write) & io_ok
+
+    virt = in_pt & (s.virt_getpid != 0)
+    svc_x0 = jnp.select(
+        [sys_read | sys_write,
+         sys_getpid,
+         sys_openat,
+         sys_close,
+         sys_enosys],
+        [jnp.where(io_ok, io_n, jnp.int64(-14)),
+         jnp.where(virt, jnp.int64(L.VIRT_PID), s.pid),
+         jnp.full((B,), 3, I64),
+         zero,
+         jnp.full((B,), -38, I64)],
+        zero)
+    svc_x0_en = m_svc & ~(sys_exit | sys_sigret)
+
+    # -- signal delivery / sigreturn (static 34-word frame window) -----------
+    dlv = m_illegal | m_brk
+    can_sig = dlv & (s.sig_handler != 0) & (s.in_signal == 0)
+    trap_fail = dlv & ~can_sig
+    signo = jnp.where(m_brk, jnp.int64(L.SIGTRAP), jnp.int64(L.SIGILL))
+    frame_out = jnp.concatenate(
+        [regs0, sp0[:, None], pc0[:, None], nzcv0[:, None]], axis=1)
+
+    # -- memory writes -------------------------------------------------------
+    # One merged scatter for both store slots.  Disabled / faulting writes
+    # are parked at an out-of-bounds index and dropped (the scalar engine
+    # writes the old value back — same result, no masking gather needed).
+    # When a pair store clip-aliases (base in range, base+8 not), slot 2 is
+    # dropped, exactly matching the scalar sequential-store semantics; when
+    # both slots land, their indices are distinct by construction.
+    oob = jnp.int64(L.MEM_WORDS * B)
+    park = oob + jnp.arange(2 * B, dtype=I64)  # distinct OOB slots per entry
+    st1_en = (m_stri | m_strpre | m_stp | m_stppre | m_strb) & ok1
+    st2_en = (m_stp | m_stppre) & ok2
+    st_idx = jnp.concatenate([jnp.where(st1_en, lane_base + g1, park[:B]),
+                              jnp.where(st2_en, lane_base + g2, park[B:])])
+    st_val = jnp.concatenate([jnp.where(byte_op, strb_word, rd_rr), rm_rr])
+    # indices are genuinely unique: live pair slots differ by construction,
+    # parked slots each get their own out-of-bounds id (dropped)
+    mem = mem_flat.at[st_idx].set(st_val, mode="drop",
+                                  unique_indices=True).reshape(B, L.MEM_WORDS)
+
+    # Sigframe push is rare (only brk/illegal on a lane with a handler):
+    # keep the 34-word window write behind a batch-uniform cond.
+    def push_frames(mm):
+        cur = mm[:, _SIGFRAME_IDX:_SIGFRAME_IDX + SIGFRAME_WORDS]
+        return mm.at[:, _SIGFRAME_IDX:_SIGFRAME_IDX + SIGFRAME_WORDS].set(
+            jnp.where(can_sig[:, None], frame_out, cur))
+
+    mem = lax.cond(jnp.any(can_sig), push_frames, lambda mm: mm, mem)
+
+    # Syscall I/O fill/sum.  Typically only a lane or two is inside
+    # read/write on any given step, so iterate over the io lanes (a bare
+    # while_loop: zero iterations on no-io steps, no cond wrapper — nesting
+    # the loop under a lax.cond makes XLA copy the whole memory defensively)
+    # and stream each lane's payload through contiguous 512-word dynamic
+    # slices of its own region.  Cost is proportional to the words actually
+    # transferred, not fleet-width x window (a [B, W] masked scatter per
+    # event throttled an 80-lane mixed census to 0.5x scalar).
+    W_IO = 512
+    _woff = jnp.arange(W_IO, dtype=I64)
+
+    def io_lane_body(carry):
+        mf, sums, rem = carry
+        b = jnp.argmax(rem)               # next io lane
+        k_b = io_k[b]
+        start_b = lane_base[b] + io_start[b]
+        rd_b = sys_read[b]
+        off_b = s.in_off[b]
+
+        def win_body(c, inner):
+            mf2, acc = inner
+            base = start_b + c * W_IO     # dynamic_slice clamps at the end
+            # conditional read (vacuously true: c < nwin inside the loop):
+            # as at step level, a bare read whose value outlives the update
+            # below would make XLA copy the whole flat memory every window;
+            # branch-wrapped reads keep it aliasable
+            cur = lax.cond(
+                c < nwin,
+                lambda: lax.dynamic_slice(mf2, (base,), (W_IO,)),
+                lambda: jnp.zeros((W_IO,), I64))
+            pos = jnp.clip(base, 0, B * L.MEM_WORDS - W_IO) + _woff
+            within = (pos >= start_b + c * W_IO) & (pos < start_b + k_b)
+            fill = off_b + (pos - start_b) * 8
+            new = jnp.where(within & rd_b, fill, cur)
+            mf2 = lax.dynamic_update_slice(mf2, new, (base,))
+            acc = acc + jnp.sum(jnp.where(within & ~rd_b, cur, jnp.int64(0)))
+            return mf2, acc
+
+        nwin = (k_b + W_IO - 1) // W_IO
+        mf, acc = lax.fori_loop(jnp.int64(0), nwin, win_body,
+                                (mf, jnp.int64(0)))
+        sums = sums.at[b].set(acc)
+        rem = rem.at[b].set(False)
+        return mf, sums, rem
+
+    mem_io, io_sum, _ = lax.while_loop(
+        lambda c: jnp.any(c[2]), io_lane_body,
+        (mem.reshape(-1), zero, io_do))
+    mem = mem_io.reshape(B, L.MEM_WORDS)
+
+    # Sigreturn frame read — from the FINAL memory, after all writes.  A
+    # sigreturn lane performs no store/push/I-O in the same step, so its row
+    # is untouched and this equals the scalar engine's pre-handler read; and
+    # because no write follows, memory's liveness is not extended across a
+    # writer, which would force XLA to copy the whole [B, MEM_WORDS] buffer
+    # every step (measured ~15x slowdown).  Rare op => batch-uniform cond;
+    # the zeros fallback is safe: every consumer is masked by sys_sigret.
+    frame_in = lax.cond(
+        jnp.any(sys_sigret),
+        lambda: mem[:, _SIGFRAME_IDX:_SIGFRAME_IDX + SIGFRAME_WORDS],
+        lambda: jnp.zeros((B, SIGFRAME_WORDS), I64))
+
+    # -- register writes (slot order mirrors the scalar handler order) ------
+    col = jnp.arange(31)[None, :]
+
+    def apply_slot(regs, en, idxv, val, sp, sp_ok):
+        hit = en[:, None] & (idxv[:, None] == col)  # idx 31 never matches
+        regs = jnp.where(hit, val[:, None], regs)
+        sp = jnp.where(en & sp_ok & (idxv == 31), val, sp)
+        return regs, sp
+
+    regs, sp = apply_slot(regs0, slotA_en, slotA_idx, slotA_val, sp0, slotA_sp)
+    ldp_like = m_ldp | m_ldppost
+    regs, sp = apply_slot(regs, ldp_like, rm, ld2, sp,
+                          jnp.zeros((B,), bool))
+    wb = m_ldrpost | m_strpre | m_stppre | m_ldppost
+    regs, sp = apply_slot(regs, wb, rn, rn_rsp + imm, sp,
+                          jnp.ones((B,), bool))
+
+    regs = regs.at[:, 0].set(jnp.where(svc_x0_en, svc_x0, regs[:, 0]))
+    regs = regs.at[:, 0].set(jnp.where(can_sig, signo, regs[:, 0]))
+    regs = regs.at[:, 1].set(jnp.where(can_sig,
+                                       jnp.int64(L.SIGFRAME), regs[:, 1]))
+    sp = jnp.where(can_sig, jnp.int64(L.SIGSTACK_TOP), sp)
+
+    regs = jnp.where(sys_sigret[:, None], frame_in[:, :31], regs)
+    sp = jnp.where(sys_sigret, frame_in[:, 31], sp)
+    nzcv = jnp.where(sys_sigret, frame_in[:, 33], nzcv)
+
+    # -- program counter -----------------------------------------------------
+    br_target = pc0 + imm
+    pc4 = pc0 + 4
+    taken_bc = _cond_holds_v(nzcv0, cond)
+    svc_pc = jnp.where(sys_exit, pc0,
+                       jnp.where(sys_sigret, frame_in[:, 32] + 4, pc4))
+    pc_new = jnp.select(
+        [m_b | m_bl,
+         m_br | m_blr | m_ret,
+         m_cbz,
+         m_cbnz,
+         m_bcond,
+         m_null | m_hlt,
+         dlv,
+         m_svc],
+        [br_target,
+         rn_rr,
+         jnp.where(rd_rr == 0, br_target, pc4),
+         jnp.where(rd_rr != 0, br_target, pc4),
+         jnp.where(taken_bc, br_target, pc4),
+         pc0,
+         jnp.where(can_sig, s.sig_handler, pc0),
+         svc_pc],
+        pc4)
+    pc = jnp.where(act, pc_new, pc0)
+
+    # -- faults / halts ------------------------------------------------------
+    bad_single = (m_ldri | m_stri | m_ldrpost | m_strpre) & ~ok1
+    bad_pair = (m_stp | m_ldp | m_stppre | m_ldppost) & ~(ok1 & ok2)
+    bad_byte = byte_op & ~ok1
+    mem_bad = bad_single | bad_pair | bad_byte
+
+    halted = s.halted
+    halted = jnp.where(m_null, jnp.int64(HALT_SEGV), halted)
+    halted = jnp.where(mem_bad, jnp.int64(HALT_BADMEM), halted)
+    halted = jnp.where(m_hlt | sys_exit, jnp.int64(HALT_EXIT), halted)
+    halted = jnp.where(trap_fail, jnp.int64(HALT_TRAP), halted)
+    exit_code = jnp.where(m_hlt | sys_exit, x0, s.exit_code)
+    fault_pc = jnp.where(m_null | mem_bad | trap_fail, pc0, s.fault_pc)
+
+    # -- bookkeeping ---------------------------------------------------------
+    cycles = s.cycles + jnp.where(act, COST_TABLE[op], zero)
+    cycles = cycles + jnp.where(m_svc, jnp.int64(cm.KERNEL_CROSS), zero)
+    cycles = cycles + jnp.where(m_svc & in_pt,
+                                jnp.int64(2 * cm.PTRACE_STOP), zero)
+    cycles = cycles + jnp.where(sys_read | sys_write,
+                                io_n // cm.IO_BYTES_PER_CYCLE, zero)
+    cycles = cycles + jnp.where(can_sig,
+                                jnp.int64(cm.SIGNAL_DELIVERY), zero)
+    icount = s.icount + jnp.where(act, jnp.int64(1), zero)
+    hook_count = s.hook_count + jnp.where(m_svc & in_pt, jnp.int64(1), zero)
+    in_off = s.in_off + jnp.where(sys_read & io_ok, io_n, zero)
+    out_count = s.out_count + jnp.where(sys_write & io_ok, io_n, zero)
+    out_sum = s.out_sum + jnp.where(sys_write & io_ok, io_sum, zero)
+    in_signal = jnp.where(can_sig, jnp.int64(1),
+                          jnp.where(sys_sigret, jnp.int64(0), s.in_signal))
+
+    return s._replace(
+        regs=regs, sp=sp, pc=pc, nzcv=nzcv, mem=mem, cycles=cycles,
+        icount=icount, halted=halted, exit_code=exit_code, fault_pc=fault_pc,
+        in_signal=in_signal, hook_count=hook_count, in_off=in_off,
+        out_count=out_count, out_sum=out_sum)
+
+
+# ---------------------------------------------------------------------------
+# the fleet driver: chunked while_loop
+# ---------------------------------------------------------------------------
+
+def _alive(s: MachineState):
+    return (s.halted == RUNNING) & (s.icount < s.fuel)
+
+
+def _run_fleet(img: FleetImages, ids: jnp.ndarray, s: MachineState,
+               chunk: int) -> MachineState:
+    def scan_body(carry, _):
+        return fleet_step(img, ids, carry), None
+
+    def body(ss):
+        ss, _ = lax.scan(scan_body, ss, None, length=chunk)
+        return ss
+
+    s = lax.while_loop(lambda ss: jnp.any(_alive(ss)), body, s)
+    return s._replace(halted=jnp.where(
+        (s.halted == RUNNING) & (s.icount >= s.fuel),
+        jnp.int64(HALT_FUEL), s.halted))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_run(chunk: int):
+    return jax.jit(functools.partial(_run_fleet, chunk=chunk),
+                   donate_argnums=(2,))
+
+
+def run_fleet(imgs, states, img_ids=None, *, chunk: int = DEFAULT_CHUNK,
+              shard: bool = False) -> MachineState:
+    """Run every lane to halt (or out of fuel) in one device dispatch.
+
+    ``imgs``: a ``DecodedImage`` with leaves [G, CODE_WORDS] (or a list of
+    scalar images, which is stacked).  ``states``: a ``MachineState`` with
+    leaves [B, ...] (or a list of scalar states).  ``img_ids`` maps lanes to
+    image rows; defaults to the identity (then G must equal B).
+
+    ``chunk`` is the inner ``lax.scan`` length: loop-condition evaluation
+    happens once per ``chunk`` steps.  Results are invariant to ``chunk``
+    (only dispatch count changes).  ``shard=True`` lane-partitions the fleet
+    across available devices when the lane count divides the device count.
+    """
+    imgs = pack_images(imgs)
+    if not isinstance(states, MachineState):  # list/tuple of scalar states
+        states = stack_states(states)
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    n_lanes = int(states.pc.shape[0])
+    if img_ids is None:
+        if int(imgs.packed.shape[0]) != n_lanes:
+            raise ValueError("img_ids required when #images != #lanes")
+        img_ids = jnp.arange(n_lanes, dtype=I32)
+    else:
+        img_ids = jnp.asarray(img_ids, I32)
+
+    if shard:
+        from repro.parallel.sharding import shard_fleet
+        imgs, img_ids, states = shard_fleet(imgs, img_ids, states)
+
+    out = _jitted_run(int(chunk))(imgs, img_ids, states)
+    return jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
+
+
+# ---------------------------------------------------------------------------
+# bulk host-side readback
+# ---------------------------------------------------------------------------
+
+def fleet_counters(states: MachineState) -> np.ndarray:
+    """Per-lane hook-invocation totals in one device transfer per array
+    (COUNTER word + ptrace-side hook_count), not one sync per lane."""
+    counter = np.asarray(states.mem[:, _COUNTER_IDX])
+    return counter + np.asarray(states.hook_count)
+
+
+def fleet_summary(states: MachineState) -> List[dict]:
+    """Host-side per-lane result rows with a single device->host transfer
+    per field (the scalar path syncs once per scalar per lane)."""
+    fields = {
+        "halted": np.asarray(states.halted),
+        "exit_code": np.asarray(states.exit_code),
+        "cycles": np.asarray(states.cycles),
+        "icount": np.asarray(states.icount),
+        "out_count": np.asarray(states.out_count),
+        "out_sum": np.asarray(states.out_sum),
+    }
+    hooks = fleet_counters(states)
+    n = fields["halted"].shape[0]
+    return [dict({k: int(v[i]) for k, v in fields.items()},
+                 hooks=int(hooks[i])) for i in range(n)]

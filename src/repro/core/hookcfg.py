@@ -43,6 +43,10 @@ class HookConfig:
     use_brk: bool = True     # brk vs illegal instruction for R3 sites
     backward_window: int = 20  # paper: "the preceding 20 instructions"
     max_l1_slots: int = 3840   # paper's slot budget; lower it to force R2
+    # Fleet engine: steps per inner lax.scan chunk.  Loop-condition checks
+    # (and with them host round-trips) happen once per chunk; results are
+    # invariant to this value, only dispatch count changes.
+    fleet_chunk: int = 8
     pinned: List[PinnedSite] = dataclasses.field(default_factory=list)
 
     # -- persistence -----------------------------------------------------------

@@ -615,6 +615,11 @@ def _run(img: DecodedImage, s: MachineState) -> MachineState:
         (s.halted == RUNNING) & (s.icount >= s.fuel), jnp.int64(HALT_FUEL), s.halted))
 
 
+# The scalar entry point deliberately does NOT donate: callers (tests,
+# completeness re-exec) reuse their input state across runs, and
+# ``make_state`` aliases one zero scalar across many fields — donation would
+# invalidate both.  The fleet entry points (fleet.run_fleet) donate instead:
+# stacked lane states are freshly materialised, single-consumer buffers.
 run = jax.jit(_run)
 
 
@@ -629,6 +634,18 @@ def run_image(img: DecodedImage, state: MachineState) -> MachineState:
 def mem_read(state: MachineState, addr: int) -> int:
     assert addr % 8 == 0 and L.DATA_BASE <= addr < L.MEM_LIMIT
     return int(state.mem[(addr - L.DATA_BASE) // 8])
+
+
+def mem_read_block(state: MachineState, addr: int, nwords: int) -> np.ndarray:
+    """Read ``nwords`` consecutive words in ONE device->host transfer.
+
+    ``mem_read`` in a loop forces a device sync per word; census and
+    benchmark code reading counters/buffers should use this instead.
+    """
+    assert addr % 8 == 0 and L.DATA_BASE <= addr < L.MEM_LIMIT
+    i0 = (addr - L.DATA_BASE) // 8
+    assert nwords >= 0 and i0 + nwords <= L.MEM_WORDS
+    return np.asarray(state.mem[i0:i0 + nwords])
 
 
 def mem_write(state: MachineState, addr: int, value: int) -> MachineState:

@@ -131,6 +131,95 @@ def io_bandwidth(n: int = 128, nbytes: int = 4096, work: int = 0) -> Asm:
     return a
 
 
+# -- parameterised variants (fleet censuses) ---------------------------------
+#
+# Same workloads, but the iteration count comes from x19 at entry instead of
+# being baked into the text as a mov_imm48.  Every iteration-count lane of a
+# census then shares ONE image per (mechanism, workload) — the decode tables
+# deduplicate (pack_fleet), exactly like a production fleet running many
+# processes of the same binary with different arguments.  Seed x19 via
+# ``run_prepared(..., regs={19: n})`` / ``pack_fleet(..., regs=[...])``.
+
+def getpid_loop_param() -> Asm:
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.label("loop")
+    a.bl_to("libc.so:getpid")
+    a.emit(isa.mov_r(20, 0))
+    a.emit(isa.subsi(19, 19, 1))
+    a.b_to("loop", cond="ne")
+    a.emit(isa.movz(10, L.SCRATCH & 0xFFFF), isa.movk(10, L.SCRATCH >> 16, 1))
+    a.emit(isa.str_imm(20, 10))
+    _exit0(a)
+    return a
+
+
+def read_loop_param(nbytes: int = 1024) -> Asm:
+    assert nbytes % 8 == 0
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(*isa.mov_imm48(21, L.HEAP_BASE))
+    a.emit(*isa.mov_imm48(22, nbytes))
+    a.label("loop")
+    a.emit(isa.movz(0, 3))
+    a.emit(isa.mov_r(1, 21))
+    a.emit(isa.mov_r(2, 22))
+    a.bl_to("libc.so:read")
+    a.emit(isa.subsi(19, 19, 1))
+    a.b_to("loop", cond="ne")
+    a.emit(isa.movz(0, 1))
+    a.emit(isa.mov_r(1, 21))
+    a.emit(isa.mov_r(2, 22))
+    a.bl_to("libc.so:write")
+    _exit0(a)
+    return a
+
+
+def mixed_ops_param(nbytes: int = 512) -> Asm:
+    assert nbytes % 8 == 0
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(*isa.mov_imm48(21, L.HEAP_BASE))
+    a.label("loop")
+    a.emit(isa.movz(0, 0), isa.movz(1, 0), isa.movz(2, 0))
+    a.bl_to("libc.so:openat")
+    a.emit(isa.mov_r(23, 0))
+    a.emit(isa.mov_r(0, 23))
+    a.emit(isa.mov_r(1, 21))
+    a.emit(*isa.mov_imm48(2, nbytes))
+    a.bl_to("libc.so:read")
+    a.emit(isa.mov_r(0, 23))
+    a.emit(isa.mov_r(1, 21))
+    a.emit(*isa.mov_imm48(2, nbytes))
+    a.bl_to("libc.so:write")
+    a.emit(isa.mov_r(0, 23))
+    a.bl_to("libc.so:close")
+    a.emit(isa.subsi(19, 19, 1))
+    a.b_to("loop", cond="ne")
+    _exit0(a)
+    return a
+
+
+def io_bandwidth_param(nbytes: int = 4096) -> Asm:
+    assert nbytes % 8 == 0
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(*isa.mov_imm48(21, L.HEAP_BASE))
+    a.label("loop")
+    a.emit(isa.movz(0, 3))
+    a.emit(isa.mov_r(1, 21))
+    a.emit(*isa.mov_imm48(2, nbytes))
+    a.bl_to("libc.so:read")
+    a.emit(isa.movz(0, 1))
+    a.emit(isa.mov_r(1, 21))
+    a.emit(*isa.mov_imm48(2, nbytes))
+    a.bl_to("libc.so:write")
+    a.emit(isa.subsi(19, 19, 1))
+    a.b_to("loop", cond="ne")
+    _exit0(a)
+    return a
+
+
 def indirect_svc(n: int = 2) -> Asm:
     """Figure 4: ``blr`` straight onto the (rewritten) svc inside getpid.
 

@@ -11,10 +11,13 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Callable, Dict, Optional
+import hashlib
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
+from . import fleet as F
 from . import layout as L
 from . import machine as M
 from .hookcfg import HookConfig
@@ -41,6 +44,7 @@ class PreparedProcess:
     mechanism: Mechanism
     report: Optional[RewriteReport]
     virtualize: bool
+    cfg: Optional[HookConfig] = None
 
 
 AppBuilder = Callable[[], Asm]
@@ -77,20 +81,90 @@ def prepare(app: Asm, mechanism: Mechanism, *,
     return PreparedProcess(
         image=image, decoded=decoded, entry=image.sym("app:main"),
         sig_handler=sig_handler, mechanism=mechanism, report=report,
-        virtualize=virtualize)
+        virtualize=virtualize, cfg=cfg)
 
 
-def run_prepared(pp: PreparedProcess, *, fuel: int = 2_000_000) -> M.MachineState:
+def initial_state(pp: PreparedProcess, *, fuel: int = 2_000_000,
+                  regs: Optional[Dict[int, int]] = None) -> M.MachineState:
+    """The machine state ``run_prepared`` starts from (also the per-lane
+    initial state of a fleet).
+
+    ``regs`` seeds registers at entry ({index: value}) — how parameterised
+    workloads (``programs.*_param``) receive their arguments, letting many
+    fleet lanes share one image (argv for the simulated process).
+    """
     st = M.make_state(pp.entry, fuel=fuel)
-    import jax.numpy as jnp
-    st = st._replace(
+    if regs:
+        r = st.regs
+        for i, v in regs.items():
+            assert 0 <= i <= 30, i
+            r = r.at[i].set(jnp.int64(v))
+        st = st._replace(regs=r)
+    return st._replace(
         sig_handler=jnp.int64(pp.sig_handler),
         ptrace=jnp.int64(1 if pp.mechanism is Mechanism.PTRACE else 0),
-        virt_getpid=jnp.int64(1 if (pp.mechanism is Mechanism.PTRACE and pp.virtualize) else 0),
+        virt_getpid=jnp.int64(
+            1 if (pp.mechanism is Mechanism.PTRACE and pp.virtualize) else 0),
     )
-    return M.run_image(pp.decoded, st)
+
+
+def run_prepared(pp: PreparedProcess, *, fuel: int = 2_000_000,
+                 regs: Optional[Dict[int, int]] = None) -> M.MachineState:
+    return M.run_image(pp.decoded, initial_state(pp, fuel=fuel, regs=regs))
+
+
+def pack_fleet(pps: Sequence[PreparedProcess], *,
+               fuel: int = 2_000_000,
+               regs: Optional[Sequence[Optional[Dict[int, int]]]] = None
+               ) -> Tuple[M.DecodedImage, np.ndarray, M.MachineState]:
+    """Stack prepared processes into (images, img_ids, states) for
+    :func:`repro.core.fleet.run_fleet`.
+
+    Decode tables are deduplicated by image content, so a census sweeping
+    iteration counts or mechanisms over shared binaries ships each distinct
+    image to the device once.
+    """
+    digests: Dict[bytes, int] = {}
+    uniq: List[M.DecodedImage] = []
+    ids = np.zeros(len(pps), np.int32)
+    for i, pp in enumerate(pps):
+        d = hashlib.sha1(np.ascontiguousarray(pp.image.words).tobytes()).digest()
+        if d not in digests:
+            digests[d] = len(uniq)
+            uniq.append(pp.decoded)
+        ids[i] = digests[d]
+    imgs = F.pack_images(F.stack_images(uniq))
+    if regs is None:
+        regs = [None] * len(pps)
+    states = F.stack_states([initial_state(pp, fuel=fuel, regs=rg)
+                             for pp, rg in zip(pps, regs)])
+    return imgs, ids, states
+
+
+def run_fleet_prepared(pps: Sequence[PreparedProcess], *,
+                       fuel: int = 2_000_000,
+                       chunk: Optional[int] = None,
+                       regs: Optional[Sequence[Optional[Dict[int, int]]]] = None,
+                       shard: bool = False) -> M.MachineState:
+    """Run every prepared process to completion in ONE device dispatch.
+
+    ``chunk`` defaults to the first process's ``HookConfig.fleet_chunk``.
+    Lane i of the returned batched state is bit-identical to
+    ``run_prepared(pps[i], fuel=fuel, regs=regs[i])``.
+    """
+    imgs, ids, states = pack_fleet(pps, fuel=fuel, regs=regs)
+    if chunk is None:
+        cfg = next((pp.cfg for pp in pps if pp.cfg is not None), None)
+        chunk = cfg.fleet_chunk if cfg is not None else F.DEFAULT_CHUNK
+    return F.run_fleet(imgs, states, ids, chunk=chunk, shard=shard)
 
 
 def hook_invocations(state: M.MachineState) -> int:
-    """Total hook executions across mechanisms (COUNTER word + ptrace count)."""
-    return M.mem_read(state, L.COUNTER) + int(state.hook_count)
+    """Total hook executions across mechanisms (COUNTER word + ptrace count).
+
+    One bulk readback instead of one device sync per field.
+    """
+    if state.mem.ndim == 2:  # batched fleet state: sum over lanes
+        return int(F.fleet_counters(state).sum())
+    counter = int(M.mem_read_block(state, L.COUNTER, 1)[0])
+    return counter + int(state.hook_count)

@@ -33,17 +33,24 @@ import jax
 import jax.numpy as jnp
 from jax._src.lax import parallel as _lp
 
-# The syscall table of this world.
+# The syscall table of this world.  Primitive names vary across jax
+# versions (e.g. ``psum_invariant_p`` only exists where shard_map traces
+# psum through it) — bind whatever this jax exposes and skip the rest, the
+# same way the scanner treats unknown collectives as out-of-scope sites.
+_PRIM_ATTRS = {
+    "psum": "psum_p",
+    "psum_invariant": "psum_invariant_p",
+    "all_gather": "all_gather_p",
+    "all_gather_invariant": "all_gather_invariant_p",
+    "reduce_scatter": "reduce_scatter_p",
+    "all_to_all": "all_to_all_p",
+    "ppermute": "ppermute_p",
+    "pmax": "pmax_p",
+    "pmin": "pmin_p",
+}
 COLLECTIVE_PRIMS = {
-    "psum": _lp.psum_p,
-    "psum_invariant": _lp.psum_invariant_p,
-    "all_gather": _lp.all_gather_p,
-    "all_gather_invariant": _lp.all_gather_invariant_p,
-    "reduce_scatter": _lp.reduce_scatter_p,
-    "all_to_all": _lp.all_to_all_p,
-    "ppermute": _lp.ppermute_p,
-    "pmax": _lp.pmax_p,
-    "pmin": _lp.pmin_p,
+    name: getattr(_lp, attr)
+    for name, attr in _PRIM_ATTRS.items() if hasattr(_lp, attr)
 }
 
 # Handler signature: (prim_name, args, params, do_original) -> outputs

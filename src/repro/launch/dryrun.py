@@ -33,7 +33,7 @@ from repro.configs import ARCHS, applicable_shapes, get_config, get_smoke, shape
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.launch import specs as sp
 from repro.launch.hloanalysis import HW, analyze, roofline_terms
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_context
 from repro.train.step import make_serve_steps, make_train_step
 
 HBM_PER_CHIP = 16 * 1024 ** 3  # v5e
@@ -66,7 +66,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     set_sharding_mode(run.sharding_mode)
     mesh = make_production_mesh(multi_pod=multi_pod)
 
-    with jax.sharding.set_mesh(mesh):
+    with mesh_context(mesh):
         if shape.kind == "train":
             state_sds, batch_sds, _ = sp.train_inputs(cfg, run, shape, mesh)
             step = make_train_step(cfg, run)
@@ -104,19 +104,22 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax returns one dict per device
+        cost = cost[0] if cost else {}
     stats = analyze(compiled.as_text())
     terms = roofline_terms(stats)
     model_fl = model_flops_per_step(cfg, shape) / chips  # per device
 
     live_bytes = int(mem.argument_size_in_bytes + mem.temp_size_in_bytes
                      + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    # older jaxlib has no peak_memory_in_bytes on CompiledMemoryStats
+    peak_bytes = int(getattr(mem, "peak_memory_in_bytes", 0) or live_bytes)
     cell.update(
         status="OK",
         compile_s=round(time.time() - t0, 1),
         bytes_per_device=live_bytes,
-        peak_bytes_per_device=int(mem.peak_memory_in_bytes),
-        fits_hbm=bool(max(live_bytes, int(mem.peak_memory_in_bytes))
-                      <= HBM_PER_CHIP),
+        peak_bytes_per_device=peak_bytes,
+        fits_hbm=bool(max(live_bytes, peak_bytes) <= HBM_PER_CHIP),
         argument_bytes=int(mem.argument_size_in_bytes),
         temp_bytes=int(mem.temp_size_in_bytes),
         cost_analysis_flops=float(cost.get("flops", 0.0)),

@@ -53,6 +53,16 @@ def abstract_mesh():
             return None
         return m
     except Exception:
+        pass
+    # older jax: no abstract-mesh context; fall back to the thread-resources
+    # mesh installed by ``with mesh:`` / launch.mesh.mesh_context
+    try:
+        from jax._src import mesh as _mesh_lib
+        pm = _mesh_lib.thread_resources.env.physical_mesh
+        if pm is None or pm.empty or not pm.axis_names:
+            return None
+        return pm.abstract_mesh
+    except Exception:
         return None
 
 
@@ -205,6 +215,48 @@ def param_specs(params) -> "jax.tree_util.PyTreeDef":
         return _apply_mode(_spec_for(prefix, np.ndim(tree)))
 
     return walk(params, "")
+
+
+# ---------------------------------------------------------------------------
+# Fleet lane partitioning (ASC-Hook fleet engine)
+# ---------------------------------------------------------------------------
+
+LANE_AXIS = "lanes"
+
+
+def fleet_mesh(devices=None):
+    """1-D mesh over the local devices for lane-parallel fleet execution."""
+    devices = list(devices if devices is not None else jax.devices())
+    return jax.sharding.Mesh(np.array(devices), (LANE_AXIS,))
+
+
+def lane_sharding(mesh, extra_dims: int = 0):
+    """NamedSharding that splits the leading (lane) axis over the mesh."""
+    return jax.sharding.NamedSharding(
+        mesh, P(LANE_AXIS, *([None] * extra_dims)))
+
+
+def shard_fleet(imgs, img_ids, states, mesh=None):
+    """Partition a fleet across devices: states/ids split along lanes, the
+    deduplicated decode tables replicated.
+
+    No-op (returns inputs unchanged) on a single device or when the device
+    count does not divide the lane count — the fleet then runs fully
+    replicated, which is always correct.
+    """
+    mesh = mesh or fleet_mesh()
+    ndev = int(np.prod(mesh.devices.shape))
+    n_lanes = int(states.pc.shape[0])
+    if ndev <= 1 or n_lanes % ndev != 0:
+        return imgs, img_ids, states
+
+    replicate = jax.sharding.NamedSharding(mesh, P())
+    imgs = jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, replicate), imgs)
+    img_ids = jax.device_put(img_ids, lane_sharding(mesh))
+    states = jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, lane_sharding(mesh, x.ndim - 1)), states)
+    return imgs, img_ids, states
 
 
 def cache_spec(cfg, cache) -> object:

@@ -1,0 +1,4 @@
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "smoke: fast fleet-engine smoke tests (seconds, not minutes)")

@@ -1,6 +1,6 @@
 """ISA codec: encode/decode roundtrips (property-based) + assembler."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core import isa
 from repro.core.isa import Op

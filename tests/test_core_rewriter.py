@@ -1,7 +1,7 @@
 """Rewriter + trampolines: classification, transparency, mechanism parity."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 import jax.numpy as jnp
 

@@ -103,8 +103,8 @@ def test_elastic_reshard_restore(tmp_path):
     mgr = CheckpointManager(tmp_path, keep=1)
     state = {"w": jnp.arange(16.0).reshape(4, 4)}
     mgr.save(1, state)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh as _compat_mesh
+    mesh = _compat_mesh((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     step, restored, _ = mgr.restore_latest(state, sharding_tree=sh)
     assert restored["w"].sharding == sh["w"]

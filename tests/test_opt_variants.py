@@ -98,7 +98,7 @@ def test_param_wire_bf16_close_to_f32():
 def test_zero3_mode_lowers_and_matches_on_one_device():
     """zero3 sharding rules are semantics-preserving (trivially on 1 device,
     but this exercises the full rules+constraints code path end to end)."""
-    from repro.launch.mesh import make_test_mesh
+    from repro.launch.mesh import make_test_mesh, mesh_context
     from repro.parallel import sharding as shd
     cfg = get_smoke("gemma-7b")
     batch = batch_for(cfg)
@@ -106,10 +106,10 @@ def test_zero3_mode_lowers_and_matches_on_one_device():
     state = init_train_state(cfg, run, jax.random.PRNGKey(0))
     mesh = make_test_mesh(1, 1)
     try:
-        with jax.sharding.set_mesh(mesh):
+        with mesh_context(mesh):
             _, m2d = jax.jit(make_train_step(cfg, run))(state, batch)
         shd.set_sharding_mode("zero3")
-        with jax.sharding.set_mesh(mesh):
+        with mesh_context(mesh):
             _, mz3 = jax.jit(make_train_step(cfg, run))(state, batch)
     finally:
         shd.set_sharding_mode("2d")

@@ -85,9 +85,9 @@ def test_constrain_noop_without_mesh():
 
 
 def test_head_axes_fallbacks():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    with jax.sharding.set_mesh(mesh):
+    from repro.launch.mesh import make_test_mesh, mesh_context
+    mesh = make_test_mesh(data=1, model=1)
+    with mesh_context(mesh):
         assert shd.head_axes(16, 128) == (None, None)  # tp==1 -> no sharding
 
 
