@@ -9,6 +9,9 @@
   * collective_hook_overhead — one-dispatch mechanisms x programs x
                                iteration-counts census; scalar vs fleet
                                steps/sec (the perf-tracking suite)
+  * serving_throughput       — continuous batching vs drain-the-fleet on a
+                               mixed-length workload (+ fleet-native C3);
+                               writes BENCH_serving.json itself
   * roofline                 — dry-run roofline table (§Roofline)
 
 Besides the CSV stream, writes ``benchmarks/results/BENCH_fleet.json`` with
@@ -22,7 +25,7 @@ import sys
 import traceback
 
 SUITES = ["hook_overhead", "svc_census", "app_bandwidth", "collective_census",
-          "collective_hook_overhead", "roofline"]
+          "collective_hook_overhead", "serving_throughput", "roofline"]
 
 BENCH_PATH = pathlib.Path(__file__).parent / "results" / "BENCH_fleet.json"
 

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# CI-style gate: tier-1, the smoke + serving tiers, and a seconds-long
+# serving-throughput sanity pass on 2 forced host devices (exercises the
+# lane-partitioned / sharded path).  See tests/README.md for the tiers.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 =="
+python -m pytest -x -q
+
+echo "== smoke tier =="
+python -m pytest -q -m smoke
+
+echo "== serving tier (heavier example counts) =="
+ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m serving
+
+echo "== serving throughput sanity (sharded, 2 host devices) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
+    python -m benchmarks.serving_throughput --quick --shard
+
+echo "check.sh: all green"

@@ -8,29 +8,33 @@ Public surface::
     )
 """
 from . import costmodel, fleet, isa, layout, programs
-from .completeness import C3Event, diagnose_c3, run_with_c3
-from .fleet import (fleet_counters, fleet_step, fleet_summary, run_fleet,
-                    stack_images, stack_states, unstack_state)
+from .completeness import (C3Event, diagnose_c3, diagnose_c3_fleet,
+                           run_with_c3)
+from .fleet import (admit_lanes, fleet_counters, fleet_step, fleet_summary,
+                    run_fleet, run_fleet_span, set_image_row, stack_images,
+                    stack_states, unstack_state)
 from .hookcfg import HookConfig, PinnedSite
 from .image import Image, build_minilibc, build_process
 from .machine import (HALT_EXIT, HALT_FUEL, HALT_SEGV, HALT_TRAP,
                       DecodedImage, MachineState, decode_image, make_state,
                       mem_read, mem_read_block, mem_write, run_image)
 from .rewriter import RewriteReport, rewrite_all_to_signal, rewrite_image
-from .runtime import (Mechanism, PreparedProcess, hook_invocations,
-                      initial_state, pack_fleet, prepare, run_fleet_prepared,
-                      run_prepared)
+from .runtime import (FleetImageTable, Mechanism, PreparedProcess,
+                      hook_invocations, initial_state, pack_fleet, prepare,
+                      run_fleet_prepared, run_prepared)
 from .scanner import SvcSite, census, scan_image
 
 __all__ = [
-    "C3Event", "DecodedImage", "HALT_EXIT", "HALT_FUEL", "HALT_SEGV",
-    "HALT_TRAP", "HookConfig", "Image", "MachineState", "Mechanism",
-    "PinnedSite", "PreparedProcess", "RewriteReport", "SvcSite",
-    "build_minilibc", "build_process", "census", "costmodel", "decode_image",
-    "diagnose_c3", "fleet", "fleet_counters", "fleet_step", "fleet_summary",
-    "hook_invocations", "initial_state", "isa", "layout", "make_state",
-    "mem_read", "mem_read_block", "mem_write", "pack_fleet", "prepare",
-    "programs", "rewrite_all_to_signal", "rewrite_image", "run_fleet",
-    "run_fleet_prepared", "run_image", "run_prepared", "run_with_c3",
-    "scan_image", "stack_images", "stack_states", "unstack_state",
+    "C3Event", "DecodedImage", "FleetImageTable", "HALT_EXIT", "HALT_FUEL",
+    "HALT_SEGV", "HALT_TRAP", "HookConfig", "Image", "MachineState",
+    "Mechanism", "PinnedSite", "PreparedProcess", "RewriteReport", "SvcSite",
+    "admit_lanes", "build_minilibc", "build_process", "census", "costmodel",
+    "decode_image", "diagnose_c3", "diagnose_c3_fleet", "fleet",
+    "fleet_counters", "fleet_step", "fleet_summary", "hook_invocations",
+    "initial_state", "isa", "layout", "make_state", "mem_read",
+    "mem_read_block", "mem_write", "pack_fleet", "prepare", "programs",
+    "rewrite_all_to_signal", "rewrite_image", "run_fleet",
+    "run_fleet_prepared", "run_fleet_span", "run_image", "run_prepared",
+    "run_with_c3", "scan_image", "set_image_row", "stack_images",
+    "stack_states", "unstack_state",
 ]

@@ -13,9 +13,12 @@ re-executed; run two uses R3 for that site.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from . import isa
+from . import layout as L
 from . import machine as M
 from .hookcfg import HookConfig
 from .isa import Asm, Op
@@ -30,26 +33,62 @@ class C3Event:
     offset: int
 
 
-def diagnose_c3(pp: PreparedProcess, state: M.MachineState) -> Optional[C3Event]:
-    """Apply the paper's signal-handler analysis to a faulted machine."""
-    if int(state.halted) != M.HALT_SEGV:
+def _diagnose_values(pp: PreparedProcess, halted: int, fault_pc: int,
+                     regs: Sequence[int]) -> Optional[C3Event]:
+    """The discrimination rule on plain host values (shared by the scalar
+    and the fleet entry points, so the two cannot drift)."""
+    if halted != M.HALT_SEGV:
         return None
-    pc = int(state.fault_pc)
-    x8 = int(state.regs[8])
-    if pc != x8 or pc >= 600:  # not our fault signature
+    pc = fault_pc
+    x8 = int(regs[8])
+    if pc != x8 or pc >= L.MAX_SYSCALL_NR:  # not our fault signature
         return None
     # "most indirect jumps use BLR, which saves the return address in x30"
-    x30 = int(state.regs[30])
+    x30 = int(regs[30])
+    if x30 - 4 < 0 or x30 - 4 >= L.CODE_LIMIT or (x30 - 4) % 4 != 0:
+        return None
     blr_word = pp.image.word_at(x30 - 4)
     d = isa.decode(blr_word)
     if d.op != Op.BLR:
         return None
-    svc_addr = int(state.regs[d.rn])
+    svc_addr = int(regs[d.rn])
     sec = pp.image.section_of(svc_addr)
     if sec is None:
         return None
     return C3Event(syscall_nr=x8, svc_addr=svc_addr,
                    lib=sec.name, offset=svc_addr - sec.base)
+
+
+def diagnose_c3(pp: PreparedProcess, state: M.MachineState) -> Optional[C3Event]:
+    """Apply the paper's signal-handler analysis to a faulted machine."""
+    return _diagnose_values(pp, int(state.halted), int(state.fault_pc),
+                            np.asarray(state.regs))
+
+
+def diagnose_c3_fleet(pps: Sequence[Optional[PreparedProcess]],
+                      states: M.MachineState, *,
+                      halted: Optional[np.ndarray] = None
+                      ) -> List[Optional[C3Event]]:
+    """Batch C3 diagnosis over a fleet state: lane ``i`` gets exactly the
+    verdict :func:`diagnose_c3` would give for ``pps[i]``.
+
+    One device->host transfer per field (halted / fault_pc / regs) for the
+    whole fleet instead of three syncs per lane; ``None`` entries in ``pps``
+    (empty server slots) diagnose as ``None``.  A caller that already
+    transferred the halt words (the server's harvest) passes them via
+    ``halted`` to skip the redundant sync.
+    """
+    halted = np.asarray(states.halted if halted is None else halted)
+    fault_pc = np.asarray(states.fault_pc)
+    regs = np.asarray(states.regs)
+    out: List[Optional[C3Event]] = []
+    for i, pp in enumerate(pps):
+        if pp is None:
+            out.append(None)
+            continue
+        out.append(_diagnose_values(pp, int(halted[i]), int(fault_pc[i]),
+                                    regs[i]))
+    return out
 
 
 def run_with_c3(app_builder: Callable[[], Asm], *,

@@ -533,6 +533,150 @@ def _jitted_run(chunk: int):
                    donate_argnums=(2,))
 
 
+# ---------------------------------------------------------------------------
+# bounded-step generations (continuous-batching building block)
+# ---------------------------------------------------------------------------
+
+def _run_fleet_span(img: FleetImages, ids: jnp.ndarray, s: MachineState,
+                    chunk: int, span: int) -> MachineState:
+    """At most ``span`` chunks of ``chunk`` masked steps — early exit when
+    every lane halts.  Unlike :func:`_run_fleet` this does NOT patch
+    ``HALT_FUEL``: lanes that ran out of fuel stay ``RUNNING`` (masked), so
+    a fleet can keep stepping across generations and the server patches the
+    halt code only when it harvests the lane."""
+    def scan_body(carry, _):
+        return fleet_step(img, ids, carry), None
+
+    def body(c):
+        ss, k = c
+        ss, _ = lax.scan(scan_body, ss, None, length=chunk)
+        return ss, k + 1
+
+    def cond(c):
+        ss, k = c
+        return jnp.any(_alive(ss)) & (k < span)
+
+    s, _ = lax.while_loop(cond, body, (s, jnp.int32(0)))
+    return s
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_span(chunk: int, span: int):
+    return jax.jit(functools.partial(_run_fleet_span, chunk=chunk, span=span),
+                   donate_argnums=(2,))
+
+
+def run_fleet_span(imgs: FleetImages, states: MachineState, img_ids,
+                   *, steps: int, chunk: int = DEFAULT_CHUNK) -> MachineState:
+    """One bounded generation: up to ``steps`` masked steps (rounded up to a
+    whole number of ``chunk``-sized scans) in ONE device dispatch.
+
+    Halted / out-of-fuel lanes are frozen (bit-identical no-ops), so driving
+    a lane through any sequence of generations gives exactly the state the
+    unbounded :func:`run_fleet` would.  State buffers are donated; the
+    caller must drop its reference and keep the returned state.
+    """
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    if steps < 1:
+        raise ValueError(f"steps must be >= 1, got {steps}")
+    span = -(-steps // chunk)
+    imgs = pack_images(imgs)
+    img_ids = jnp.asarray(img_ids, I32)
+    return _jitted_span(int(chunk), int(span))(imgs, img_ids, states)
+
+
+def finish_halt_codes(halted: np.ndarray, icount: np.ndarray,
+                      fuel: np.ndarray) -> np.ndarray:
+    """Host-side HALT_FUEL patch for harvested lanes (what ``_run_fleet``
+    does on-device at the end of an unbounded run)."""
+    return np.where((halted == RUNNING) & (icount >= fuel),
+                    np.int64(HALT_FUEL), halted)
+
+
+def _admit_lanes(s: MachineState, idx: jnp.ndarray, regs: jnp.ndarray,
+                 pc: jnp.ndarray, fuel: jnp.ndarray, sig_handler: jnp.ndarray,
+                 ptrace: jnp.ndarray, virt_getpid: jnp.ndarray) -> MachineState:
+    """Scatter fresh per-lane initial states into slots ``idx`` in place.
+
+    ``idx`` is padded with out-of-range entries (>= B) for unused admission
+    slots — those scatter with ``mode="drop"``.  A row admitted here is
+    bit-identical to ``runtime.initial_state``: zero memory/flags/counters,
+    ``sp = STACK_TOP``, ``pid = PID``, and the given entry/fuel/mechanism
+    registers.
+    """
+    k = idx.shape[0]
+    zeros = jnp.zeros((k,), I64)
+
+    def put(leaf, val):
+        return leaf.at[idx].set(val, mode="drop")
+
+    return s._replace(
+        regs=put(s.regs, regs),
+        sp=put(s.sp, jnp.full((k,), L.STACK_TOP, I64)),
+        pc=put(s.pc, pc),
+        nzcv=put(s.nzcv, zeros),
+        mem=put(s.mem, jnp.zeros((k, L.MEM_WORDS), I64)),
+        cycles=put(s.cycles, zeros),
+        icount=put(s.icount, zeros),
+        fuel=put(s.fuel, fuel),
+        halted=put(s.halted, zeros),
+        exit_code=put(s.exit_code, zeros),
+        fault_pc=put(s.fault_pc, zeros),
+        sig_handler=put(s.sig_handler, sig_handler),
+        in_signal=put(s.in_signal, zeros),
+        ptrace=put(s.ptrace, ptrace),
+        virt_getpid=put(s.virt_getpid, virt_getpid),
+        hook_count=put(s.hook_count, zeros),
+        pid=put(s.pid, jnp.full((k,), L.PID, I64)),
+        in_off=put(s.in_off, zeros),
+        out_count=put(s.out_count, zeros),
+        out_sum=put(s.out_sum, zeros),
+    )
+
+
+_jitted_admit = jax.jit(_admit_lanes, donate_argnums=(0,))
+
+
+def admit_lanes(states: MachineState, slots: Sequence[int],
+                lane_states: Sequence[MachineState]) -> MachineState:
+    """Admit fresh scalar initial states into lanes ``slots`` of a batched
+    state, in place (donated scatter; one dispatch for the whole batch of
+    admissions, one compilation per admission-batch width).
+
+    ``lane_states`` must be *initial* states (``runtime.initial_state``):
+    only their entry pc / fuel / mechanism flags / seeded registers are
+    carried — everything else is reset exactly as ``initial_state`` does,
+    which avoids shipping each lane's 256 KiB zero memory image.
+    """
+    assert len(slots) == len(lane_states) and len(slots) > 0
+    idx = jnp.asarray(np.asarray(slots, np.int64))
+    regs = jnp.stack([ls.regs for ls in lane_states])
+    pack = lambda f: jnp.stack([getattr(ls, f) for ls in lane_states])
+    return _jitted_admit(states, idx, regs, pack("pc"), pack("fuel"),
+                         pack("sig_handler"), pack("ptrace"),
+                         pack("virt_getpid"))
+
+
+def _set_image_row(packed, imm, row, new_packed, new_imm):
+    return packed.at[row].set(new_packed), imm.at[row].set(new_imm)
+
+
+_jitted_set_image_row = jax.jit(_set_image_row, donate_argnums=(0, 1))
+
+
+def set_image_row(imgs: FleetImages, row: int,
+                  new: DecodedImage) -> FleetImages:
+    """Write one decode table into row ``row`` of a packed image stack, in
+    place (both table buffers are donated) — incremental image admission
+    without touching the other rows or triggering any recompilation (the
+    stack shape is unchanged)."""
+    one = pack_images(stack_images([new]))
+    packed, imm = _jitted_set_image_row(
+        imgs.packed, imgs.imm, jnp.int32(row), one.packed[0], one.imm[0])
+    return FleetImages(packed=packed, imm=imm)
+
+
 def run_fleet(imgs, states, img_ids=None, *, chunk: int = DEFAULT_CHUNK,
               shard: bool = False) -> MachineState:
     """Run every lane to halt (or out of fuel) in one device dispatch.

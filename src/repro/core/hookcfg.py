@@ -47,6 +47,13 @@ class HookConfig:
     # (and with them host round-trips) happen once per chunk; results are
     # invariant to this value, only dispatch count changes.
     fleet_chunk: int = 8
+    # Continuous-batching server (serve.fleet_server): masked steps per
+    # generation (harvest/admission happens between generations; results
+    # are invariant, only scheduling granularity changes) and the C3
+    # re-admission cap per request (the serving analogue of run_with_c3's
+    # max_restarts).
+    serve_gen_steps: int = 256
+    serve_max_restarts: int = 4
     pinned: List[PinnedSite] = dataclasses.field(default_factory=list)
 
     # -- persistence -----------------------------------------------------------

@@ -113,27 +113,111 @@ def run_prepared(pp: PreparedProcess, *, fuel: int = 2_000_000,
     return M.run_image(pp.decoded, initial_state(pp, fuel=fuel, regs=regs))
 
 
+def _image_digest(pp: PreparedProcess) -> bytes:
+    return hashlib.sha1(
+        np.ascontiguousarray(pp.image.words).tobytes()).digest()
+
+
+class FleetImageTable:
+    """A fixed-capacity, content-deduplicated stack of packed decode tables
+    with **incremental admission and eviction** — the serving-side extension
+    of :func:`pack_fleet`'s dedup.
+
+    The packed stack keeps a constant shape ``[capacity, CODE_WORDS]``, so a
+    new request's image joins the table as one in-place row write
+    (:func:`fleet.set_image_row`, donated buffers) and every jitted fleet
+    entry point keeps its compilation cache — unchanged lanes are never
+    recompiled.  Rows are refcounted; released rows keep their digest cached
+    until the slot is actually reused (admission of a recently-seen binary
+    is then free).
+    """
+
+    def __init__(self, capacity: int):
+        assert capacity >= 1
+        self.capacity = capacity
+        self._images = F.FleetImages(
+            packed=jnp.zeros((capacity, L.CODE_WORDS), jnp.int64),
+            imm=jnp.zeros((capacity, L.CODE_WORDS), jnp.int64))
+        self._row_of: Dict[bytes, int] = {}
+        self._digest_of: List[Optional[bytes]] = [None] * capacity
+        self._refs: List[int] = [0] * capacity
+        self._free: List[int] = list(range(capacity))  # FIFO: oldest first
+        self.admissions = 0      # row writes actually performed
+        self.dedup_hits = 0      # admissions served from a live/cached row
+
+    @property
+    def images(self) -> F.FleetImages:
+        return self._images
+
+    def live_rows(self) -> int:
+        return sum(1 for r in self._refs if r > 0)
+
+    def admit(self, pp: PreparedProcess) -> int:
+        """Return the row holding ``pp``'s decode table, admitting it (one
+        in-place row write) if no live or cached row matches."""
+        d = _image_digest(pp)
+        row = self._row_of.get(d)
+        if row is not None:
+            if self._refs[row] == 0:     # cache hit on a released row
+                self._free.remove(row)
+            self._refs[row] += 1
+            self.dedup_hits += 1
+            return row
+        if not self._free:
+            raise RuntimeError(
+                f"FleetImageTable full ({self.capacity} rows all live); "
+                f"size the table to pool width + expected binary diversity")
+        row = self._free.pop(0)
+        old = self._digest_of[row]
+        if old is not None:              # evict the cached (dead) digest
+            del self._row_of[old]
+        self._images = F.set_image_row(self._images, row, pp.decoded)
+        self._row_of[d] = row
+        self._digest_of[row] = d
+        self._refs[row] = 1
+        self.admissions += 1
+        return row
+
+    def refs(self, row: int) -> int:
+        return self._refs[row]
+
+    def release(self, row: int) -> None:
+        assert self._refs[row] > 0, f"row {row} double-released"
+        self._refs[row] -= 1
+        if self._refs[row] == 0:
+            self._free.append(row)       # digest stays cached until reuse
+
+
 def pack_fleet(pps: Sequence[PreparedProcess], *,
                fuel: int = 2_000_000,
-               regs: Optional[Sequence[Optional[Dict[int, int]]]] = None
+               regs: Optional[Sequence[Optional[Dict[int, int]]]] = None,
+               table: Optional[FleetImageTable] = None,
                ) -> Tuple[M.DecodedImage, np.ndarray, M.MachineState]:
     """Stack prepared processes into (images, img_ids, states) for
     :func:`repro.core.fleet.run_fleet`.
 
     Decode tables are deduplicated by image content, so a census sweeping
     iteration counts or mechanisms over shared binaries ships each distinct
-    image to the device once.
+    image to the device once.  With ``table`` (a :class:`FleetImageTable`)
+    the images are *admitted incrementally* into that fixed-capacity stack
+    instead — the continuous-batching entry path, where later admissions
+    must not reshape (and so recompile) the fleet.
     """
-    digests: Dict[bytes, int] = {}
-    uniq: List[M.DecodedImage] = []
     ids = np.zeros(len(pps), np.int32)
-    for i, pp in enumerate(pps):
-        d = hashlib.sha1(np.ascontiguousarray(pp.image.words).tobytes()).digest()
-        if d not in digests:
-            digests[d] = len(uniq)
-            uniq.append(pp.decoded)
-        ids[i] = digests[d]
-    imgs = F.pack_images(F.stack_images(uniq))
+    if table is not None:
+        for i, pp in enumerate(pps):
+            ids[i] = table.admit(pp)
+        imgs = table.images
+    else:
+        digests: Dict[bytes, int] = {}
+        uniq: List[M.DecodedImage] = []
+        for i, pp in enumerate(pps):
+            d = _image_digest(pp)
+            if d not in digests:
+                digests[d] = len(uniq)
+                uniq.append(pp.decoded)
+            ids[i] = digests[d]
+        imgs = F.pack_images(F.stack_images(uniq))
     if regs is None:
         regs = [None] * len(pps)
     states = F.stack_states([initial_state(pp, fuel=fuel, regs=rg)

@@ -106,7 +106,19 @@ class RSAGHandler:
         scattered = jax.lax.psum_scatter(x, ax, scatter_dimension=0, tiled=True)
         # all_gather_invariant: the gathered result is replicated across ax,
         # matching psum's output type under shard_map's vma checking
-        return _lp.all_gather_invariant(scattered, ax, axis=0, tiled=True)
+        ag = getattr(_lp, "all_gather_invariant", None)
+        if ag is not None:
+            return ag(scattered, ax, axis=0, tiled=True)
+        # Legacy shard_map replication checking only learns "replicated
+        # over ax" from psum itself, so express the gather as a psum of the
+        # zero-padded local chunk: bit-exact (adding zeros), same wire
+        # bytes as the all_gather, and formally replicated.
+        chunk = x.shape[0] // n
+        idx = jax.lax.axis_index(ax).astype(jnp.int32)
+        padded = jax.lax.dynamic_update_slice(
+            jnp.zeros_like(x), scattered,
+            (idx * chunk,) + (jnp.int32(0),) * (x.ndim - 1))
+        return jax.lax.psum(padded, ax)
 
 
 def virtualize(value_fn: Callable[[Tuple], Any]):

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import sys
 import threading
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -53,6 +54,44 @@ COLLECTIVE_PRIMS = {
     for name, attr in _PRIM_ATTRS.items() if hasattr(_lp, attr)
 }
 
+# Legacy shard_map (jax without psum_invariant_p) rewrites a traced psum
+# into pbroadcast + psum2 — primitives living in the shard_map module, not
+# lax.parallel.  Register them so the hook's coverage (and the census) spans
+# that tracing scheme too.
+_LEGACY_REWRITE = False
+if "psum_invariant" not in COLLECTIVE_PRIMS:
+    try:
+        from jax.experimental import shard_map as _sm_mod
+        for _name, _attr in (("psum2", "psum2_p"), ("pbroadcast", "pbroadcast_p")):
+            if hasattr(_sm_mod, _attr):
+                COLLECTIVE_PRIMS[_name] = getattr(_sm_mod, _attr)
+        _LEGACY_REWRITE = "psum2" in COLLECTIVE_PRIMS
+    except Exception:  # pragma: no cover - no shard_map module at all
+        pass
+
+# The legacy replication-check rewrite *re-interprets* the already-traced
+# jaxpr (scan/cond/pjit bodies included), re-binding every collective a
+# second time.  Those binds are not new user sites — the handler already ran
+# (and its effects were recorded) during the initial trace — so they must
+# not re-enter the hook.  The re-interpretation always runs under one of
+# these shard_map-internal frames.
+_REWRITE_FRAMES = frozenset({
+    "_replication_rewrite_match", "_replication_rewrite_nomatch",
+    "_rewrite_subtrace",
+})
+
+
+def _in_legacy_rewrite() -> bool:
+    if not _LEGACY_REWRITE:
+        return False
+    f = sys._getframe()
+    while f is not None:
+        if (f.f_code.co_name in _REWRITE_FRAMES
+                and f.f_code.co_filename.endswith("shard_map.py")):
+            return True
+        f = f.f_back
+    return False
+
 # Handler signature: (prim_name, args, params, do_original) -> outputs
 # where do_original(*new_args, **param_overrides) re-executes the original
 # primitive (the displaced instruction).
@@ -74,11 +113,16 @@ _ORIG_BINDS: Dict[str, Callable] = {}
 def _current_handler(name: str) -> Optional[Handler]:
     if _STATE.in_handler or not _STATE.stack:
         return None
-    # aliases: psum_invariant is how lax.psum traces inside shard_map
+    if _in_legacy_rewrite():
+        return None  # re-interpretation of an already-hooked trace
+    # aliases: psum_invariant (modern) / psum2 (legacy) are how lax.psum
+    # traces inside shard_map; pbroadcast is replication bookkeeping (no
+    # wire traffic) and is only intercepted when named explicitly
     table = _STATE.stack[-1]
     if name in table:
         return table[name]
-    base = {"psum_invariant": "psum", "all_gather_invariant": "all_gather"}.get(name)
+    base = {"psum_invariant": "psum", "psum2": "psum",
+            "all_gather_invariant": "all_gather"}.get(name)
     return table.get(base) if base else None
 
 
@@ -107,6 +151,12 @@ def _make_bind(prim, orig_bind):
         finally:
             _STATE.in_handler = False
 
+        # normalise arity: a handler may return a bare array for a
+        # one-output multiple-results primitive (psum_p is multi-result on
+        # some jax versions, psum_invariant is not — handlers should not
+        # have to care)
+        if prim.multiple_results and not isinstance(out, (tuple, list)):
+            out = (out,)
         outs = out if prim.multiple_results else (out,)
         ref = _abstract_out(prim, args, params)
         got = _flat_avals(outs)

@@ -1,0 +1,344 @@
+"""Continuous-batching fleet server with fleet-native C3 lane recycling.
+
+The fleet engine (PR 1) runs a census one-dispatch-per-fleet but *drains*
+it: no new process starts until every lane halts, so a mixed-length
+workload pays the longest lane's wall-clock for the whole batch, and a C3
+fault falls back to scalar re-execution (``run_with_c3``).  This server is
+the serving layer the ROADMAP asks for:
+
+* **Fixed-width lane pool.**  ``pool`` lanes are driven in bounded-step
+  *generations* (:func:`repro.core.fleet.run_fleet_span` — one device
+  dispatch per generation, state buffers donated throughout).
+* **Harvest + in-place admission.**  After each generation, halted lanes
+  are harvested (one host readback of the halt/fuel words), their results
+  published, and queued requests admitted into the freed slots *in place*
+  (:func:`repro.core.fleet.admit_lanes` — a donated scatter of fresh
+  initial states, padded to pool width so the admission path compiles
+  exactly once).
+* **Incremental image table.**  Decode tables live in a fixed-capacity
+  :class:`repro.core.FleetImageTable`; a new request's deduped image joins
+  the table as one in-place row write, so unchanged lanes never recompile.
+* **Fleet-native C3.**  Lanes that halt with the paper's R3 fault
+  signature (``pc == x8 < 600``) are diagnosed in a batch
+  (:func:`repro.core.diagnose_c3_fleet`), their site pinned into the
+  request's :class:`HookConfig` (the "config file" of Figure 4), the
+  process re-prepared host-side and the lane re-admitted automatically —
+  the trap -> config -> re-execute flow without ever leaving the
+  one-dispatch-per-generation regime (``stats()["scalar_reexecutions"]``
+  stays 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fleet as F
+from repro.core import machine as M
+from repro.core.completeness import C3Event, diagnose_c3_fleet
+from repro.core.hookcfg import HookConfig
+from repro.core.isa import Asm
+from repro.core.runtime import (FleetImageTable, Mechanism, PreparedProcess,
+                                initial_state, prepare)
+
+AppBuilder = Callable[[], Asm]
+
+
+@dataclasses.dataclass
+class FleetRequest:
+    """One simulated process waiting for (or occupying) a lane."""
+
+    rid: int
+    pp: PreparedProcess
+    builder: Optional[AppBuilder]      # needed for C3 re-preparation
+    cfg: HookConfig
+    mechanism: Mechanism
+    virtualize: bool
+    fuel: int
+    regs: Optional[Dict[int, int]]
+    submitted_gen: int
+    submitted_s: float
+    admitted_gen: int = -1
+    admitted_s: float = 0.0
+    slot: int = -1
+    row: int = -1
+    attempts: int = 0                  # executions so far (C3 restarts + 1)
+    events: List[C3Event] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """A published request: its final lane state plus serving metadata."""
+
+    rid: int
+    state: M.MachineState              # bit-identical to run_prepared alone
+    events: List[C3Event]
+    attempts: int
+    submitted_gen: int
+    admitted_gen: int
+    completed_gen: int
+    admission_wait_gens: int
+    admission_wait_s: float
+
+
+class FleetServer:
+    """Continuous-batching server over the batched fleet engine.
+
+    ``pool`` is the lane-pool width; ``gen_steps`` the masked steps per
+    generation (scheduling granularity — results are invariant to it);
+    ``table_capacity`` bounds how many distinct binaries can be resident at
+    once (pool width + expected diversity).  ``shard=True`` lane-partitions
+    the pool across local devices via :mod:`repro.parallel.sharding` when
+    the device count divides ``pool``.
+    """
+
+    def __init__(self, pool: int = 8, *, cfg: Optional[HookConfig] = None,
+                 gen_steps: Optional[int] = None, chunk: Optional[int] = None,
+                 table_capacity: Optional[int] = None,
+                 fuel: int = 2_000_000, shard: bool = False):
+        assert pool >= 1
+        self.pool = pool
+        self.cfg = cfg or HookConfig()
+        self.gen_steps = int(self.cfg.serve_gen_steps if gen_steps is None
+                             else gen_steps)
+        self.chunk = int(self.cfg.fleet_chunk if chunk is None else chunk)
+        if self.gen_steps < 1 or self.chunk < 1:
+            raise ValueError(
+                f"gen_steps/chunk must be >= 1, got {self.gen_steps}/{self.chunk}")
+        self.default_fuel = fuel
+        self.table = FleetImageTable(table_capacity or pool + 8)
+        self._slots: List[Optional[FleetRequest]] = [None] * pool
+        self._ids = np.zeros(pool, np.int32)
+        self._fuel = np.zeros(pool, np.int64)   # host mirror: fuel is
+        # constant per occupancy, so harvest needs no device read for it
+        self._queue: Deque[FleetRequest] = deque()
+        self._readmit: List[FleetRequest] = []   # C3 lanes to recycle
+        self._next_rid = 0
+        self.generation = 0
+        self.dispatches = 0
+        self.completed = 0
+        self.c3_readmissions = 0
+        self.scalar_reexecutions = 0             # stays 0: C3 is fleet-native
+        self.harvested_steps = 0                 # steps of published attempts
+        self.discarded_steps = 0                 # steps of faulted C3 attempts
+        self._wait_gens: List[int] = []
+        self._wait_s: List[float] = []
+
+        empty = M.make_state(0, fuel=0)._replace(
+            halted=jnp.int64(M.HALT_EXIT))
+        self._states = F.stack_states([empty] * pool)
+        # one dummy per unused admission slot: admissions are padded to pool
+        # width so the donated scatter compiles exactly once
+        self._pad_state = M.make_state(0, fuel=0)
+        if shard:
+            # lane-partition the pool state once; donated dispatches keep
+            # the placement (img ids stay host-side, re-shipped per dispatch)
+            from repro.parallel.sharding import shard_fleet
+            self._states = shard_fleet(
+                self.table.images, jnp.asarray(self._ids), self._states)[2]
+
+    # -- request intake -------------------------------------------------------
+
+    def submit(self, app: AppBuilder | PreparedProcess, *,
+               mechanism: Mechanism = Mechanism.ASC,
+               cfg: Optional[HookConfig] = None, virtualize: bool = False,
+               fuel: Optional[int] = None,
+               regs: Optional[Dict[int, int]] = None) -> int:
+        """Queue one simulated process; returns its request id.
+
+        ``app`` is either a zero-arg program builder (re-preparable: C3 can
+        recycle the lane with the pinned config, exactly ``run_with_c3``'s
+        loop) or an already-:func:`prepare`-d process (served as-is; a C3
+        fault is then published rather than recycled).
+        """
+        rcfg = cfg or (self.cfg if isinstance(app, PreparedProcess) else
+                       dataclasses.replace(self.cfg, pinned=list(self.cfg.pinned)))
+        if isinstance(app, PreparedProcess):
+            if ((mechanism is not Mechanism.ASC
+                 and mechanism is not app.mechanism)
+                    or (virtualize and not app.virtualize)):
+                raise ValueError(
+                    "mechanism/virtualize come from the PreparedProcess "
+                    "itself; pass a builder to prepare differently")
+            pp, builder = app, None
+            mechanism, virtualize = app.mechanism, app.virtualize
+        else:
+            builder = app
+            pp = prepare(builder(), mechanism, virtualize=virtualize, cfg=rcfg)
+        req = FleetRequest(
+            rid=self._next_rid, pp=pp, builder=builder, cfg=rcfg,
+            mechanism=mechanism, virtualize=virtualize,
+            fuel=int(self.default_fuel if fuel is None else fuel), regs=regs,
+            submitted_gen=self.generation, submitted_s=time.perf_counter())
+        self._next_rid += 1
+        req.attempts = 1
+        self._queue.append(req)
+        return req.rid
+
+    # -- the serving loop -----------------------------------------------------
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self._slots) if r is None]
+
+    def _admit_pending(self) -> None:
+        """Fill freed slots: C3 recycles first, then the request queue —
+        one padded, donated scatter for the whole admission batch."""
+        slots, lanes = [], []
+        for req in self._readmit:                # slot already owned
+            slots.append(req.slot)
+            lanes.append(initial_state(req.pp, fuel=req.fuel, regs=req.regs))
+            self._ids[req.slot] = req.row
+            self._fuel[req.slot] = req.fuel
+        self._readmit.clear()
+        for slot in self._free_slots():
+            if not self._queue:
+                break
+            req = self._queue[0]
+            try:
+                row = self.table.admit(req.pp)
+            except RuntimeError:
+                break  # table transiently full: rows free as lanes finish,
+                       # the request stays queued and retries next harvest
+            self._queue.popleft()
+            req.slot, req.row = slot, row
+            req.admitted_gen = self.generation
+            req.admitted_s = time.perf_counter()
+            self._wait_gens.append(req.admitted_gen - req.submitted_gen)
+            self._wait_s.append(req.admitted_s - req.submitted_s)
+            self._slots[slot] = req
+            self._ids[slot] = req.row
+            self._fuel[slot] = req.fuel
+            slots.append(slot)
+            lanes.append(initial_state(req.pp, fuel=req.fuel, regs=req.regs))
+        if not slots:
+            return
+        pad = self.pool - len(slots)             # park padding out of range
+        slots += [self.pool + i for i in range(pad)]
+        lanes += [self._pad_state] * pad
+        self._states = F.admit_lanes(self._states, slots, lanes)
+
+    def _harvest(self) -> List[FleetResult]:
+        halted = np.asarray(self._states.halted)
+        icount = np.asarray(self._states.icount)
+        patched = F.finish_halt_codes(halted, icount, self._fuel)
+        done = patched != M.RUNNING
+
+        # batch C3 diagnosis over every faulted, recyclable lane at once
+        c3_pps: List[Optional[PreparedProcess]] = [None] * self.pool
+        for i, req in enumerate(self._slots):
+            if (req is not None and done[i]
+                    and halted[i] == M.HALT_SEGV
+                    and req.builder is not None and req.cfg.enable_c3):
+                c3_pps[i] = req.pp
+        events = (diagnose_c3_fleet(c3_pps, self._states, halted=halted)
+                  if any(p is not None for p in c3_pps)
+                  else [None] * self.pool)
+
+        results: List[FleetResult] = []
+        for i, req in enumerate(self._slots):
+            if req is None or not done[i]:
+                continue
+            ev = events[i]
+            if ev is not None:
+                # append to the "config file" (Figure 4) — even on the final
+                # attempt, exactly as run_with_c3 does
+                req.cfg.pin(lib=ev.lib, offset=ev.offset,
+                            syscall_nr=ev.syscall_nr)
+                req.events.append(ev)
+            if ev is not None and req.attempts < req.cfg.serve_max_restarts:
+                # trap -> config -> re-execute, without leaving the fleet.
+                # Admission order guards against a transiently full table:
+                # a solely-owned row is released first (its slot then serves
+                # the re-prepared image); a shared row needs a spare slot,
+                # and if none exists the fault is published instead of
+                # corrupting the harvest.
+                new_pp = prepare(req.builder(), req.mechanism,
+                                 virtualize=req.virtualize, cfg=req.cfg)
+                if self.table.refs(req.row) == 1:
+                    self.table.release(req.row)
+                    new_row = self.table.admit(new_pp)
+                else:
+                    try:
+                        new_row = self.table.admit(new_pp)
+                    except RuntimeError:
+                        new_row = None
+                    if new_row is not None:
+                        self.table.release(req.row)
+                if new_row is not None:
+                    req.pp, req.row = new_pp, new_row
+                    req.attempts += 1
+                    self.discarded_steps += int(icount[i])
+                    self._readmit.append(req)
+                    self.c3_readmissions += 1
+                    continue
+            lane = F.unstack_state(self._states, i)
+            if patched[i] != halted[i]:  # ran out of fuel mid-generation
+                lane = lane._replace(halted=jnp.int64(int(patched[i])))
+            results.append(FleetResult(
+                rid=req.rid, state=lane, events=req.events,
+                attempts=req.attempts, submitted_gen=req.submitted_gen,
+                admitted_gen=req.admitted_gen, completed_gen=self.generation,
+                admission_wait_gens=req.admitted_gen - req.submitted_gen,
+                admission_wait_s=req.admitted_s - req.submitted_s))
+            self.harvested_steps += int(icount[i])
+            self.completed += 1
+            self.table.release(req.row)
+            self._slots[i] = None
+        return results
+
+    def step(self) -> List[FleetResult]:
+        """One generation: admit -> one bounded dispatch -> harvest."""
+        self._admit_pending()
+        if all(r is None for r in self._slots):
+            return []
+        self._states = F.run_fleet_span(
+            self.table.images, self._states, self._ids,
+            steps=self.gen_steps, chunk=self.chunk)
+        self.dispatches += 1
+        self.generation += 1
+        return self._harvest()
+
+    def run(self, max_generations: int = 1_000_000) -> List[FleetResult]:
+        """Serve until the queue and every lane drain; results in
+        completion order.  On exceeding ``max_generations`` the raised
+        error carries the already-published results as ``.results``."""
+        out: List[FleetResult] = []
+        for _ in range(max_generations):
+            if (not self._queue and not self._readmit
+                    and all(r is None for r in self._slots)):
+                break
+            out.extend(self.step())
+        else:
+            err = RuntimeError(
+                f"max_generations ({max_generations}) exceeded with "
+                f"{len(out)} results already published")
+            err.results = out
+            raise err
+        return out
+
+    # -- telemetry ------------------------------------------------------------
+
+    def stats(self) -> dict:
+        waits_g = self._wait_gens or [0]
+        waits_s = self._wait_s or [0.0]
+        return {
+            "pool": self.pool,
+            "gen_steps": self.gen_steps,
+            "generations": self.generation,
+            "dispatches": self.dispatches,
+            "completed": self.completed,
+            "harvested_steps": self.harvested_steps,
+            "discarded_steps": self.discarded_steps,
+            "c3_readmissions": self.c3_readmissions,
+            "scalar_reexecutions": self.scalar_reexecutions,
+            "image_admissions": self.table.admissions,
+            "image_dedup_hits": self.table.dedup_hits,
+            "admission_wait_gens_mean": float(np.mean(waits_g)),
+            "admission_wait_gens_max": int(np.max(waits_g)),
+            "admission_wait_ms_mean": 1e3 * float(np.mean(waits_s)),
+            "admission_wait_ms_max": 1e3 * float(np.max(waits_s)),
+        }

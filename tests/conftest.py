@@ -2,3 +2,7 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers",
         "smoke: fast fleet-engine smoke tests (seconds, not minutes)")
+    config.addinivalue_line(
+        "markers",
+        "serving: continuous-batching server + property suites (tier-1 runs "
+        "them at small example counts; scale up via ASC_TEST_EXAMPLES)")

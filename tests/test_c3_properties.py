@@ -1,0 +1,172 @@
+"""Property tests for the C3 discrimination rule (marked ``serving``).
+
+The paper's claim (§3.3): a fault is ours iff ``pc == x8 and pc < 600`` —
+a NULL-pointer dereference or a stray jump can never be mistaken for the
+replaced-pair re-entry.  These tests drive :func:`diagnose_c3` /
+:func:`diagnose_c3_fleet` over *generated* fault states (real R3 faults
+with registers perturbed into every neighbouring fault shape) and assert
+the rule never misfires — and that fleet diagnosis equals scalar
+diagnosis lane-for-lane.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import (Mechanism, diagnose_c3, diagnose_c3_fleet, fleet,
+                        layout as L, machine as M, prepare, programs,
+                        run_prepared)
+from repro.core.image import APP_BASE
+from repro.core.isa import Asm
+from repro.core import isa
+
+pytestmark = pytest.mark.serving
+
+MAX_EXAMPLES = int(os.environ.get("ASC_TEST_EXAMPLES", "25"))
+
+_SETTINGS = dict(max_examples=MAX_EXAMPLES, deadline=None, derandomize=True)
+if HAVE_HYPOTHESIS:
+    from hypothesis import HealthCheck
+    _SETTINGS["suppress_health_check"] = list(HealthCheck)
+
+_CACHE = {}
+
+
+def _r3_fault():
+    """A REAL R3 fault: indirect blr onto a rewritten svc (Figure 4).
+    Module-cached plain helper (not a fixture: property tests run under the
+    hypothesis shim, whose wrapper hides named parameters from pytest)."""
+    if "r3" not in _CACHE:
+        pp = prepare(programs.indirect_svc(2), Mechanism.ASC, virtualize=True)
+        st_ = run_prepared(pp, fuel=100_000)
+        assert int(st_.halted) == M.HALT_SEGV
+        assert diagnose_c3(pp, st_) is not None
+        _CACHE["r3"] = (pp, st_)
+    return _CACHE["r3"]
+
+
+def _mutate(state, *, pc=None, x8=None, x30=None, halted=None):
+    regs = state.regs
+    if x8 is not None:
+        regs = regs.at[8].set(jnp.int64(x8))
+    if x30 is not None:
+        regs = regs.at[30].set(jnp.int64(x30))
+    return state._replace(
+        regs=regs,
+        fault_pc=jnp.int64(pc) if pc is not None else state.fault_pc,
+        halted=jnp.int64(halted) if halted is not None else state.halted)
+
+
+# -- the discrimination rule can never misfire --------------------------------
+
+@settings(**_SETTINGS)
+@given(pc=st.integers(0, 2 * L.MAX_SYSCALL_NR),
+       x8=st.integers(0, 2 * L.MAX_SYSCALL_NR))
+def test_rule_requires_pc_equals_x8_below_bound(pc, x8):
+    """Any (pc, x8) with pc != x8 or pc >= 600 is NOT ours — even when the
+    rest of the machine looks exactly like a genuine R3 fault."""
+    pp, state = _r3_fault()
+    ev = diagnose_c3(pp, _mutate(state, pc=pc, x8=x8))
+    if pc != x8 or pc >= L.MAX_SYSCALL_NR:
+        assert ev is None
+    else:
+        assert ev is not None and ev.syscall_nr == x8
+
+
+@settings(**_SETTINGS)
+@given(x8=st.integers(0, L.MAX_SYSCALL_NR - 1),
+       offset=st.integers(0, 64))
+def test_null_deref_never_diagnosed(x8, offset):
+    """NULL-page dereference faults (fault_pc in [0, 4096)): unless the
+    jump literally used x8 as the (syscall-numbered) target — which IS the
+    R3 signature — the rule stays silent."""
+    pp, state = _r3_fault()
+    pc = offset * 8  # somewhere in the null page
+    if pc == x8:
+        pc += 1  # make it a genuine unrelated NULL deref
+    assert diagnose_c3(pp, _mutate(state, pc=pc, x8=x8)) is None
+
+
+@settings(**_SETTINGS)
+@given(pc=st.integers(L.MAX_SYSCALL_NR, L.CODE_LIMIT))
+def test_stray_jump_above_bound_never_diagnosed(pc):
+    """A wild jump at or above the syscall-number bound can never match,
+    even with x8 == pc (the paper's `< 600` clause)."""
+    pp, state = _r3_fault()
+    assert diagnose_c3(pp, _mutate(state, pc=pc, x8=pc)) is None
+
+
+@settings(**_SETTINGS)
+@given(x30=st.integers(0, L.CODE_LIMIT + 64))
+def test_bad_return_chain_never_diagnosed(x30):
+    """Signature matches but x30 does not sit after a blr: no event (the
+    handler walks x30 back to the blr to recover the svc address)."""
+    pp, state = _r3_fault()
+    good_x30 = int(np.asarray(state.regs)[30])
+    if x30 == good_x30:
+        return  # the genuine chain — covered elsewhere
+    ev = diagnose_c3(pp, _mutate(state, x30=x30))
+    if ev is not None:
+        # only acceptable when x30-4 really is a blr whose target register
+        # holds an address inside a mapped section
+        d = isa.decode(pp.image.word_at(x30 - 4))
+        assert d.op == isa.Op.BLR
+        assert pp.image.section_of(int(np.asarray(state.regs)[d.rn])) is not None
+
+
+def test_non_segv_halts_never_diagnosed():
+    pp, state = _r3_fault()
+    for h in (M.RUNNING, M.HALT_EXIT, M.HALT_TRAP, M.HALT_FUEL, M.HALT_BADMEM):
+        assert diagnose_c3(pp, _mutate(state, halted=h)) is None
+
+
+def test_genuine_null_jump_program_not_diagnosed():
+    """End-to-end: br to a null-page address with x8 holding a syscall
+    number != pc (the classic NULL-funcptr call) is not ours."""
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(isa.movz(9, 300))
+    a.emit(isa.movz(8, 172, sf=0))
+    a.emit(isa.br(9))
+    pp = prepare(a, Mechanism.ASC)
+    st_ = run_prepared(pp)
+    assert int(st_.halted) == M.HALT_SEGV
+    assert diagnose_c3(pp, st_) is None
+
+
+# -- fleet diagnosis == scalar diagnosis, lane for lane -----------------------
+
+@settings(**_SETTINGS)
+@given(data=st.data())
+def test_fleet_diagnosis_matches_scalar_lane_for_lane(data):
+    pp, state = _r3_fault()
+    n = data.draw(st.integers(2, 8), label="lanes")
+    lanes = []
+    for _ in range(n):
+        kind = data.draw(st.integers(0, 3), label="kind")
+        if kind == 0:      # untouched genuine R3 fault
+            lanes.append(state)
+        elif kind == 1:    # perturbed signature
+            lanes.append(_mutate(
+                state,
+                pc=data.draw(st.integers(0, 700), label="pc"),
+                x8=data.draw(st.integers(0, 700), label="x8")))
+        elif kind == 2:    # broken return chain
+            lanes.append(_mutate(
+                state, x30=data.draw(st.integers(0, L.CODE_LIMIT),
+                                     label="x30")))
+        else:              # not a SEGV at all
+            lanes.append(_mutate(state, halted=M.HALT_EXIT))
+    batched = fleet.stack_states(lanes)
+    got = diagnose_c3_fleet([pp] * n, batched)
+    want = [diagnose_c3(pp, s) for s in lanes]
+    assert got == want
+
+
+def test_fleet_diagnosis_skips_empty_slots():
+    pp, state = _r3_fault()
+    batched = fleet.stack_states([state, state])
+    got = diagnose_c3_fleet([None, pp], batched)
+    assert got[0] is None and got[1] == diagnose_c3(pp, state)

@@ -13,14 +13,15 @@ from repro.hooks import (COLLECTIVE_PRIMS, CastCompressHandler, RSAGHandler,
                          scan_jaxpr, virtualize)
 
 # On older jax, shard_map traces lax.psum through psum2/pbroadcast rather
-# than psum_invariant, so the interceptor's alias table (and the census
-# primitive names) cannot see those sites.  Feature-detect and xfail: the
-# subsystem targets the newer tracing scheme.
-_LEGACY_SHARD_MAP = "psum_invariant" not in COLLECTIVE_PRIMS
+# than psum_invariant.  The interceptor registers and aliases the legacy
+# primitives (and the census canonicalises psum2 -> psum_invariant), so both
+# tracing schemes are covered; the gate only remains for a jax exposing
+# neither scheme.
+_LEGACY_SHARD_MAP = not ({"psum_invariant", "psum2"} & COLLECTIVE_PRIMS.keys())
 legacy_shard_map_xfail = pytest.mark.xfail(
     _LEGACY_SHARD_MAP, strict=False,
-    reason="this jax traces shard_map psum as psum2/pbroadcast, which the "
-           "interceptor aliasing does not target")
+    reason="this jax traces shard_map psum through primitives the "
+           "interceptor does not expose")
 
 N_DEV = jax.device_count()
 pytestmark = pytest.mark.skipif(N_DEV < 1, reason="needs a device")
