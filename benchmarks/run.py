@@ -3,7 +3,8 @@
 
   * hook_overhead            — paper Table 3 (getpid interception cost),
                                one fleet dispatch for the whole grid
-  * svc_census               — paper Tables 1 & 2 (svc population)
+  * svc_census               — paper Tables 1 & 2 (svc population);
+                               writes BENCH_census.json itself
   * app_bandwidth            — paper Figures 5 & 6 (app-level overhead)
   * collective_census        — adapted Table 1 (collective sites per arch)
   * collective_hook_overhead — one-dispatch mechanisms x programs x
@@ -12,20 +13,31 @@
   * serving_throughput       — continuous batching vs drain-the-fleet on a
                                mixed-length workload (+ fleet-native C3);
                                writes BENCH_serving.json itself
+  * trace_overhead           — traced vs untraced fleet census (the
+                               repro.trace subsystem's 3.7%-claim analog);
+                               writes BENCH_trace.json itself
   * roofline                 — dry-run roofline table (§Roofline)
 
 Besides the CSV stream, writes ``benchmarks/results/BENCH_fleet.json`` with
 machine-readable per-mechanism per-call cycles and the scalar-vs-fleet
-throughput numbers, so the perf trajectory is tracked across PRs.
+throughput numbers — one ``python -m benchmarks.run`` refreshes every
+``BENCH_*.json``.  ``--only <name>`` runs a single suite (substring match
+allowed), e.g. ``--only trace`` to refresh just BENCH_trace.json.
 """
+import argparse
 import importlib
+import inspect
 import json
 import pathlib
 import sys
 import traceback
 
 SUITES = ["hook_overhead", "svc_census", "app_bandwidth", "collective_census",
-          "collective_hook_overhead", "serving_throughput", "roofline"]
+          "collective_hook_overhead", "serving_throughput", "trace_overhead",
+          "roofline"]
+
+# suites feeding the BENCH_fleet.json record (collect_fleet_bench)
+_FLEET_BENCH_INPUTS = {"hook_overhead", "collective_hook_overhead"}
 
 BENCH_PATH = pathlib.Path(__file__).parent / "results" / "BENCH_fleet.json"
 
@@ -54,26 +66,42 @@ def collect_fleet_bench() -> dict:
     }
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", metavar="NAME", default=None,
+                    help="run a single suite (exact or substring match)")
+    args = ap.parse_args(argv)
+    suites = SUITES
+    if args.only:
+        suites = [s for s in SUITES if args.only == s] or \
+                 [s for s in SUITES if args.only in s]
+        if not suites:
+            ap.error(f"--only {args.only!r} matches none of {SUITES}")
+
     failures = 0
-    for name in SUITES:
+    for name in suites:
         print(f"# === {name} ===", flush=True)
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
-            mod.main()
+            if inspect.signature(mod.main).parameters:
+                mod.main([])  # keep the harness argv out of suite parsers
+            else:
+                mod.main()
         except Exception:
             failures += 1
             print(f"{name}/ERROR,0,{traceback.format_exc(limit=2)!r}")
-    print("# === BENCH_fleet.json ===", flush=True)
-    try:
-        payload = collect_fleet_bench()
-        write_bench_json(payload)
-        c = payload["census"]
-        print(f"bench_fleet/written,0,path={BENCH_PATH} "
-              f"speedup={c['speedup']}x fleet={c['fleet_steps_per_sec']:.0f}sps")
-    except Exception:
-        failures += 1
-        print(f"bench_fleet/ERROR,0,{traceback.format_exc(limit=2)!r}")
+    if not args.only or _FLEET_BENCH_INPUTS.intersection(suites):
+        print("# === BENCH_fleet.json ===", flush=True)
+        try:
+            payload = collect_fleet_bench()
+            write_bench_json(payload)
+            c = payload["census"]
+            print(f"bench_fleet/written,0,path={BENCH_PATH} "
+                  f"speedup={c['speedup']}x "
+                  f"fleet={c['fleet_steps_per_sec']:.0f}sps")
+        except Exception:
+            failures += 1
+            print(f"bench_fleet/ERROR,0,{traceback.format_exc(limit=2)!r}")
     if failures:
         sys.exit(1)
 

@@ -20,46 +20,50 @@ events matching ``run_with_c3``).
 
 Writes ``benchmarks/results/BENCH_serving.json`` (schema
 ``BENCH_serving/v1``); ``--quick`` runs a seconds-long sanity pass (used
-by ``scripts/check.sh``, optionally under
-``--xla_force_host_platform_device_count=2`` with ``--shard`` to exercise
-the lane-partitioned path).
+by ``scripts/check.sh``).  ``--devices N`` forces N host platform devices
+(``--xla_force_host_platform_device_count``) and implies ``--shard``, so
+the pool lane-partitions across them; the payload then reports per-device
+lane throughput.  Repro imports are deferred so the device-count flag can
+be injected before jax initialises its backends.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import time
 
 import numpy as np
 
-from repro.core import (HookConfig, Mechanism, prepare, programs,
-                        run_fleet_prepared, run_with_c3)
-from repro.serve.fleet_server import FleetServer
-
 RESULT_PATH = pathlib.Path(__file__).parent / "results" / "BENCH_serving.json"
 
 FUEL = 10_000_000
 
-# steps/iteration measured on the simulator (collective_hook_overhead's
-# calibration): getpid under ASC ~57, read under SIGNAL ~35
-_WORK = [
-    ("getpid_asc", programs.getpid_loop_param,
-     Mechanism.ASC, {"long": 140, "short": 14}),
-    ("read_signal", lambda: programs.read_loop_param(1024),
-     Mechanism.SIGNAL, {"long": 230, "short": 23}),
-]
+
+def _work():
+    from repro.core import Mechanism, programs
+    # steps/iteration measured on the simulator (collective_hook_overhead's
+    # calibration): getpid under ASC ~57, read under SIGNAL ~35
+    return [
+        ("getpid_asc", programs.getpid_loop_param,
+         Mechanism.ASC, {"long": 140, "short": 14}),
+        ("read_signal", lambda: programs.read_loop_param(1024),
+         Mechanism.SIGNAL, {"long": 230, "short": 23}),
+    ]
 
 
 def build_requests(n: int, long_frac: float = 0.25, seed: int = 0):
     """Mixed-length arrival stream: (prepared process, regs) pairs — two
     distinct binaries, bimodal iteration counts."""
+    from repro.core import prepare
+    work = _work()
     rng = np.random.default_rng(seed)
     cells = {name: prepare(builder(), mech, virtualize=True)
-             for name, builder, mech, _ in _WORK}
+             for name, builder, mech, _ in work}
     reqs = []
     for i in range(n):
-        name, _, _, iters = _WORK[int(rng.integers(len(_WORK)))]
+        name, _, _, iters = work[int(rng.integers(len(work)))]
         kind = "long" if rng.random() < long_frac else "short"
         base = iters[kind]
         jitter = max(2, int(base * float(rng.uniform(0.8, 1.2))))
@@ -69,6 +73,7 @@ def build_requests(n: int, long_frac: float = 0.25, seed: int = 0):
 
 def run_drain(reqs, pool: int, chunk: int, shard: bool = False):
     """Baseline: admit ``pool`` lanes, drain the whole fleet, repeat."""
+    from repro.core import run_fleet_prepared
     t0 = time.perf_counter()
     steps = 0
     dispatches = 0
@@ -94,6 +99,7 @@ def run_drain(reqs, pool: int, chunk: int, shard: bool = False):
 
 def run_server(reqs, pool: int, chunk: int, gen_steps: int,
                shard: bool = False):
+    from repro.serve.fleet_server import FleetServer
     srv = FleetServer(pool=pool, gen_steps=gen_steps, chunk=chunk,
                       fuel=FUEL, shard=shard)
     t0 = time.perf_counter()
@@ -122,6 +128,8 @@ def run_server(reqs, pool: int, chunk: int, gen_steps: int,
 def run_c3_check(pool: int, chunk: int, gen_steps: int) -> dict:
     """The acceptance workload: R3-fault sites under the server — zero
     scalar re-executions, event list identical to run_with_c3's."""
+    from repro.core import HookConfig, programs, run_with_c3
+    from repro.serve.fleet_server import FleetServer
     _, _, ev_ref, runs_ref = run_with_c3(
         lambda: programs.indirect_svc(3), cfg=HookConfig(), virtualize=True,
         fuel=FUEL)
@@ -158,13 +166,21 @@ def run_bench(n: int = 48, pool: int = 8, chunk: int = 64,
     server = min((run_server(reqs, pool, chunk, gen_steps, shard=shard)
                   for _ in range(passes)), key=lambda r: r["wall_s"])
     assert server["steps"] == drain["steps"], "modes executed different work"
+    import jax
+    ndev = jax.device_count()
+    partitioned = shard and ndev > 1 and pool % ndev == 0
     payload = {
         "schema": "BENCH_serving/v1",
         "config": {"requests": n, "pool": pool, "chunk": chunk,
                    "gen_steps": gen_steps, "shard": shard,
+                   "devices": ndev,
+                   "lanes_per_device": pool // ndev if partitioned else pool,
                    "long_frac": 0.25},
         "drain": drain,
-        "server": server,
+        "server": dict(
+            server,
+            per_device_steps_per_sec=round(
+                server["steps_per_sec"] / (ndev if partitioned else 1), 1)),
         "speedup": round(server["steps_per_sec"] / drain["steps_per_sec"], 2),
         "c3": run_c3_check(pool, chunk, gen_steps),
     }
@@ -194,9 +210,18 @@ def main(argv=None) -> None:
                     help="seconds-long sanity pass (smaller workload)")
     ap.add_argument("--shard", action="store_true",
                     help="lane-partition the pool across local devices")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="force N host platform devices (implies --shard)")
     ap.add_argument("--pool", type=int, default=None)
     ap.add_argument("--requests", type=int, default=None)
     args = ap.parse_args(argv)
+    if args.devices:
+        # must land before jax touches a backend — repro imports in this
+        # module are deferred for exactly this line
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+        args.shard = True
 
     if args.quick:
         kw = dict(n=args.requests or 10, pool=args.pool or 4, chunk=16,
@@ -209,8 +234,10 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     print(f"serving/census,0,"
           f"requests={c['config']['requests']} pool={c['config']['pool']} "
+          f"devices={c['config']['devices']} "
           f"drain={c['drain']['steps_per_sec']:.0f}sps "
           f"server={c['server']['steps_per_sec']:.0f}sps "
+          f"per_device={c['server']['per_device_steps_per_sec']:.0f}sps "
           f"speedup={c['speedup']}x "
           f"admit_wait={c['server']['admission_wait_ms_mean']}ms")
     print(f"serving/c3,0,"

@@ -7,33 +7,59 @@ Table 2: svc sites used at runtime + how many need signal interception.
 The static census is host-side scanning; the runtime confirmation (every
 rewritten app still runs to a clean exit) executes all apps as ONE fleet
 dispatch instead of one scalar dispatch per app.
+
+``--devices N`` forces N host platform devices
+(``--xla_force_host_platform_device_count``) and times the runtime fleet
+lane-partitioned across them (``run_fleet(shard=True)`` via
+``repro.parallel.sharding.shard_fleet``), reporting per-device lane
+throughput.  Repro imports are deferred so the flag can be injected
+before jax initialises its backends.
+
+Writes ``benchmarks/results/BENCH_census.json`` (schema
+``BENCH_census/v1``) with the static rows + the sharded throughput
+section; ``--quick`` skips the JSON write (the check.sh sanity pass).
 """
 from __future__ import annotations
 
-import numpy as np
+import argparse
+import json
+import os
+import pathlib
+import time
 
-from repro.core import (HALT_EXIT, Mechanism, build_process, census, prepare,
-                        programs, run_fleet_prepared)
+RESULT_PATH = pathlib.Path(__file__).parent / "results" / "BENCH_census.json"
 
-APPS = {
-    "getpid_bench": lambda: programs.getpid_loop(50),
-    "bfs_like": lambda: programs.read_loop(64, 1024),
-    "sqlite_like": lambda: programs.mixed_ops(32, 512),
-    "ior_like": lambda: programs.io_bandwidth(32, 4096),
-    "nginx_like": lambda: programs.retry_loop(4),     # has the C2 edge case
-    "apache_like": lambda: programs.caller_x8(8),     # has the C1 edge case
-}
+# Replicate the app list so the sharded fleet is wide enough to measure
+# (and keeps lane count divisible by small device counts).
+SHARD_REPLICAS = 4
+
+
+def _apps():
+    from repro.core import programs
+    return {
+        "getpid_bench": lambda: programs.getpid_loop(50),
+        "bfs_like": lambda: programs.read_loop(64, 1024),
+        "sqlite_like": lambda: programs.mixed_ops(32, 512),
+        "ior_like": lambda: programs.io_bandwidth(32, 4096),
+        "nginx_like": lambda: programs.retry_loop(4),     # has the C2 edge case
+        "apache_like": lambda: programs.caller_x8(8),     # has the C1 edge case
+    }
 
 
 def run() -> list:
-    names = list(APPS)
-    pps = [prepare(APPS[n](), Mechanism.ASC, virtualize=False) for n in names]
+    from repro.core import (HALT_EXIT, Mechanism, build_process, census,
+                            prepare, run_fleet_prepared)
+    import numpy as np
+
+    apps = _apps()
+    names = list(apps)
+    pps = [prepare(apps[n](), Mechanism.ASC, virtualize=False) for n in names]
     fleet_out = run_fleet_prepared(pps, fuel=10_000_000)
     halted = np.asarray(fleet_out.halted)
 
     rows = []
     for i, name in enumerate(names):
-        image = build_process(APPS[name]())
+        image = build_process(apps[name]())
         c = census(image)
         rep = pps[i].report.summary()
         rows.append({
@@ -50,13 +76,77 @@ def run() -> list:
     return rows
 
 
-def main() -> None:
+def run_sharded(passes: int = 2) -> dict:
+    """Time the runtime-confirmation fleet lane-partitioned over the local
+    devices; the per-device lane throughput section of BENCH_census.json."""
+    import jax
+    import numpy as np
+    from repro.core import HALT_EXIT, Mechanism, prepare, run_fleet_prepared
+
+    apps = _apps()
+    pps = [prepare(b(), Mechanism.ASC, virtualize=False)
+           for b in apps.values()] * SHARD_REPLICAS
+    ndev = jax.device_count()
+    shard = ndev > 1 and len(pps) % ndev == 0
+
+    out = run_fleet_prepared(pps, fuel=10_000_000, shard=shard)  # warm-up
+    wall = float("inf")
+    for _ in range(passes):
+        t0 = time.perf_counter()
+        out = run_fleet_prepared(pps, fuel=10_000_000, shard=shard)
+        wall = min(wall, time.perf_counter() - t0)
+    steps = int(np.asarray(out.icount).sum())
+    sps = steps / wall
+    return {
+        "devices": ndev,
+        "sharded": shard,
+        "lanes": len(pps),
+        "lanes_per_device": len(pps) // ndev if shard else len(pps),
+        "total_steps": steps,
+        "wall_s": round(wall, 3),
+        "steps_per_sec": round(sps, 1),
+        "per_device_steps_per_sec": round(sps / (ndev if shard else 1), 1),
+        "all_completed": bool((np.asarray(out.halted) == HALT_EXIT).all()),
+    }
+
+
+def write_result(payload: dict, path: pathlib.Path = RESULT_PATH) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="force N host platform devices and shard the "
+                         "runtime fleet across them")
+    ap.add_argument("--quick", action="store_true",
+                    help="sanity pass: single timing pass, no JSON write")
+    args = ap.parse_args(argv)
+    if args.devices:
+        # must land before jax touches a backend — all repro imports above
+        # are deferred for exactly this line
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    rows = run()
+    sharded = run_sharded(passes=1 if args.quick else 2)
+    if not args.quick:
+        write_result({"schema": "BENCH_census/v1", "apps": rows,
+                      "sharded": sharded})
     print("name,us_per_call,derived")
-    for r in run():
+    for r in rows:
         print(f"svc_census/{r['app']},0,"
               f"svc={r['svc_in_image']} libc={r['svc_in_libc']} "
               f"signal={r['signal_needed']} r1={r['r1']} r3={r['r3']} "
               f"tramp_bytes={r['trampoline_bytes']} ok={r['completed']}")
+    print(f"svc_census/sharded,0,"
+          f"devices={sharded['devices']} lanes={sharded['lanes']} "
+          f"lanes_per_device={sharded['lanes_per_device']} "
+          f"sps={sharded['steps_per_sec']:.0f} "
+          f"per_device_sps={sharded['per_device_steps_per_sec']:.0f} "
+          f"ok={sharded['all_completed']}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
-# CI-style gate: tier-1, the smoke + serving tiers, and a seconds-long
-# serving-throughput sanity pass on 2 forced host devices (exercises the
-# lane-partitioned / sharded path).  See tests/README.md for the tiers.
+# CI-style gate: tier-1, the smoke + serving + trace tiers, and two
+# seconds-long sanity passes on 2 forced host devices (the sharded serving
+# pool and the lane-partitioned census).  See tests/README.md for the tiers.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,8 +16,17 @@ python -m pytest -q -m smoke
 echo "== serving tier (heavier example counts) =="
 ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m serving
 
+echo "== trace tier (heavier example counts) =="
+ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m trace
+
 echo "== serving throughput sanity (sharded, 2 host devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
     python -m benchmarks.serving_throughput --quick --shard
+
+echo "== sharded census sanity (2 host devices) =="
+python -m benchmarks.svc_census --devices 2 --quick
+
+echo "== trace overhead sanity =="
+python -m benchmarks.trace_overhead --quick
 
 echo "check.sh: all green"

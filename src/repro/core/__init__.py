@@ -10,31 +10,33 @@ Public surface::
 from . import costmodel, fleet, isa, layout, programs
 from .completeness import (C3Event, diagnose_c3, diagnose_c3_fleet,
                            run_with_c3)
-from .fleet import (admit_lanes, fleet_counters, fleet_step, fleet_summary,
-                    run_fleet, run_fleet_span, set_image_row, stack_images,
-                    stack_states, unstack_state)
-from .hookcfg import HookConfig, PinnedSite
+from .fleet import (TraceState, admit_lanes, fleet_counters, fleet_step,
+                    fleet_step_traced, fleet_summary, run_fleet,
+                    run_fleet_span, set_image_row, stack_images, stack_states,
+                    unstack_state)
+from .hookcfg import HookConfig, PinnedSite, PolicyRule
 from .image import Image, build_minilibc, build_process
-from .machine import (HALT_EXIT, HALT_FUEL, HALT_SEGV, HALT_TRAP,
+from .machine import (HALT_EXIT, HALT_FUEL, HALT_KILL, HALT_SEGV, HALT_TRAP,
                       DecodedImage, MachineState, decode_image, make_state,
                       mem_read, mem_read_block, mem_write, run_image)
 from .rewriter import RewriteReport, rewrite_all_to_signal, rewrite_image
 from .runtime import (FleetImageTable, Mechanism, PreparedProcess,
-                      hook_invocations, initial_state, pack_fleet, prepare,
-                      run_fleet_prepared, run_prepared)
+                      fleet_trace, hook_invocations, initial_state,
+                      pack_fleet, prepare, run_fleet_prepared, run_prepared)
 from .scanner import SvcSite, census, scan_image
 
 __all__ = [
     "C3Event", "DecodedImage", "FleetImageTable", "HALT_EXIT", "HALT_FUEL",
-    "HALT_SEGV", "HALT_TRAP", "HookConfig", "Image", "MachineState",
-    "Mechanism", "PinnedSite", "PreparedProcess", "RewriteReport", "SvcSite",
+    "HALT_KILL", "HALT_SEGV", "HALT_TRAP", "HookConfig", "Image",
+    "MachineState", "Mechanism", "PinnedSite", "PolicyRule",
+    "PreparedProcess", "RewriteReport", "SvcSite", "TraceState",
     "admit_lanes", "build_minilibc", "build_process", "census", "costmodel",
     "decode_image", "diagnose_c3", "diagnose_c3_fleet", "fleet",
-    "fleet_counters", "fleet_step", "fleet_summary", "hook_invocations",
-    "initial_state", "isa", "layout", "make_state", "mem_read",
-    "mem_read_block", "mem_write", "pack_fleet", "prepare", "programs",
-    "rewrite_all_to_signal", "rewrite_image", "run_fleet",
-    "run_fleet_prepared", "run_fleet_span", "run_image", "run_prepared",
-    "run_with_c3", "scan_image", "set_image_row", "stack_images",
-    "stack_states", "unstack_state",
+    "fleet_counters", "fleet_step", "fleet_step_traced", "fleet_summary",
+    "fleet_trace", "hook_invocations", "initial_state", "isa", "layout",
+    "make_state", "mem_read", "mem_read_block", "mem_write", "pack_fleet",
+    "prepare", "programs", "rewrite_all_to_signal", "rewrite_image",
+    "run_fleet", "run_fleet_prepared", "run_fleet_span", "run_image",
+    "run_prepared", "run_with_c3", "scan_image", "set_image_row",
+    "stack_images", "stack_states", "unstack_state",
 ]

@@ -44,8 +44,9 @@ from . import costmodel as cm
 from . import layout as L
 from .isa import Op
 from .machine import (COST_TABLE, HALT_BADMEM, HALT_EXIT, HALT_FUEL,
-                      HALT_SEGV, HALT_TRAP, RUNNING, SIGFRAME_WORDS,
-                      DecodedImage, MachineState, _SIGFRAME_IDX)
+                      HALT_KILL, HALT_SEGV, HALT_TRAP, RUNNING,
+                      SIGFRAME_WORDS, DecodedImage, MachineState,
+                      _SIGFRAME_IDX)
 
 I64 = jnp.int64
 I32 = jnp.int32
@@ -54,6 +55,51 @@ _MAX_IO_WORDS = 4096  # mirrors machine._MAX_IO_WORDS
 _COUNTER_IDX = (L.COUNTER - L.DATA_BASE) // 8
 
 DEFAULT_CHUNK = 8
+
+
+# ---------------------------------------------------------------------------
+# syscall tracing + policy carry (the device side of repro.trace)
+# ---------------------------------------------------------------------------
+#
+# The carry rides NEXT TO the MachineState through the chunked scan, so a
+# traced fleet's machine states stay bit-identical to an untraced run (the
+# repro.trace parity suite enforces this).  Appends happen inside the step
+# under the svc mask as one masked scatter behind a batch-uniform cond —
+# no host sync, no per-event dispatch.  Host-side construction, decoding
+# and strace-style rendering live in repro.trace.recorder / .policy.
+
+# Record layout: one ring row per executed svc.
+REC_WORDS = 8
+REC_STEP, REC_PC, REC_NR, REC_X0, REC_X1, REC_X2, REC_RET, REC_VERDICT = \
+    range(REC_WORDS)
+
+# Policy table slots: one per modelled syscall, plus the catch-all UNKNOWN
+# slot every other number (the sys_enosys fall-through) resolves to.
+TRACE_SYS = (L.SYS_READ, L.SYS_WRITE, L.SYS_GETPID, L.SYS_EXIT,
+             L.SYS_RT_SIGRETURN, L.SYS_OPENAT, L.SYS_CLOSE)
+SLOT_UNKNOWN = len(TRACE_SYS)
+N_POLICY_SLOTS = len(TRACE_SYS) + 1
+
+# Per-slot actions (seccomp-style); also the recorded verdict codes, with
+# UNKNOWN marking an ALLOWed syscall that fell through to -ENOSYS.
+POL_ALLOW, POL_DENY, POL_EMULATE, POL_KILL = 0, 1, 2, 3
+VERDICT_UNKNOWN = 4
+
+DEFAULT_TRACE_CAP = 64
+
+
+class TraceState(NamedTuple):
+    """Per-lane syscall trace ring + policy tables, carried on-device.
+
+    ``buf[b, count[b] % CAP]`` is the next record slot for lane ``b`` —
+    a full ring overwrites oldest-first, ``count`` keeps the lifetime
+    total so the host decoder knows how many records were dropped.
+    """
+
+    buf: jnp.ndarray         # int64[B, CAP, REC_WORDS]
+    count: jnp.ndarray       # int64[B]: records ever produced per lane
+    pol_action: jnp.ndarray  # int32[B, N_POLICY_SLOTS]
+    pol_arg: jnp.ndarray     # int64[B, N_POLICY_SLOTS]: errno / constant
 
 
 # ---------------------------------------------------------------------------
@@ -126,14 +172,14 @@ def _cond_holds_v(nzcv, cond):
     return jnp.take_along_axis(preds, sel[:, None], axis=1)[:, 0]
 
 
-def fleet_step(img: FleetImages, ids: jnp.ndarray,
-               s: MachineState) -> MachineState:
-    """One masked step for every lane.  ``img`` leaves are [G, CODE_WORDS],
-    ``ids`` is the per-lane image index [B], state leaves are [B, ...].
-
-    Bit-identical per lane to :func:`machine.step` applied to live lanes and
-    the identity on halted/out-of-fuel lanes.
-    """
+def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
+               tr: Optional[TraceState]):
+    """One masked step for every lane; the shared body of
+    :func:`fleet_step` (``tr is None`` — graph unchanged from the untraced
+    engine) and :func:`fleet_step_traced` (``tr`` carries the syscall ring
+    + policy tables; machine-state results stay bit-identical under the
+    default all-ALLOW policy)."""
+    traced = tr is not None
     B = s.pc.shape[0]
     lanes = jnp.arange(B)
     regs0, sp0, pc0, nzcv0, mem0 = s.regs, s.sp, s.pc, s.nzcv, s.mem
@@ -283,15 +329,35 @@ def fleet_step(img: FleetImages, ids: jnp.ndarray,
     # -- syscalls (scalar effects; the I/O word loop is under a cond below) --
     nr = x8
     in_pt = s.ptrace != 0
-    sys_read = m_svc & (nr == L.SYS_READ)
-    sys_write = m_svc & (nr == L.SYS_WRITE)
-    sys_getpid = m_svc & (nr == L.SYS_GETPID)
-    sys_exit = m_svc & (nr == L.SYS_EXIT)
-    sys_sigret = m_svc & (nr == L.SYS_RT_SIGRETURN)
-    sys_openat = m_svc & (nr == L.SYS_OPENAT)
-    sys_close = m_svc & (nr == L.SYS_CLOSE)
-    sys_enosys = m_svc & ~(sys_read | sys_write | sys_getpid | sys_exit
-                           | sys_sigret | sys_openat | sys_close)
+    if traced:
+        # Seccomp-style gate: resolve nr to a per-lane policy action, then
+        # only ALLOW lanes reach the sys_* branches.  The lookup is a chain
+        # of [B] selects over the 8 table columns rather than a gather —
+        # take_along_axis here gets wrapped in CPU parallel-task calls
+        # (the same pipeline issue as the word reads above) and costs ~10%
+        # census throughput; the select chain fuses into the step for ~3%.
+        any_svc = jnp.any(m_svc)
+        action = tr.pol_action[:, SLOT_UNKNOWN]
+        pol_arg = tr.pol_arg[:, SLOT_UNKNOWN]
+        for i, sysnr in enumerate(TRACE_SYS):
+            hit = nr == sysnr
+            action = jnp.where(hit, tr.pol_action[:, i], action)
+            pol_arg = jnp.where(hit, tr.pol_arg[:, i], pol_arg)
+        pol_deny = m_svc & (action == POL_DENY)
+        pol_emul = m_svc & (action == POL_EMULATE)
+        pol_kill = m_svc & (action == POL_KILL)
+        svc_exec = m_svc & (action == POL_ALLOW)
+    else:
+        svc_exec = m_svc
+    sys_read = svc_exec & (nr == L.SYS_READ)
+    sys_write = svc_exec & (nr == L.SYS_WRITE)
+    sys_getpid = svc_exec & (nr == L.SYS_GETPID)
+    sys_exit = svc_exec & (nr == L.SYS_EXIT)
+    sys_sigret = svc_exec & (nr == L.SYS_RT_SIGRETURN)
+    sys_openat = svc_exec & (nr == L.SYS_OPENAT)
+    sys_close = svc_exec & (nr == L.SYS_CLOSE)
+    sys_enosys = svc_exec & ~(sys_read | sys_write | sys_getpid | sys_exit
+                              | sys_sigret | sys_openat | sys_close)
 
     io_buf, io_n = x1, x2
     io_k = jnp.clip(io_n >> 3, 0, _MAX_IO_WORDS)
@@ -313,7 +379,12 @@ def fleet_step(img: FleetImages, ids: jnp.ndarray,
          zero,
          jnp.full((B,), -38, I64)],
         zero)
-    svc_x0_en = m_svc & ~(sys_exit | sys_sigret)
+    svc_x0_en = svc_exec & ~(sys_exit | sys_sigret)
+    if traced:
+        # DENY returns -errno, EMULATE returns the policy constant; both
+        # skip the kernel branch entirely and fall through to pc+4.
+        svc_x0 = jnp.select([pol_deny, pol_emul], [-pol_arg, pol_arg], svc_x0)
+        svc_x0_en = svc_x0_en | pol_deny | pol_emul
 
     # -- signal delivery / sigreturn (static 34-word frame window) -----------
     dlv = m_illegal | m_brk
@@ -446,6 +517,8 @@ def fleet_step(img: FleetImages, ids: jnp.ndarray,
     taken_bc = _cond_holds_v(nzcv0, cond)
     svc_pc = jnp.where(sys_exit, pc0,
                        jnp.where(sys_sigret, frame_in[:, 32] + 4, pc4))
+    if traced:
+        svc_pc = jnp.where(pol_kill, pc0, svc_pc)  # KILL parks like exit
     pc_new = jnp.select(
         [m_b | m_bl,
          m_br | m_blr | m_ret,
@@ -479,6 +552,9 @@ def fleet_step(img: FleetImages, ids: jnp.ndarray,
     halted = jnp.where(trap_fail, jnp.int64(HALT_TRAP), halted)
     exit_code = jnp.where(m_hlt | sys_exit, x0, s.exit_code)
     fault_pc = jnp.where(m_null | mem_bad | trap_fail, pc0, s.fault_pc)
+    if traced:
+        halted = jnp.where(pol_kill, jnp.int64(HALT_KILL), halted)
+        fault_pc = jnp.where(pol_kill, pc0, fault_pc)
 
     # -- bookkeeping ---------------------------------------------------------
     cycles = s.cycles + jnp.where(act, COST_TABLE[op], zero)
@@ -496,12 +572,66 @@ def fleet_step(img: FleetImages, ids: jnp.ndarray,
     out_sum = s.out_sum + jnp.where(sys_write & io_ok, io_sum, zero)
     in_signal = jnp.where(can_sig, jnp.int64(1),
                           jnp.where(sys_sigret, jnp.int64(0), s.in_signal))
+    enosys_count = s.enosys_count + jnp.where(sys_enosys, jnp.int64(1), zero)
+
+    # -- trace record append (traced path only) ------------------------------
+    if traced:
+        cap = tr.buf.shape[1]
+
+        # Svc steps are rare (one in tens of steps), so the whole record
+        # computation + 8-word row scatter hides behind the same
+        # batch-uniform cond as the policy lookup (like the sigframe push);
+        # parked out-of-bounds indices drop the non-svc lanes.
+        def append(buf):
+            ret = jnp.select(
+                [pol_deny, pol_emul, pol_kill, sys_exit, sys_sigret],
+                [-pol_arg, pol_arg, zero, x0, frame_in[:, 0]],
+                svc_x0)
+            verdict = jnp.select(
+                [pol_deny, pol_emul, pol_kill, sys_enosys],
+                [jnp.full((B,), POL_DENY, I64),
+                 jnp.full((B,), POL_EMULATE, I64),
+                 jnp.full((B,), POL_KILL, I64),
+                 jnp.full((B,), VERDICT_UNKNOWN, I64)],
+                zero)  # POL_ALLOW
+            flat = buf.reshape(B * cap, REC_WORDS)
+            pos = (lanes * cap).astype(I64) + tr.count % cap
+            idx = jnp.where(m_svc, pos, jnp.int64(B * cap) + lanes.astype(I64))
+            rows = jnp.stack([s.icount, pc0, nr, x0, x1, x2, ret, verdict],
+                             axis=1)
+            return flat.at[idx].set(rows, mode="drop",
+                                    unique_indices=True).reshape(B, cap,
+                                                                 REC_WORDS)
+
+        buf = lax.cond(any_svc, append, lambda b: b, tr.buf)
+        tr = tr._replace(
+            buf=buf, count=tr.count + jnp.where(m_svc, jnp.int64(1), zero))
 
     return s._replace(
         regs=regs, sp=sp, pc=pc, nzcv=nzcv, mem=mem, cycles=cycles,
         icount=icount, halted=halted, exit_code=exit_code, fault_pc=fault_pc,
         in_signal=in_signal, hook_count=hook_count, in_off=in_off,
-        out_count=out_count, out_sum=out_sum)
+        out_count=out_count, out_sum=out_sum, enosys_count=enosys_count), tr
+
+
+def fleet_step(img: FleetImages, ids: jnp.ndarray,
+               s: MachineState) -> MachineState:
+    """One masked step for every lane.  ``img`` leaves are [G, CODE_WORDS],
+    ``ids`` is the per-lane image index [B], state leaves are [B, ...].
+
+    Bit-identical per lane to :func:`machine.step` applied to live lanes and
+    the identity on halted/out-of-fuel lanes.
+    """
+    return _step_core(img, ids, s, None)[0]
+
+
+def fleet_step_traced(img: FleetImages, ids: jnp.ndarray, s: MachineState,
+                      tr: TraceState):
+    """:func:`fleet_step` plus the syscall ring/policy carry: appends one
+    record per executed svc and applies the per-lane policy tables.  Under
+    the default all-ALLOW policy the returned machine state is bit-identical
+    to the untraced step's (enforced by the repro.trace parity suite)."""
+    return _step_core(img, ids, s, tr)
 
 
 # ---------------------------------------------------------------------------
@@ -510,6 +640,12 @@ def fleet_step(img: FleetImages, ids: jnp.ndarray,
 
 def _alive(s: MachineState):
     return (s.halted == RUNNING) & (s.icount < s.fuel)
+
+
+def _patch_fuel(s: MachineState) -> MachineState:
+    return s._replace(halted=jnp.where(
+        (s.halted == RUNNING) & (s.icount >= s.fuel),
+        jnp.int64(HALT_FUEL), s.halted))
 
 
 def _run_fleet(img: FleetImages, ids: jnp.ndarray, s: MachineState,
@@ -522,15 +658,33 @@ def _run_fleet(img: FleetImages, ids: jnp.ndarray, s: MachineState,
         return ss
 
     s = lax.while_loop(lambda ss: jnp.any(_alive(ss)), body, s)
-    return s._replace(halted=jnp.where(
-        (s.halted == RUNNING) & (s.icount >= s.fuel),
-        jnp.int64(HALT_FUEL), s.halted))
+    return _patch_fuel(s)
+
+
+def _run_fleet_traced(img: FleetImages, ids: jnp.ndarray, s: MachineState,
+                      tr: TraceState, chunk: int):
+    def scan_body(carry, _):
+        ss, tt = carry
+        return _step_core(img, ids, ss, tt), None
+
+    def body(c):
+        c, _ = lax.scan(scan_body, c, None, length=chunk)
+        return c
+
+    s, tr = lax.while_loop(lambda c: jnp.any(_alive(c[0])), body, (s, tr))
+    return _patch_fuel(s), tr
 
 
 @functools.lru_cache(maxsize=None)
 def _jitted_run(chunk: int):
     return jax.jit(functools.partial(_run_fleet, chunk=chunk),
                    donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_run_traced(chunk: int):
+    return jax.jit(functools.partial(_run_fleet_traced, chunk=chunk),
+                   donate_argnums=(2, 3))
 
 
 # ---------------------------------------------------------------------------
@@ -560,14 +714,42 @@ def _run_fleet_span(img: FleetImages, ids: jnp.ndarray, s: MachineState,
     return s
 
 
+def _run_fleet_span_traced(img: FleetImages, ids: jnp.ndarray,
+                           s: MachineState, tr: TraceState,
+                           chunk: int, span: int):
+    def scan_body(carry, _):
+        ss, tt = carry
+        return _step_core(img, ids, ss, tt), None
+
+    def body(c):
+        (ss, tt), k = c
+        (ss, tt), _ = lax.scan(scan_body, (ss, tt), None, length=chunk)
+        return (ss, tt), k + 1
+
+    def cond(c):
+        (ss, _), k = c
+        return jnp.any(_alive(ss)) & (k < span)
+
+    (s, tr), _ = lax.while_loop(cond, body, ((s, tr), jnp.int32(0)))
+    return s, tr
+
+
 @functools.lru_cache(maxsize=None)
 def _jitted_span(chunk: int, span: int):
     return jax.jit(functools.partial(_run_fleet_span, chunk=chunk, span=span),
                    donate_argnums=(2,))
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_span_traced(chunk: int, span: int):
+    return jax.jit(functools.partial(_run_fleet_span_traced, chunk=chunk,
+                                     span=span),
+                   donate_argnums=(2, 3))
+
+
 def run_fleet_span(imgs: FleetImages, states: MachineState, img_ids,
-                   *, steps: int, chunk: int = DEFAULT_CHUNK) -> MachineState:
+                   *, steps: int, chunk: int = DEFAULT_CHUNK,
+                   trace: Optional[TraceState] = None):
     """One bounded generation: up to ``steps`` masked steps (rounded up to a
     whole number of ``chunk``-sized scans) in ONE device dispatch.
 
@@ -575,6 +757,10 @@ def run_fleet_span(imgs: FleetImages, states: MachineState, img_ids,
     a lane through any sequence of generations gives exactly the state the
     unbounded :func:`run_fleet` would.  State buffers are donated; the
     caller must drop its reference and keep the returned state.
+
+    With ``trace`` (a :class:`TraceState`, also donated) every executed svc
+    appends a ring record and the per-lane policy tables gate the syscall
+    branches; returns ``(states, trace)`` instead of just ``states``.
     """
     if chunk < 1:
         raise ValueError(f"chunk must be >= 1, got {chunk}")
@@ -583,7 +769,10 @@ def run_fleet_span(imgs: FleetImages, states: MachineState, img_ids,
     span = -(-steps // chunk)
     imgs = pack_images(imgs)
     img_ids = jnp.asarray(img_ids, I32)
-    return _jitted_span(int(chunk), int(span))(imgs, img_ids, states)
+    if trace is None:
+        return _jitted_span(int(chunk), int(span))(imgs, img_ids, states)
+    return _jitted_span_traced(int(chunk), int(span))(imgs, img_ids, states,
+                                                      trace)
 
 
 def finish_halt_codes(halted: np.ndarray, icount: np.ndarray,
@@ -632,14 +821,39 @@ def _admit_lanes(s: MachineState, idx: jnp.ndarray, regs: jnp.ndarray,
         in_off=put(s.in_off, zeros),
         out_count=put(s.out_count, zeros),
         out_sum=put(s.out_sum, zeros),
+        enosys_count=put(s.enosys_count, zeros),
     )
 
 
 _jitted_admit = jax.jit(_admit_lanes, donate_argnums=(0,))
 
 
+def _admit_lanes_traced(s: MachineState, tr: TraceState, idx: jnp.ndarray,
+                        regs, pc, fuel, sig_handler, ptrace, virt_getpid,
+                        pol_action, pol_arg):
+    """The traced admission: reset each admitted lane's ring (row + count)
+    and install its per-request policy tables, same donated-scatter shape as
+    the machine-state admission."""
+    k = idx.shape[0]
+    cap = tr.buf.shape[1]
+    tr = tr._replace(
+        buf=tr.buf.at[idx].set(jnp.zeros((k, cap, REC_WORDS), I64),
+                               mode="drop"),
+        count=tr.count.at[idx].set(jnp.zeros((k,), I64), mode="drop"),
+        pol_action=tr.pol_action.at[idx].set(pol_action, mode="drop"),
+        pol_arg=tr.pol_arg.at[idx].set(pol_arg, mode="drop"),
+    )
+    return _admit_lanes(s, idx, regs, pc, fuel, sig_handler, ptrace,
+                        virt_getpid), tr
+
+
+_jitted_admit_traced = jax.jit(_admit_lanes_traced, donate_argnums=(0, 1))
+
+
 def admit_lanes(states: MachineState, slots: Sequence[int],
-                lane_states: Sequence[MachineState]) -> MachineState:
+                lane_states: Sequence[MachineState], *,
+                trace: Optional[TraceState] = None,
+                policies: Optional[Sequence] = None):
     """Admit fresh scalar initial states into lanes ``slots`` of a batched
     state, in place (donated scatter; one dispatch for the whole batch of
     admissions, one compilation per admission-batch width).
@@ -648,14 +862,34 @@ def admit_lanes(states: MachineState, slots: Sequence[int],
     only their entry pc / fuel / mechanism flags / seeded registers are
     carried — everything else is reset exactly as ``initial_state`` does,
     which avoids shipping each lane's 256 KiB zero memory image.
+
+    With ``trace`` the ring rows of the admitted lanes are recycled (count
+    reset, records zeroed) and ``policies`` — one ``(action_row, arg_row)``
+    pair per slot, e.g. from :func:`repro.trace.policy.compile_policy`, or
+    ``None`` entries for all-ALLOW — is scattered into the policy tables;
+    returns ``(states, trace)``.
     """
     assert len(slots) == len(lane_states) and len(slots) > 0
     idx = jnp.asarray(np.asarray(slots, np.int64))
     regs = jnp.stack([ls.regs for ls in lane_states])
     pack = lambda f: jnp.stack([getattr(ls, f) for ls in lane_states])
-    return _jitted_admit(states, idx, regs, pack("pc"), pack("fuel"),
-                         pack("sig_handler"), pack("ptrace"),
-                         pack("virt_getpid"))
+    if trace is None:
+        assert policies is None, "policies require a trace carry"
+        return _jitted_admit(states, idx, regs, pack("pc"), pack("fuel"),
+                             pack("sig_handler"), pack("ptrace"),
+                             pack("virt_getpid"))
+    if policies is None:
+        policies = [None] * len(slots)
+    assert len(policies) == len(slots)
+    pa = np.full((len(slots), N_POLICY_SLOTS), POL_ALLOW, np.int32)
+    pg = np.zeros((len(slots), N_POLICY_SLOTS), np.int64)
+    for i, pol in enumerate(policies):
+        if pol is not None:
+            pa[i], pg[i] = pol
+    return _jitted_admit_traced(states, trace, idx, regs, pack("pc"),
+                                pack("fuel"), pack("sig_handler"),
+                                pack("ptrace"), pack("virt_getpid"),
+                                jnp.asarray(pa), jnp.asarray(pg))
 
 
 def _set_image_row(packed, imm, row, new_packed, new_imm):
@@ -678,7 +912,7 @@ def set_image_row(imgs: FleetImages, row: int,
 
 
 def run_fleet(imgs, states, img_ids=None, *, chunk: int = DEFAULT_CHUNK,
-              shard: bool = False) -> MachineState:
+              shard: bool = False, trace: Optional[TraceState] = None):
     """Run every lane to halt (or out of fuel) in one device dispatch.
 
     ``imgs``: a ``DecodedImage`` with leaves [G, CODE_WORDS] (or a list of
@@ -690,6 +924,11 @@ def run_fleet(imgs, states, img_ids=None, *, chunk: int = DEFAULT_CHUNK,
     happens once per ``chunk`` steps.  Results are invariant to ``chunk``
     (only dispatch count changes).  ``shard=True`` lane-partitions the fleet
     across available devices when the lane count divides the device count.
+
+    With ``trace`` (a :class:`TraceState`, donated like the states) the run
+    records every executed svc into the per-lane rings and applies the
+    per-lane policy tables; returns ``(states, trace)``.  Machine states
+    under the default all-ALLOW policy are bit-identical to an untraced run.
     """
     imgs = pack_images(imgs)
     if not isinstance(states, MachineState):  # list/tuple of scalar states
@@ -706,10 +945,19 @@ def run_fleet(imgs, states, img_ids=None, *, chunk: int = DEFAULT_CHUNK,
 
     if shard:
         from repro.parallel.sharding import shard_fleet
-        imgs, img_ids, states = shard_fleet(imgs, img_ids, states)
+        if trace is None:
+            imgs, img_ids, states = shard_fleet(imgs, img_ids, states)
+        else:
+            imgs, img_ids, states, trace = shard_fleet(
+                imgs, img_ids, states, trace=trace)
 
-    out = _jitted_run(int(chunk))(imgs, img_ids, states)
-    return jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
+    if trace is None:
+        out = _jitted_run(int(chunk))(imgs, img_ids, states)
+        return jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
+    out, tr = _jitted_run_traced(int(chunk))(imgs, img_ids, states, trace)
+    out = jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
+    tr = jax.tree_util.tree_map(lambda x: x.block_until_ready(), tr)
+    return out, tr
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,23 @@ class PinnedSite:
 
 
 @dataclasses.dataclass
+class PolicyRule:
+    """One seccomp-style filter line of the config file (repro.trace).
+
+    ``syscall_nr`` selects the syscall (-1 = every syscall, i.e. the
+    default-action line; an unmodelled number selects the whole UNKNOWN
+    class).  ``action`` is one of ``allow`` / ``deny`` / ``emulate`` /
+    ``kill``; ``arg`` carries the errno (deny) or the constant return
+    value (emulate).  Later rules override earlier ones, like seccomp's
+    last-match-wins filter programs.
+    """
+
+    syscall_nr: int = -1
+    action: str = "allow"
+    arg: int = 0
+
+
+@dataclasses.dataclass
 class HookConfig:
     # Paper default: completeness strategies are OFF (pure-R1/R2 fast path,
     # "the primary purpose of our Completeness policy is for insurance").
@@ -54,6 +71,15 @@ class HookConfig:
     # max_restarts).
     serve_gen_steps: int = 256
     serve_max_restarts: int = 4
+    # Syscall tracing + policy subsystem (repro.trace): ring capacity per
+    # lane, whether the serving layer (FleetServer) traces by default —
+    # fleet entry points only trace on an explicit trace= argument, so
+    # their return arity never depends on config state — and the default
+    # seccomp-style policy (empty = allow everything, which keeps traced
+    # machine states bit-identical to untraced runs).
+    trace_enabled: bool = False
+    trace_cap: int = 64
+    policy: List[PolicyRule] = dataclasses.field(default_factory=list)
     pinned: List[PinnedSite] = dataclasses.field(default_factory=list)
 
     # -- persistence -----------------------------------------------------------
@@ -68,7 +94,8 @@ class HookConfig:
             return cls()
         d = json.loads(p.read_text())
         pins = [PinnedSite(**x) for x in d.pop("pinned", [])]
-        return cls(pinned=pins, **d)
+        rules = [PolicyRule(**x) for x in d.pop("policy", [])]
+        return cls(pinned=pins, policy=rules, **d)
 
     def pin(self, *, lib: str = "", offset: int = -1, vaddr: int = -1,
             syscall_nr: int = -1) -> None:

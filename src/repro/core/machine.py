@@ -39,6 +39,7 @@ HALT_SEGV = 2
 HALT_TRAP = 3  # brk/illegal with no handler registered
 HALT_FUEL = 4
 HALT_BADMEM = 5
+HALT_KILL = 6  # terminated by a seccomp-style KILL policy (fleet/serve only)
 
 SIGFRAME_WORDS = 34  # x0..x30, sp, pc, nzcv
 _SIGFRAME_IDX = (L.SIGFRAME - L.DATA_BASE) // 8
@@ -78,6 +79,7 @@ class MachineState(NamedTuple):
     in_off: jnp.ndarray       # modelled input-stream position (read)
     out_count: jnp.ndarray    # modelled output effects (write)
     out_sum: jnp.ndarray
+    enosys_count: jnp.ndarray  # syscalls that fell through to -ENOSYS
 
 
 def decode_image(code_words: np.ndarray) -> DecodedImage:
@@ -130,6 +132,7 @@ def make_state(entry_pc: int, fuel: int = 2_000_000) -> MachineState:
         halted=z, exit_code=z, fault_pc=z,
         sig_handler=z, in_signal=z, ptrace=z, virt_getpid=z,
         hook_count=z, pid=jnp.int64(L.PID), in_off=z, out_count=z, out_sum=z,
+        enosys_count=z,
     )
 
 
@@ -299,6 +302,7 @@ def _do_svc(s: MachineState) -> MachineState:
         return _adv(_wr(s, 0, jnp.int64(0)))
 
     def k_enosys(s):
+        s = s._replace(enosys_count=s.enosys_count + 1)
         return _adv(_wr(s, 0, jnp.int64(-38)))
 
     return lax.switch(branch, [

@@ -242,6 +242,28 @@ def indirect_svc(n: int = 2) -> Asm:
     return a
 
 
+def unknown_svc(n: int = 4, nr: int = 181) -> Asm:
+    """``n`` calls of an *unmodelled* syscall number (default 181, chown on
+    arm64): every one falls through the modelled kernel's dispatch to
+    -ENOSYS.  Exercises the ``enosys_count`` statistic and the trace
+    subsystem's UNKNOWN verdict."""
+    from .fleet import TRACE_SYS  # the modelled set; guard tracks it
+    assert nr not in TRACE_SYS, f"{nr} is a modelled syscall"
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(*isa.mov_imm48(19, n))
+    a.label("loop")
+    a.emit(isa.movz(8, nr, sf=0))
+    a.bl_to("libc.so:raw_svc")
+    a.emit(isa.mov_r(20, 0))      # keep the -ENOSYS for verification
+    a.emit(isa.subsi(19, 19, 1))
+    a.b_to("loop", cond="ne")
+    a.emit(isa.movz(10, L.SCRATCH & 0xFFFF), isa.movk(10, L.SCRATCH >> 16, 1))
+    a.emit(isa.str_imm(20, 10))
+    _exit0(a)
+    return a
+
+
 def retry_loop(retries: int = 3) -> Asm:
     """Strategy C2: libc's retry_svc has a direct back-edge onto its svc."""
     a = Asm(APP_BASE)

@@ -113,6 +113,23 @@ def run_prepared(pp: PreparedProcess, *, fuel: int = 2_000_000,
     return M.run_image(pp.decoded, initial_state(pp, fuel=fuel, regs=regs))
 
 
+def fleet_trace(pps: Sequence[PreparedProcess], *,
+                cap: Optional[int] = None) -> F.TraceState:
+    """The trace carry for a fleet of prepared processes: one ring per lane
+    plus that lane's policy tables compiled from its ``HookConfig.policy``
+    (empty policies compile to all-ALLOW — architecturally invisible).
+
+    ``cap`` defaults to the largest ``trace_cap`` among the configs.
+    """
+    from repro.trace import recorder  # local: repro.trace depends on core
+    if cap is None:
+        caps = [pp.cfg.trace_cap for pp in pps if pp.cfg is not None]
+        cap = max(caps) if caps else F.DEFAULT_TRACE_CAP
+    pols = [pp.cfg.policy if pp.cfg is not None and pp.cfg.policy else None
+            for pp in pps]
+    return recorder.make_trace_state(len(pps), cap, policies=pols)
+
+
 def _image_digest(pp: PreparedProcess) -> bytes:
     return hashlib.sha1(
         np.ascontiguousarray(pp.image.words).tobytes()).digest()
@@ -192,7 +209,8 @@ def pack_fleet(pps: Sequence[PreparedProcess], *,
                fuel: int = 2_000_000,
                regs: Optional[Sequence[Optional[Dict[int, int]]]] = None,
                table: Optional[FleetImageTable] = None,
-               ) -> Tuple[M.DecodedImage, np.ndarray, M.MachineState]:
+               trace: Optional[bool] = None,
+               ):
     """Stack prepared processes into (images, img_ids, states) for
     :func:`repro.core.fleet.run_fleet`.
 
@@ -202,6 +220,15 @@ def pack_fleet(pps: Sequence[PreparedProcess], *,
     the images are *admitted incrementally* into that fixed-capacity stack
     instead — the continuous-batching entry path, where later admissions
     must not reshape (and so recompile) the fleet.
+
+    ``trace=True`` appends a fourth element: the
+    :class:`repro.core.fleet.TraceState` carry from :func:`fleet_trace`,
+    ready to pass to ``run_fleet(..., trace=...)``.  The return arity
+    depends ONLY on this explicit argument (never on the configs), so
+    existing 3-way unpack call sites can't break at a distance;
+    ``HookConfig.trace_enabled`` is the *serving* default
+    (:class:`repro.serve.fleet_server.FleetServer`), which returns traces
+    via ``FleetResult`` instead of a tuple.
     """
     ids = np.zeros(len(pps), np.int32)
     if table is not None:
@@ -222,25 +249,37 @@ def pack_fleet(pps: Sequence[PreparedProcess], *,
         regs = [None] * len(pps)
     states = F.stack_states([initial_state(pp, fuel=fuel, regs=rg)
                              for pp, rg in zip(pps, regs)])
-    return imgs, ids, states
+    if not trace:
+        return imgs, ids, states
+    return imgs, ids, states, fleet_trace(pps)
 
 
 def run_fleet_prepared(pps: Sequence[PreparedProcess], *,
                        fuel: int = 2_000_000,
                        chunk: Optional[int] = None,
                        regs: Optional[Sequence[Optional[Dict[int, int]]]] = None,
-                       shard: bool = False) -> M.MachineState:
+                       shard: bool = False,
+                       trace: Optional[bool] = None):
     """Run every prepared process to completion in ONE device dispatch.
 
     ``chunk`` defaults to the first process's ``HookConfig.fleet_chunk``.
     Lane i of the returned batched state is bit-identical to
     ``run_prepared(pps[i], fuel=fuel, regs=regs[i])``.
+
+    With ``trace=True`` returns ``(states, trace_state)`` — the syscall
+    rings and policy verdicts of the whole fleet, captured in the same
+    single dispatch.  Arity depends only on the explicit argument (see
+    :func:`pack_fleet`).
     """
-    imgs, ids, states = pack_fleet(pps, fuel=fuel, regs=regs)
+    packed = pack_fleet(pps, fuel=fuel, regs=regs, trace=trace)
     if chunk is None:
         cfg = next((pp.cfg for pp in pps if pp.cfg is not None), None)
         chunk = cfg.fleet_chunk if cfg is not None else F.DEFAULT_CHUNK
-    return F.run_fleet(imgs, states, ids, chunk=chunk, shard=shard)
+    if len(packed) == 3:
+        imgs, ids, states = packed
+        return F.run_fleet(imgs, states, ids, chunk=chunk, shard=shard)
+    imgs, ids, states, ts = packed
+    return F.run_fleet(imgs, states, ids, chunk=chunk, shard=shard, trace=ts)
 
 
 def hook_invocations(state: M.MachineState) -> int:

@@ -236,27 +236,32 @@ def lane_sharding(mesh, extra_dims: int = 0):
         mesh, P(LANE_AXIS, *([None] * extra_dims)))
 
 
-def shard_fleet(imgs, img_ids, states, mesh=None):
+def shard_fleet(imgs, img_ids, states, mesh=None, trace=None):
     """Partition a fleet across devices: states/ids split along lanes, the
-    deduplicated decode tables replicated.
+    deduplicated decode tables replicated.  ``trace`` (a fleet
+    ``TraceState``) is lane-leading like the states and splits the same way.
 
     No-op (returns inputs unchanged) on a single device or when the device
     count does not divide the lane count — the fleet then runs fully
-    replicated, which is always correct.
+    replicated, which is always correct.  Returns a 4-tuple iff ``trace``
+    was passed.
     """
     mesh = mesh or fleet_mesh()
     ndev = int(np.prod(mesh.devices.shape))
     n_lanes = int(states.pc.shape[0])
     if ndev <= 1 or n_lanes % ndev != 0:
-        return imgs, img_ids, states
+        return ((imgs, img_ids, states) if trace is None
+                else (imgs, img_ids, states, trace))
 
     replicate = jax.sharding.NamedSharding(mesh, P())
     imgs = jax.tree_util.tree_map(
         lambda x: jax.device_put(x, replicate), imgs)
     img_ids = jax.device_put(img_ids, lane_sharding(mesh))
-    states = jax.tree_util.tree_map(
-        lambda x: jax.device_put(x, lane_sharding(mesh, x.ndim - 1)), states)
-    return imgs, img_ids, states
+    by_lane = lambda x: jax.device_put(x, lane_sharding(mesh, x.ndim - 1))
+    states = jax.tree_util.tree_map(by_lane, states)
+    if trace is None:
+        return imgs, img_ids, states
+    return imgs, img_ids, states, jax.tree_util.tree_map(by_lane, trace)
 
 
 def cache_spec(cfg, cache) -> object:

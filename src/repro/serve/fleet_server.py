@@ -26,13 +26,21 @@ the serving layer the ROADMAP asks for:
   the trap -> config -> re-execute flow without ever leaving the
   one-dispatch-per-generation regime (``stats()["scalar_reexecutions"]``
   stays 0).
+* **Tracing + policy (repro.trace).**  With ``trace=True`` every lane
+  carries a syscall ring and a seccomp-style policy table through the
+  generations; ``submit(policy=[...])`` installs per-request rules, the
+  harvest decodes each finished lane's ring into strace-style
+  :class:`repro.trace.TraceRecord` rows on its :class:`FleetResult`, and
+  ``admit_lanes`` recycles the ring rows in the same donated scatter as
+  the machine state.  Machine states stay bit-identical to an untraced
+  server under all-ALLOW policies.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -40,10 +48,12 @@ import numpy as np
 from repro.core import fleet as F
 from repro.core import machine as M
 from repro.core.completeness import C3Event, diagnose_c3_fleet
-from repro.core.hookcfg import HookConfig
+from repro.core.hookcfg import HookConfig, PolicyRule
 from repro.core.isa import Asm
 from repro.core.runtime import (FleetImageTable, Mechanism, PreparedProcess,
                                 initial_state, prepare)
+from repro.trace import policy as trace_policy
+from repro.trace import recorder as trace_recorder
 
 AppBuilder = Callable[[], Asm]
 
@@ -68,6 +78,7 @@ class FleetRequest:
     row: int = -1
     attempts: int = 0                  # executions so far (C3 restarts + 1)
     events: List[C3Event] = dataclasses.field(default_factory=list)
+    policy: Optional[trace_policy.PolicyRows] = None  # compiled at submit
 
 
 @dataclasses.dataclass
@@ -83,6 +94,10 @@ class FleetResult:
     completed_gen: int
     admission_wait_gens: int
     admission_wait_s: float
+    # syscall trace of the published attempt (traced servers only)
+    trace: List[trace_recorder.TraceRecord] = dataclasses.field(
+        default_factory=list)
+    trace_dropped: int = 0             # ring overflow: oldest records lost
 
 
 class FleetServer:
@@ -99,7 +114,8 @@ class FleetServer:
     def __init__(self, pool: int = 8, *, cfg: Optional[HookConfig] = None,
                  gen_steps: Optional[int] = None, chunk: Optional[int] = None,
                  table_capacity: Optional[int] = None,
-                 fuel: int = 2_000_000, shard: bool = False):
+                 fuel: int = 2_000_000, shard: bool = False,
+                 trace: Optional[bool] = None):
         assert pool >= 1
         self.pool = pool
         self.cfg = cfg or HookConfig()
@@ -110,6 +126,8 @@ class FleetServer:
             raise ValueError(
                 f"gen_steps/chunk must be >= 1, got {self.gen_steps}/{self.chunk}")
         self.default_fuel = fuel
+        self.trace_enabled = bool(self.cfg.trace_enabled if trace is None
+                                  else trace)
         self.table = FleetImageTable(table_capacity or pool + 8)
         self._slots: List[Optional[FleetRequest]] = [None] * pool
         self._ids = np.zeros(pool, np.int32)
@@ -125,12 +143,18 @@ class FleetServer:
         self.scalar_reexecutions = 0             # stays 0: C3 is fleet-native
         self.harvested_steps = 0                 # steps of published attempts
         self.discarded_steps = 0                 # steps of faulted C3 attempts
+        self.enosys_total = 0                    # -ENOSYS fall-throughs seen
+        self.trace_records = 0                   # ring records published
+        self.trace_dropped = 0                   # ring overflow drops
         self._wait_gens: List[int] = []
         self._wait_s: List[float] = []
 
         empty = M.make_state(0, fuel=0)._replace(
             halted=jnp.int64(M.HALT_EXIT))
         self._states = F.stack_states([empty] * pool)
+        self._trace = (trace_recorder.make_trace_state(pool,
+                                                       self.cfg.trace_cap)
+                       if self.trace_enabled else None)
         # one dummy per unused admission slot: admissions are padded to pool
         # width so the donated scatter compiles exactly once
         self._pad_state = M.make_state(0, fuel=0)
@@ -138,8 +162,11 @@ class FleetServer:
             # lane-partition the pool state once; donated dispatches keep
             # the placement (img ids stay host-side, re-shipped per dispatch)
             from repro.parallel.sharding import shard_fleet
-            self._states = shard_fleet(
-                self.table.images, jnp.asarray(self._ids), self._states)[2]
+            parts = shard_fleet(self.table.images, jnp.asarray(self._ids),
+                                self._states, trace=self._trace)
+            self._states = parts[2]
+            if self._trace is not None:
+                self._trace = parts[3]
 
     # -- request intake -------------------------------------------------------
 
@@ -147,16 +174,29 @@ class FleetServer:
                mechanism: Mechanism = Mechanism.ASC,
                cfg: Optional[HookConfig] = None, virtualize: bool = False,
                fuel: Optional[int] = None,
-               regs: Optional[Dict[int, int]] = None) -> int:
+               regs: Optional[Dict[int, int]] = None,
+               policy: Optional[Sequence[PolicyRule]] = None) -> int:
         """Queue one simulated process; returns its request id.
 
         ``app`` is either a zero-arg program builder (re-preparable: C3 can
         recycle the lane with the pinned config, exactly ``run_with_c3``'s
         loop) or an already-:func:`prepare`-d process (served as-is; a C3
         fault is then published rather than recycled).
+
+        ``policy`` installs per-request seccomp-style rules
+        (:class:`repro.core.hookcfg.PolicyRule`, e.g. via the
+        :mod:`repro.trace.policy` constructors) for this lane only; it
+        defaults to the request config's ``policy`` list.  Requires a
+        traced server (``trace=True`` / ``cfg.trace_enabled``).
         """
         rcfg = cfg or (self.cfg if isinstance(app, PreparedProcess) else
                        dataclasses.replace(self.cfg, pinned=list(self.cfg.pinned)))
+        if policy is None and rcfg.policy:
+            policy = rcfg.policy
+        if policy is not None and not self.trace_enabled:
+            raise ValueError(
+                "per-request policies need a traced server "
+                "(FleetServer(trace=True) or cfg.trace_enabled)")
         if isinstance(app, PreparedProcess):
             if ((mechanism is not Mechanism.ASC
                  and mechanism is not app.mechanism)
@@ -173,7 +213,9 @@ class FleetServer:
             rid=self._next_rid, pp=pp, builder=builder, cfg=rcfg,
             mechanism=mechanism, virtualize=virtualize,
             fuel=int(self.default_fuel if fuel is None else fuel), regs=regs,
-            submitted_gen=self.generation, submitted_s=time.perf_counter())
+            submitted_gen=self.generation, submitted_s=time.perf_counter(),
+            policy=(trace_policy.compile_policy(policy)
+                    if policy is not None else None))
         self._next_rid += 1
         req.attempts = 1
         self._queue.append(req)
@@ -186,11 +228,13 @@ class FleetServer:
 
     def _admit_pending(self) -> None:
         """Fill freed slots: C3 recycles first, then the request queue —
-        one padded, donated scatter for the whole admission batch."""
-        slots, lanes = [], []
+        one padded, donated scatter for the whole admission batch (the
+        trace rings and policy tables recycle in the same scatter)."""
+        slots, lanes, pols = [], [], []
         for req in self._readmit:                # slot already owned
             slots.append(req.slot)
             lanes.append(initial_state(req.pp, fuel=req.fuel, regs=req.regs))
+            pols.append(req.policy)
             self._ids[req.slot] = req.row
             self._fuel[req.slot] = req.fuel
         self._readmit.clear()
@@ -214,18 +258,29 @@ class FleetServer:
             self._fuel[slot] = req.fuel
             slots.append(slot)
             lanes.append(initial_state(req.pp, fuel=req.fuel, regs=req.regs))
+            pols.append(req.policy)
         if not slots:
             return
         pad = self.pool - len(slots)             # park padding out of range
         slots += [self.pool + i for i in range(pad)]
         lanes += [self._pad_state] * pad
-        self._states = F.admit_lanes(self._states, slots, lanes)
+        pols += [None] * pad
+        if self._trace is None:
+            self._states = F.admit_lanes(self._states, slots, lanes)
+        else:
+            self._states, self._trace = F.admit_lanes(
+                self._states, slots, lanes, trace=self._trace, policies=pols)
 
     def _harvest(self) -> List[FleetResult]:
         halted = np.asarray(self._states.halted)
         icount = np.asarray(self._states.icount)
         patched = F.finish_halt_codes(halted, icount, self._fuel)
         done = patched != M.RUNNING
+        if done.any():  # one transfer per field, only when publishing
+            enosys = np.asarray(self._states.enosys_count)
+            if self._trace is not None:
+                trace_buf = np.asarray(self._trace.buf)
+                trace_cnt = np.asarray(self._trace.count)
 
         # batch C3 diagnosis over every faulted, recyclable lane at once
         c3_pps: List[Optional[PreparedProcess]] = [None] * self.pool
@@ -278,13 +333,19 @@ class FleetServer:
             lane = F.unstack_state(self._states, i)
             if patched[i] != halted[i]:  # ran out of fuel mid-generation
                 lane = lane._replace(halted=jnp.int64(int(patched[i])))
+            recs, dropped = ([], 0) if self._trace is None else \
+                trace_recorder.harvest_lane(trace_buf[i], trace_cnt[i])
             results.append(FleetResult(
                 rid=req.rid, state=lane, events=req.events,
                 attempts=req.attempts, submitted_gen=req.submitted_gen,
                 admitted_gen=req.admitted_gen, completed_gen=self.generation,
                 admission_wait_gens=req.admitted_gen - req.submitted_gen,
-                admission_wait_s=req.admitted_s - req.submitted_s))
+                admission_wait_s=req.admitted_s - req.submitted_s,
+                trace=recs, trace_dropped=dropped))
             self.harvested_steps += int(icount[i])
+            self.enosys_total += int(enosys[i])
+            self.trace_records += len(recs) + dropped
+            self.trace_dropped += dropped
             self.completed += 1
             self.table.release(req.row)
             self._slots[i] = None
@@ -295,9 +356,14 @@ class FleetServer:
         self._admit_pending()
         if all(r is None for r in self._slots):
             return []
-        self._states = F.run_fleet_span(
-            self.table.images, self._states, self._ids,
-            steps=self.gen_steps, chunk=self.chunk)
+        if self._trace is None:
+            self._states = F.run_fleet_span(
+                self.table.images, self._states, self._ids,
+                steps=self.gen_steps, chunk=self.chunk)
+        else:
+            self._states, self._trace = F.run_fleet_span(
+                self.table.images, self._states, self._ids,
+                steps=self.gen_steps, chunk=self.chunk, trace=self._trace)
         self.dispatches += 1
         self.generation += 1
         return self._harvest()
@@ -337,6 +403,10 @@ class FleetServer:
             "scalar_reexecutions": self.scalar_reexecutions,
             "image_admissions": self.table.admissions,
             "image_dedup_hits": self.table.dedup_hits,
+            "enosys_total": self.enosys_total,
+            "trace_enabled": self.trace_enabled,
+            "trace_records": self.trace_records,
+            "trace_dropped": self.trace_dropped,
             "admission_wait_gens_mean": float(np.mean(waits_g)),
             "admission_wait_gens_max": int(np.max(waits_g)),
             "admission_wait_ms_mean": 1e3 * float(np.mean(waits_s)),

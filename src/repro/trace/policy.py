@@ -1,0 +1,97 @@
+"""Seccomp-style syscall policy: host-side rule compilation (repro.trace).
+
+The paper's hooks exist so tools can "modify or monitor application
+behavior"; this module is the *modify* half.  A policy is an ordered list
+of :class:`repro.core.hookcfg.PolicyRule` lines — the same config-file
+shape completeness strategy C3 appends to — compiled down to fixed-width
+per-lane action/argument tables (one slot per modelled syscall plus the
+catch-all UNKNOWN slot).  The fleet step resolves ``x8`` to a slot and
+gates the ``sys_*`` branches on the looked-up action
+(:func:`repro.core.fleet._step_core`), so enforcement costs one 8-wide
+gather per lane per step and never leaves the one-dispatch batched path.
+
+Actions (also the recorded verdicts — see :mod:`repro.trace.recorder`):
+
+* ``ALLOW``   — the syscall executes normally (the default for every slot).
+* ``DENY``    — the kernel branch is skipped, ``x0 = -arg`` (errno).
+* ``EMULATE`` — skipped, ``x0 = arg`` (a constant, e.g. a virtual pid).
+* ``KILL``    — the lane halts with ``HALT_KILL`` (seccomp's
+  ``SECCOMP_RET_KILL``).
+
+An empty policy compiles to all-ALLOW tables, under which traced machine
+states are bit-identical to untraced runs (the parity suite enforces it).
+"""
+from __future__ import annotations
+
+import enum
+from typing import Iterable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.fleet import (N_POLICY_SLOTS, POL_ALLOW, POL_DENY,
+                              POL_EMULATE, POL_KILL, SLOT_UNKNOWN, TRACE_SYS)
+from repro.core.hookcfg import PolicyRule
+
+
+class Action(enum.IntEnum):
+    ALLOW = POL_ALLOW
+    DENY = POL_DENY
+    EMULATE = POL_EMULATE
+    KILL = POL_KILL
+
+
+PolicyRows = Tuple[np.ndarray, np.ndarray]  # (int32[NSLOT], int64[NSLOT])
+
+
+# -- rule constructors (sugar over hookcfg.PolicyRule) ------------------------
+
+def allow(syscall_nr: int = -1) -> PolicyRule:
+    return PolicyRule(syscall_nr=syscall_nr, action="allow")
+
+
+def deny(syscall_nr: int = -1, errno: int = 1) -> PolicyRule:
+    """DENY with ``-errno`` as the return value (default EPERM)."""
+    return PolicyRule(syscall_nr=syscall_nr, action="deny", arg=errno)
+
+
+def emulate(syscall_nr: int, value: int) -> PolicyRule:
+    return PolicyRule(syscall_nr=syscall_nr, action="emulate", arg=value)
+
+
+def kill(syscall_nr: int = -1) -> PolicyRule:
+    return PolicyRule(syscall_nr=syscall_nr, action="kill")
+
+
+def _slot_of(nr: int) -> int:
+    return TRACE_SYS.index(nr) if nr in TRACE_SYS else SLOT_UNKNOWN
+
+
+def compile_policy(rules: Optional[Iterable[PolicyRule]]) -> PolicyRows:
+    """Rules -> ``(action_row, arg_row)`` slot tables, last match wins.
+
+    ``syscall_nr == -1`` sets every slot (the default-action line);
+    a number outside the modelled set selects the UNKNOWN slot, i.e. the
+    whole -ENOSYS fall-through class at once.
+    """
+    action_row = np.full(N_POLICY_SLOTS, POL_ALLOW, np.int32)
+    arg_row = np.zeros(N_POLICY_SLOTS, np.int64)
+    for r in rules or ():
+        act = Action[r.action.upper()]
+        sel = (slice(None) if r.syscall_nr < 0
+               else slice(_slot_of(r.syscall_nr), _slot_of(r.syscall_nr) + 1))
+        action_row[sel] = int(act)
+        arg_row[sel] = int(r.arg)
+    return action_row, arg_row
+
+
+ALLOW_ALL: PolicyRows = compile_policy(None)
+
+
+def policy_rows(policies: Sequence[Optional[Iterable[PolicyRule]]]
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack per-lane rule lists into ``[B, NSLOT]`` tables (None entries
+    take the all-ALLOW default)."""
+    rows = [compile_policy(p) if p is not None else ALLOW_ALL
+            for p in policies]
+    return (np.stack([r[0] for r in rows]),
+            np.stack([r[1] for r in rows]))

@@ -1,0 +1,148 @@
+"""Per-lane syscall trace rings: host-side construction + decoding.
+
+The *monitor* half of the subsystem (strace's role in the paper's "modify
+or monitor" motivation).  The device side is a fixed-capacity ring of
+8-word records per lane, appended inside the batched step under the svc
+mask (:class:`repro.core.fleet.TraceState` — a pure masked scatter behind
+a batch-uniform cond, so recording never leaves the one-dispatch path and
+costs no host syncs).  This module builds that carry, decodes harvested
+rings back into :class:`TraceRecord` rows (oldest-first, with the dropped
+count when the ring wrapped), and renders them as strace-like text.
+
+A record captures the syscall as *executed by the simulated kernel*: under
+ASC/LD_PRELOAD the hook virtualises calls before any svc runs, so a traced
+getpid loop shows only the syscalls that actually crossed the kernel
+boundary — exactly what a real strace of a hooked process would show.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layout as L
+from repro.core.fleet import (DEFAULT_TRACE_CAP, POL_ALLOW, POL_DENY,
+                              POL_EMULATE, POL_KILL, REC_WORDS, TraceState,
+                              VERDICT_UNKNOWN)
+from repro.trace.policy import ALLOW_ALL, policy_rows
+
+VERDICT_NAMES = {POL_ALLOW: "ALLOW", POL_DENY: "DENY", POL_EMULATE: "EMULATE",
+                 POL_KILL: "KILL", VERDICT_UNKNOWN: "UNKNOWN"}
+
+# (name, number of x0.. arguments shown) per modelled syscall
+_SYS_SIG = {
+    L.SYS_READ: ("read", 3),
+    L.SYS_WRITE: ("write", 3),
+    L.SYS_GETPID: ("getpid", 0),
+    L.SYS_EXIT: ("exit", 1),
+    L.SYS_RT_SIGRETURN: ("rt_sigreturn", 0),
+    L.SYS_OPENAT: ("openat", 3),
+    L.SYS_CLOSE: ("close", 1),
+}
+
+_ERRNO_NAMES = {1: "EPERM", 13: "EACCES", 14: "EFAULT", 38: "ENOSYS"}
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRecord:
+    """One decoded ring row: the syscall as the simulated kernel saw it."""
+
+    step: int      # lane icount when the svc executed
+    pc: int        # address of the svc instruction
+    nr: int        # syscall number (x8)
+    x0: int
+    x1: int
+    x2: int
+    ret: int       # the value the application observed in x0 afterwards
+    verdict: int   # POL_* / VERDICT_UNKNOWN
+
+    @property
+    def name(self) -> str:
+        sig = _SYS_SIG.get(self.nr)
+        return sig[0] if sig else f"syscall_{self.nr}"
+
+
+def make_trace_state(n_lanes: int, cap: int = DEFAULT_TRACE_CAP, *,
+                     policies: Optional[Sequence] = None) -> TraceState:
+    """A fresh trace carry for ``n_lanes`` lanes: empty rings plus per-lane
+    policy tables (``policies`` = one rule list per lane, or None for the
+    all-ALLOW default that keeps tracing architecturally invisible)."""
+    assert n_lanes >= 1 and cap >= 1
+    if policies is None:
+        pa = np.broadcast_to(ALLOW_ALL[0], (n_lanes, ALLOW_ALL[0].shape[0]))
+        pg = np.broadcast_to(ALLOW_ALL[1], (n_lanes, ALLOW_ALL[1].shape[0]))
+    else:
+        assert len(policies) == n_lanes
+        pa, pg = policy_rows(policies)
+    return TraceState(
+        buf=jnp.zeros((n_lanes, cap, REC_WORDS), jnp.int64),
+        count=jnp.zeros((n_lanes,), jnp.int64),
+        pol_action=jnp.asarray(pa, jnp.int32),
+        pol_arg=jnp.asarray(pg, jnp.int64),
+    )
+
+
+def harvest_lane(buf: np.ndarray, count: int) -> Tuple[List[TraceRecord], int]:
+    """Decode one lane's ring (``buf`` = int64[CAP, REC_WORDS], ``count`` =
+    lifetime records) into oldest-first records plus the dropped count.
+
+    When the ring wrapped, the oldest surviving record sits at
+    ``count % cap`` — the slot the next append would overwrite.
+    """
+    cap = buf.shape[0]
+    count = int(count)
+    dropped = max(0, count - cap)
+    n = min(count, cap)
+    start = count % cap if count > cap else 0
+    order = [(start + i) % cap for i in range(n)]
+    recs = [TraceRecord(*(int(v) for v in buf[i])) for i in order]
+    return recs, dropped
+
+
+def harvest(trace: TraceState) -> List[Tuple[List[TraceRecord], int]]:
+    """Decode every lane with one device->host transfer per field."""
+    buf = np.asarray(trace.buf)
+    count = np.asarray(trace.count)
+    return [harvest_lane(buf[i], count[i]) for i in range(buf.shape[0])]
+
+
+def _fmt_ret(r: TraceRecord) -> str:
+    if r.verdict == POL_KILL:
+        return "?"
+    if r.ret < 0:
+        name = _ERRNO_NAMES.get(-r.ret)
+        return f"{r.ret} {name}" if name else str(r.ret)
+    return str(r.ret)
+
+
+def format_record(r: TraceRecord) -> str:
+    """One strace-like line, annotated with the non-ALLOW verdict."""
+    sig = _SYS_SIG.get(r.nr)
+    nargs = sig[1] if sig else 3
+    args = ", ".join(f"{v:#x}" if i == 1 and nargs >= 3 else str(v)
+                     for i, v in enumerate((r.x0, r.x1, r.x2)[:nargs]))
+    line = f"{r.name}({args}) = {_fmt_ret(r)}"
+    if r.verdict == POL_DENY:
+        line += "  <denied by policy>"
+    elif r.verdict == POL_EMULATE:
+        line += "  <emulated by policy>"
+    elif r.verdict == POL_KILL:
+        line += "  <killed by policy>"
+    return line
+
+
+def format_strace(records: Iterable[TraceRecord], *, dropped: int = 0,
+                  pid: Optional[int] = None) -> str:
+    """Render a lane's records as an strace-style transcript."""
+    prefix = f"[pid {pid}] " if pid is not None else ""
+    lines = []
+    if dropped:
+        lines.append(f"{prefix}... {dropped} oldest record(s) dropped "
+                     f"(ring wrapped) ...")
+    for r in records:
+        lines.append(prefix + format_record(r))
+        if r.verdict == POL_KILL:
+            lines.append(f"{prefix}+++ killed by policy +++")
+    return "\n".join(lines)

@@ -6,3 +6,8 @@ def pytest_configure(config):
         "markers",
         "serving: continuous-batching server + property suites (tier-1 runs "
         "them at small example counts; scale up via ASC_TEST_EXAMPLES)")
+    config.addinivalue_line(
+        "markers",
+        "trace: syscall tracing + policy subsystem suites (traced/untraced "
+        "bit-exact parity, ring overflow, seccomp-style actions; scale up "
+        "via ASC_TEST_EXAMPLES)")

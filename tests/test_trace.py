@@ -1,0 +1,333 @@
+"""Syscall tracing + policy subsystem (marked ``trace``).
+
+The property the subsystem must never break: tracing is architecturally
+invisible.  For ANY mechanism, workload, chunk size and pool width — and
+through FleetServer C3 pin-and-re-admit cycles — the machine states of a
+traced fleet under the default all-ALLOW policy are BIT-identical to an
+untraced run (and therefore to the scalar engine).  On top of that:
+ring-buffer overflow drops oldest-first with an exact count, policy
+actions (DENY / EMULATE / KILL) take effect per lane, and the silent
+-ENOSYS fall-through is counted and surfaced as an UNKNOWN verdict.
+"""
+import os
+
+import numpy as np
+import pytest
+from _hyp_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import (HALT_EXIT, HALT_KILL, HookConfig, Mechanism,
+                        fleet, layout as L, mem_read, pack_fleet, prepare,
+                        programs, run_fleet_prepared, run_prepared,
+                        run_with_c3, unstack_state)
+from repro.serve.fleet_server import FleetServer
+from repro.trace import (POL_ALLOW, POL_DENY, POL_EMULATE, POL_KILL,
+                         VERDICT_UNKNOWN, deny, emulate, format_strace,
+                         harvest_lane, kill, make_trace_state)
+
+pytestmark = pytest.mark.trace
+
+FUEL = 150_000
+MAX_EXAMPLES = int(os.environ.get("ASC_TEST_EXAMPLES", "5"))
+
+_SETTINGS = dict(max_examples=MAX_EXAMPLES, deadline=None, derandomize=True)
+if HAVE_HYPOTHESIS:
+    from hypothesis import HealthCheck
+    _SETTINGS["suppress_health_check"] = list(HealthCheck)
+
+MECHS = [Mechanism.NONE, Mechanism.LD_PRELOAD, Mechanism.ASC,
+         Mechanism.SIGNAL, Mechanism.PTRACE]
+
+_WORKLOADS = {
+    "getpid": programs.getpid_loop_param,
+    "read": lambda: programs.read_loop_param(256),
+}
+
+_pp_cache = {}
+
+
+def _pp(wname, mech):
+    key = (wname, mech)
+    if key not in _pp_cache:
+        virt = mech is not Mechanism.NONE
+        _pp_cache[key] = prepare(_WORKLOADS[wname](), mech, virtualize=virt)
+    return _pp_cache[key]
+
+
+def _assert_state_equal(ref, got, ctx):
+    for field in ref._fields:
+        a, b = np.asarray(getattr(ref, field)), np.asarray(getattr(got, field))
+        assert np.array_equal(a, b), f"{ctx}: field {field!r} diverged"
+
+
+# -- the invisibility property ------------------------------------------------
+
+def test_traced_states_bit_identical_exhaustive():
+    """Every mechanism x workload in ONE fleet: the traced dispatch's
+    machine states equal the untraced dispatch's, field for field."""
+    pps, keys = [], []
+    for mech in MECHS:
+        for wname in _WORKLOADS:
+            pps.append(_pp(wname, mech))
+            keys.append((wname, mech.value))
+    regs = [{19: 5}] * len(pps)
+    ref = run_fleet_prepared(pps, fuel=FUEL, chunk=8, regs=regs)
+    out, tr = run_fleet_prepared(pps, fuel=FUEL, chunk=8, regs=regs,
+                                 trace=True)
+    for i, key in enumerate(keys):
+        _assert_state_equal(unstack_state(ref, i), unstack_state(out, i),
+                            f"traced lane {key}")
+    # and every lane actually recorded something (at least the exit svc)
+    assert (np.asarray(tr.count) >= 1).all()
+
+
+@settings(**_SETTINGS)
+@given(data=st.data())
+def test_traced_parity_any_mech_workload_chunk(data):
+    """Sampled mechanism x workload x chunk x lane count: traced fleet ==
+    untraced fleet == scalar engine, bit for bit."""
+    chunk = data.draw(st.sampled_from([1, 8, 64]), label="chunk")
+    n_lanes = data.draw(st.integers(1, 4), label="lanes")
+    reqs = [(data.draw(st.sampled_from(sorted(_WORKLOADS)), label="w"),
+             data.draw(st.sampled_from(MECHS), label="m"),
+             data.draw(st.integers(1, 10), label="n"))
+            for _ in range(n_lanes)]
+    pps = [_pp(w, m) for w, m, _ in reqs]
+    regs = [{19: n} for _, _, n in reqs]
+    ref = run_fleet_prepared(pps, fuel=FUEL, chunk=chunk, regs=regs)
+    out, _ = run_fleet_prepared(pps, fuel=FUEL, chunk=chunk, regs=regs,
+                                trace=True)
+    for i, (w, m, n) in enumerate(reqs):
+        _assert_state_equal(unstack_state(ref, i), unstack_state(out, i),
+                            f"chunk={chunk} lane=({w},{m},{n})")
+        _assert_state_equal(run_prepared(pps[i], fuel=FUEL, regs=regs[i]),
+                            unstack_state(out, i),
+                            f"scalar chunk={chunk} lane=({w},{m},{n})")
+
+
+@settings(**_SETTINGS)
+@given(data=st.data())
+def test_traced_server_matches_run_prepared(data):
+    """Any arrival order / pool width on a TRACED server: published machine
+    states bit-identical to run_prepared (tracing never reschedules)."""
+    pool = data.draw(st.integers(1, 3), label="pool")
+    n_reqs = data.draw(st.integers(1, 5), label="n_reqs")
+    reqs = [(data.draw(st.sampled_from(sorted(_WORKLOADS)), label="w"),
+             data.draw(st.sampled_from(MECHS), label="m"),
+             data.draw(st.integers(1, 10), label="n"))
+            for _ in range(n_reqs)]
+    srv = FleetServer(pool=pool, gen_steps=40, chunk=8, fuel=FUEL, trace=True)
+    rids = [srv.submit(_pp(w, m), regs={19: n}) for w, m, n in reqs]
+    results = {r.rid: r for r in srv.run()}
+    assert len(results) == len(reqs)
+    for rid, (w, m, n) in zip(rids, reqs):
+        _assert_state_equal(run_prepared(_pp(w, m), fuel=FUEL, regs={19: n}),
+                            results[rid].state,
+                            f"traced server pool={pool} req=({w},{m},{n})")
+
+
+def test_traced_server_c3_pin_and_readmit_bit_identical():
+    """The C3 trap -> pin -> re-admit cycle under tracing: zero scalar
+    re-executions, event list and final state equal to run_with_c3's, and
+    the published ring holds only the final attempt's records."""
+    st_ref, _, ev_ref, runs_ref = run_with_c3(
+        lambda: programs.indirect_svc(3), cfg=HookConfig(), virtualize=True,
+        fuel=FUEL)
+    srv = FleetServer(pool=2, gen_steps=64, chunk=8, fuel=FUEL, trace=True)
+    rid = srv.submit(lambda: programs.indirect_svc(3), virtualize=True)
+    rid_other = srv.submit(_pp("getpid", Mechanism.PTRACE), regs={19: 4})
+    res = {r.rid: r for r in srv.run()}
+    r = res[rid]
+    assert r.events == ev_ref and r.attempts == runs_ref
+    _assert_state_equal(st_ref, r.state, "traced C3 request")
+    assert srv.stats()["scalar_reexecutions"] == 0
+    # ring recycled at re-admission: every surviving record belongs to the
+    # final attempt (its step fits inside the final attempt's icount)
+    icount = int(np.asarray(r.state.icount))
+    assert r.trace and all(rec.step < icount for rec in r.trace)
+    # bystander lane records are untouched: 4 ptrace getpids + exit
+    assert [t.nr for t in res[rid_other].trace] == \
+        [L.SYS_GETPID] * 4 + [L.SYS_EXIT]
+
+
+# -- ring buffer --------------------------------------------------------------
+
+@settings(**_SETTINGS)
+@given(data=st.data())
+def test_ring_overflow_drops_oldest_and_counts_exactly(data):
+    """Under ptrace every svc both bumps hook_count and appends a record,
+    so: lifetime count == hook_count, dropped == hook_count - cap, and the
+    ring holds exactly the NEWEST min(count, cap) records oldest-first."""
+    n = data.draw(st.integers(1, 30), label="n")
+    cap = data.draw(st.sampled_from([2, 8, 64]), label="cap")
+    pp = _pp("getpid", Mechanism.PTRACE)
+    imgs, ids, states = pack_fleet([pp], fuel=FUEL, regs=[{19: n}])
+    tr = make_trace_state(1, cap)
+    out, tr = fleet.run_fleet(imgs, states, ids, chunk=8, trace=tr)
+    hooks = int(np.asarray(out.hook_count)[0])
+    assert hooks == n + 1  # n getpids + exit, all real svcs under ptrace
+    count = int(np.asarray(tr.count)[0])
+    assert count == hooks
+    recs, dropped = harvest_lane(np.asarray(tr.buf)[0], count)
+    assert dropped == max(0, hooks - cap)
+    assert len(recs) == min(count, cap)
+    steps = [r.step for r in recs]
+    assert steps == sorted(steps)          # oldest-first
+    assert recs[-1].nr == L.SYS_EXIT       # the newest record survived
+    expect = [L.SYS_GETPID] * n + [L.SYS_EXIT]
+    assert [r.nr for r in recs] == expect[-len(recs):]
+
+
+def test_trace_records_capture_the_syscall_as_executed():
+    pp = prepare(programs.read_loop(2, 256), Mechanism.PTRACE,
+                 virtualize=True)
+    imgs, ids, states = pack_fleet([pp], fuel=FUEL)
+    out, tr = fleet.run_fleet(imgs, states, ids, chunk=8,
+                              trace=make_trace_state(1, 16))
+    recs, dropped = harvest_lane(np.asarray(tr.buf)[0],
+                                 int(np.asarray(tr.count)[0]))
+    assert dropped == 0
+    reads = [r for r in recs if r.nr == L.SYS_READ]
+    assert len(reads) == 2
+    for r in reads:
+        assert (r.x0, r.x1, r.x2) == (3, L.HEAP_BASE, 256)
+        assert r.ret == 256 and r.verdict == POL_ALLOW
+    text = format_strace(recs)
+    assert "read(3, 0x48000, 256) = 256" in text
+    assert "exit(0) = 0" in text
+
+
+# -- policy actions -----------------------------------------------------------
+
+def test_policy_deny_blocks_the_kernel_branch():
+    """A denied read returns -errno and performs NO I/O: the heap stays
+    zero and in_off never advances, unlike the allowed twin lane."""
+    pp = prepare(programs.read_loop(3, 256), Mechanism.NONE)
+    imgs, ids, states = pack_fleet([pp, pp], fuel=FUEL)
+    tr = make_trace_state(2, 16, policies=[[deny(L.SYS_READ, errno=13)],
+                                           None])
+    out, tr = fleet.run_fleet(imgs, states, ids, chunk=8, trace=tr)
+    halted = np.asarray(out.halted)
+    assert halted.tolist() == [HALT_EXIT, HALT_EXIT]
+    denied, allowed = unstack_state(out, 0), unstack_state(out, 1)
+    assert int(denied.in_off) == 0 and int(allowed.in_off) == 3 * 256
+    assert mem_read(denied, L.HEAP_BASE) == 0
+    assert mem_read(allowed, L.HEAP_BASE) != 0
+    recs, _ = harvest_lane(np.asarray(tr.buf)[0],
+                           int(np.asarray(tr.count)[0]))
+    assert all(r.ret == -13 and r.verdict == POL_DENY
+               for r in recs if r.nr == L.SYS_READ)
+    assert "<denied by policy>" in format_strace(recs)
+
+
+def test_policy_emulate_substitutes_the_return_value():
+    """EMULATE getpid: the application observes the policy constant (the
+    program stores its last pid to SCRATCH)."""
+    pp = prepare(programs.getpid_loop(4), Mechanism.NONE)
+    imgs, ids, states = pack_fleet([pp], fuel=FUEL)
+    tr = make_trace_state(1, 16,
+                          policies=[[emulate(L.SYS_GETPID, 31337)]])
+    out, tr = fleet.run_fleet(imgs, states, ids, chunk=8, trace=tr)
+    assert int(np.asarray(out.halted)[0]) == HALT_EXIT
+    assert mem_read(unstack_state(out, 0), L.SCRATCH) == 31337
+    recs, _ = harvest_lane(np.asarray(tr.buf)[0],
+                           int(np.asarray(tr.count)[0]))
+    gp = [r for r in recs if r.nr == L.SYS_GETPID]
+    assert len(gp) == 4
+    assert all(r.ret == 31337 and r.verdict == POL_EMULATE for r in gp)
+
+
+def test_policy_kill_halts_the_lane_only():
+    """KILL on the unknown class: the offending lane dies with HALT_KILL at
+    the svc pc; its all-ALLOW neighbour is untouched (bit-identical to its
+    scalar run)."""
+    pp_bad = prepare(programs.unknown_svc(3), Mechanism.NONE)
+    pp_ok = _pp("getpid", Mechanism.ASC)
+    imgs, ids, states = pack_fleet([pp_bad, pp_ok], fuel=FUEL,
+                                   regs=[None, {19: 5}])
+    tr = make_trace_state(2, 16, policies=[[kill(181)], None])
+    out, tr = fleet.run_fleet(imgs, states, ids, chunk=8, trace=tr)
+    assert int(np.asarray(out.halted)[0]) == HALT_KILL
+    assert int(np.asarray(out.fault_pc)[0]) == int(np.asarray(out.pc)[0])
+    recs, _ = harvest_lane(np.asarray(tr.buf)[0],
+                           int(np.asarray(tr.count)[0]))
+    assert recs[-1].verdict == POL_KILL and recs[-1].nr == 181
+    assert "+++ killed by policy +++" in format_strace(recs)
+    _assert_state_equal(run_prepared(pp_ok, fuel=FUEL, regs={19: 5}),
+                        unstack_state(out, 1), "bystander of a killed lane")
+
+
+# -- the -ENOSYS fall-through -------------------------------------------------
+
+def test_enosys_counted_identically_scalar_and_fleet():
+    pp = prepare(programs.unknown_svc(5), Mechanism.NONE)
+    ref = run_prepared(pp, fuel=FUEL)
+    assert int(ref.enosys_count) == 5
+    assert mem_read(ref, L.SCRATCH) == -38  # the app saw -ENOSYS
+    out = run_fleet_prepared([pp, pp], fuel=FUEL, chunk=8)
+    for lane in range(2):
+        _assert_state_equal(ref, unstack_state(out, lane),
+                            f"enosys lane {lane}")
+
+
+def test_unknown_verdict_and_server_enosys_stat():
+    srv = FleetServer(pool=2, gen_steps=64, chunk=8, fuel=FUEL, trace=True)
+    rid = srv.submit(prepare(programs.unknown_svc(3), Mechanism.NONE))
+    srv.submit(_pp("getpid", Mechanism.ASC), regs={19: 4})
+    res = {r.rid: r for r in srv.run()}
+    unk = [t for t in res[rid].trace if t.nr == 181]
+    assert len(unk) == 3
+    assert all(t.verdict == VERDICT_UNKNOWN and t.ret == -38 for t in unk)
+    assert "syscall_181" in format_strace(unk)
+    assert srv.stats()["enosys_total"] == 3
+
+
+# -- serving integration ------------------------------------------------------
+
+def test_admission_recycles_ring_rows():
+    """Back-to-back requests through a 1-lane traced pool: each published
+    ring holds exactly its own request's records."""
+    srv = FleetServer(pool=1, gen_steps=40, chunk=8, fuel=FUEL, trace=True)
+    rid_a = srv.submit(_pp("getpid", Mechanism.PTRACE), regs={19: 6})
+    rid_b = srv.submit(_pp("read", Mechanism.PTRACE), regs={19: 2})
+    res = {r.rid: r for r in srv.run()}
+    assert [t.nr for t in res[rid_a].trace] == \
+        [L.SYS_GETPID] * 6 + [L.SYS_EXIT]
+    # read_loop_param: n reads + the checksum write + exit (+ sigreturns
+    # never appear under ptrace)
+    assert [t.nr for t in res[rid_b].trace] == \
+        [L.SYS_READ] * 2 + [L.SYS_WRITE, L.SYS_EXIT]
+    assert res[rid_b].trace_dropped == 0
+
+
+def test_image_table_refcounts_round_trip_under_traced_readmission():
+    """FleetImageTable refcounts survive trace-carrying C3 re-admission:
+    all rows released after the run, dedup/admission counters coherent."""
+    srv = FleetServer(pool=2, gen_steps=64, chunk=8, fuel=FUEL, trace=True,
+                      table_capacity=4)
+    srv.submit(lambda: programs.indirect_svc(2), virtualize=True)
+    for n in (3, 4):
+        srv.submit(_pp("getpid", Mechanism.ASC), regs={19: n})
+    res = srv.run()
+    assert len(res) == 3
+    assert srv.stats()["c3_readmissions"] == 1
+    assert srv.table.live_rows() == 0
+    # the C3 re-preparation admits a second (pinned) image; the two getpid
+    # requests share one row
+    assert srv.table.admissions == 3 and srv.table.dedup_hits == 1
+
+
+def test_policy_requires_traced_server():
+    srv = FleetServer(pool=1, gen_steps=64, fuel=FUEL)
+    with pytest.raises(ValueError):
+        srv.submit(_pp("getpid", Mechanism.ASC), regs={19: 2},
+                   policy=[deny(L.SYS_READ)])
+
+
+def test_cfg_trace_enabled_turns_the_server_on():
+    cfg = HookConfig(trace_enabled=True, trace_cap=8)
+    srv = FleetServer(pool=1, gen_steps=64, chunk=8, fuel=FUEL, cfg=cfg)
+    assert srv.trace_enabled
+    rid = srv.submit(_pp("getpid", Mechanism.PTRACE), regs={19: 2})
+    res = {r.rid: r for r in srv.run()}
+    assert [t.nr for t in res[rid].trace] == \
+        [L.SYS_GETPID] * 2 + [L.SYS_EXIT]
