@@ -1,0 +1,383 @@
+"""Live-lane compaction speedup: reclaiming the occupancy a fixed-width
+fleet burns on halted lanes.
+
+Two workload shapes, both measured against the fixed-width path with the
+SAME lanes and the results asserted bit-identical and lane-ordered in the
+benchmark itself:
+
+  * **Tail-heavy census** — the 400-lane mechanism x workload grid of
+    ``collective_hook_overhead`` with one deliberately long lane per cell
+    (the production shape where one slow process pins the whole batch).
+    The fixed-width dispatch steps every lane to the longest lane's last
+    chunk; ``run_fleet_compact`` shrinks the bucket as cells drain.
+  * **Bimodal serving mix** — the continuous-batching server on a
+    mixed-length arrival stream (mostly short processes plus a long
+    tail, including one R3-faulting request so the C3 pin-and-re-admit
+    path runs compacted).  ``FleetServer(compact=True)`` re-dispatches
+    generations at the occupancy-chosen bucket width and re-expands on
+    admissions; the acceptance bar is >= 1.2x sustained aggregate
+    steps/sec over the fixed-width server (enforced on the full run —
+    the ``--quick`` grid is too small to time meaningfully).
+
+Writes ``benchmarks/results/BENCH_compaction.json`` (schema
+``BENCH_compaction/v1``).  ``--quick`` runs a seconds-long sanity pass
+(no JSON write, no bar); ``--shard`` lane-partitions both arms across
+local devices with the per-shard ladder; ``--devices N`` forces N host
+platform devices (implies ``--shard``) — repro imports are deferred so
+the flag lands before jax initialises its backends.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+
+RESULT_PATH = (pathlib.Path(__file__).parent / "results" /
+               "BENCH_compaction.json")
+
+FUEL = 10_000_000
+SPEEDUP_BAR = 1.2          # serving-mix acceptance bar (x vs fixed width)
+
+# The _cond_holds_v satellite of the same PR, measured on this box's
+# 400-lane census (fixed-width, chunk 128): the [B, 16] NZCV predicate
+# stack + take_along_axis rebuilt as a fused select chain.
+COND_PICK_NOTE = {
+    "before_steps_per_sec": 457001,
+    "after_steps_per_sec": 686290,
+    "note": "_cond_holds_v take_along_axis -> fused select chain "
+            "(~1.5x census steps/sec; same CPU parallel-task wrapping "
+            "the PR 3 policy-lookup fix measured at ~10%)",
+}
+
+
+# ---------------------------------------------------------------------------
+# tail-heavy census arm
+# ---------------------------------------------------------------------------
+
+def _tail_grid(scale: float, tail: float, only_cells=None):
+    """The collective census grid with one long lane per (mechanism,
+    workload) cell: 19 lanes in the usual narrow band + 1 at ``tail`` x
+    the base count.  ``only_cells`` restricts to the named
+    (mechanism, workload) cells — the sharded sanity rung, where every
+    loop iteration pays a cross-device collective."""
+    from benchmarks.collective_hook_overhead import (MECHS, WORKLOADS,
+                                                     _BASE_ITERS,
+                                                     _prepare_cells)
+    cells = _prepare_cells()
+    pps, regs = [], []
+    for mname, mech, virt in MECHS:
+        for wname in WORKLOADS:
+            if only_cells is not None and (mname, wname) not in only_cells:
+                continue
+            base = _BASE_ITERS[wname][mname] * scale
+            for i in range(19):
+                n = max(2, int(base * (1.0 - 0.01 * i)))
+                pps.append(cells[(mname, wname)])
+                regs.append({19: n})
+            pps.append(cells[(mname, wname)])
+            regs.append({19: max(2, int(base * tail))})
+    return pps, regs
+
+
+def _assert_states_equal(ref, got, ctx):
+    for f in ref._fields:
+        a, b = np.asarray(getattr(ref, f)), np.asarray(getattr(got, f))
+        assert np.array_equal(a, b), f"{ctx}: field {f!r} diverged"
+
+
+def run_census_arm(chunk: int = 128, scale: float = 0.6, tail: float = 3.0,
+                   min_bucket: int = 8, shard: bool = False,
+                   only_cells=None) -> dict:
+    from repro.core import fleet, pack_fleet, precompile_compact
+    pps, regs = _tail_grid(scale, tail, only_cells=only_cells)
+
+    # warm the fixed-width compile, every ladder rung and the transition
+    # graphs, then one untimed compacted pass (the workload is
+    # deterministic, so the timed pass revisits exactly these shapes) —
+    # the timed compact run never compiles mid-flight
+    precompile_compact(pps, chunk=chunk, min_bucket=min_bucket, shard=shard)
+    imgs, ids, states = pack_fleet(pps, fuel=FUEL, regs=regs)
+    fleet.run_fleet_compact(imgs, states, ids, chunk=chunk,
+                            min_bucket=min_bucket, shard=shard)
+    imgs, ids, states = pack_fleet(pps, fuel=FUEL, regs=regs)
+    ref = fleet.run_fleet(imgs, states, ids, chunk=chunk, shard=shard)
+
+    t0 = time.perf_counter()
+    imgs, ids, states = pack_fleet(pps, fuel=FUEL, regs=regs)
+    ref = fleet.run_fleet(imgs, states, ids, chunk=chunk, shard=shard)
+    t_fixed = time.perf_counter() - t0
+
+    stats: dict = {}
+    t0 = time.perf_counter()
+    imgs, ids, states = pack_fleet(pps, fuel=FUEL, regs=regs)
+    out = fleet.run_fleet_compact(imgs, states, ids, chunk=chunk,
+                                  min_bucket=min_bucket, shard=shard,
+                                  stats=stats)
+    t_compact = time.perf_counter() - t0
+
+    # lane-ordered bit-identity, on the timed outputs themselves
+    _assert_states_equal(ref, out, "census arm")
+
+    icount = np.asarray(ref.icount)
+    steps = int(icount.sum())
+    fixed_chunks = -(-int(icount.max()) // chunk) * chunk
+    fixed_dispatched = len(pps) * fixed_chunks
+    return {
+        "lanes": len(pps),
+        "total_steps": steps,
+        "longest_lane_steps": int(icount.max()),
+        "mean_lane_steps": round(float(icount.mean()), 1),
+        "chunk": chunk,
+        "tail_scale": tail,
+        "fixed": {
+            "wall_s": round(t_fixed, 3),
+            "steps_per_sec": round(steps / t_fixed, 1),
+            "dispatched_lane_steps": fixed_dispatched,
+            "occupancy": round(steps / fixed_dispatched, 4),
+        },
+        "compact": {
+            "wall_s": round(t_compact, 3),
+            "steps_per_sec": round(steps / t_compact, 1),
+            "dispatched_lane_steps": stats["dispatched_lane_steps"],
+            "occupancy": stats["occupancy"],
+            "ladder": stats["ladder"],
+            "compactions": stats["compactions"],
+            "final_bucket": stats["final_bucket"],
+        },
+        "speedup": round(t_fixed / t_compact, 2),
+        "bit_identical": True,   # _assert_states_equal raised otherwise
+    }
+
+
+# ---------------------------------------------------------------------------
+# bimodal serving-mix arm
+# ---------------------------------------------------------------------------
+
+def build_mix(n: int, long_frac: float, long_x: int, seed: int = 0):
+    """Mixed-length arrival stream (the serving_throughput shape, with a
+    heavier, *staggered* tail): two binaries, bimodal iteration counts.
+    Long requests draw their length uniformly in [10x, long_x x] of the
+    short base (log-uniform: many medium lanes, a few very long ones),
+    so the live count decays through the whole ladder and the longest
+    lanes run at the narrowest buckets instead of the tail finishing in
+    one block."""
+    from repro.core import Mechanism, prepare, programs
+    work = [
+        ("getpid_asc", programs.getpid_loop_param, Mechanism.ASC, 14),
+        ("read_signal", lambda: programs.read_loop_param(1024),
+         Mechanism.SIGNAL, 23),
+    ]
+    rng = np.random.default_rng(seed)
+    cells = {name: prepare(builder(), mech, virtualize=True)
+             for name, builder, mech, _ in work}
+    reqs = []
+    for _ in range(n):
+        name, _, _, short = work[int(rng.integers(len(work)))]
+        lo = min(10.0, float(long_x))
+        mult = float(np.exp(rng.uniform(np.log(lo), np.log(long_x)))) \
+            if rng.random() < long_frac else float(rng.uniform(0.9, 1.1))
+        reqs.append((cells[name], {19: max(2, int(short * mult))}))
+    return reqs
+
+
+def _run_server(reqs, *, pool, gen_steps, chunk, compact, shard,
+                min_bucket) -> tuple:
+    from repro.core import HookConfig, programs
+    from repro.serve.fleet_server import FleetServer
+    cfg = HookConfig(compact_min_bucket=min_bucket)
+    srv = FleetServer(pool=pool, gen_steps=gen_steps, chunk=chunk, fuel=FUEL,
+                      shard=shard, trace=True, compact=compact, cfg=cfg)
+    if compact:
+        srv.precompile_ladder()
+    t0 = time.perf_counter()
+    # one R3-faulting request rides along: C3 pin-and-re-admit must work
+    # (and stay event-identical) inside a compacted pool
+    rid_c3 = srv.submit(lambda: programs.indirect_svc(3), virtualize=True)
+    for pp, rg in reqs:
+        srv.submit(pp, regs=rg)
+    results = {r.rid: r for r in srv.run()}
+    wall = time.perf_counter() - t0
+    stats = srv.stats()
+    assert len(results) == len(reqs) + 1
+    assert stats["scalar_reexecutions"] == 0
+    assert results[rid_c3].events, "C3 request produced no events"
+    return results, wall, stats
+
+
+def run_serving_arm(n: int = 48, pool: int = 32, gen_steps: int = 512,
+                    chunk: int = 64, long_frac: float = 0.25,
+                    long_x: int = 200, min_bucket: int = 2,
+                    shard: bool = False, passes: int = 3) -> dict:
+    reqs = build_mix(n, long_frac, long_x)
+    kw = dict(pool=pool, gen_steps=gen_steps, chunk=chunk, shard=shard,
+              min_bucket=min_bucket)
+
+    # warm-up pass per arm compiles everything AND supplies the parity
+    # reference: every published result must be bit-identical and
+    # lane-ordered across the two servers
+    ref, _, _ = _run_server(reqs, compact=False, **kw)
+    got, _, _ = _run_server(reqs, compact=True, **kw)
+    assert set(ref) == set(got)
+    for rid in ref:
+        _assert_states_equal(ref[rid].state, got[rid].state,
+                             f"serving rid {rid}")
+        assert ref[rid].events == got[rid].events, f"rid {rid} events"
+        assert ref[rid].attempts == got[rid].attempts, f"rid {rid} attempts"
+        assert ref[rid].trace == got[rid].trace, f"rid {rid} trace"
+        assert ref[rid].trace_dropped == got[rid].trace_dropped
+
+    # interleaved fixed/compact pairs with the median-ratio pair reported,
+    # exactly the de-flaking trace_overhead.py uses: block-per-arm min
+    # timing bakes a slow box phase into one arm and best-case-biases the
+    # comparison this hard 1.2x bar gates on
+    pairs = []
+    for _ in range(passes):
+        _, wf, stats_fixed = _run_server(reqs, compact=False, **kw)
+        _, wc, stats_compact = _run_server(reqs, compact=True, **kw)
+        pairs.append((wf, wc))
+    pairs.sort(key=lambda p: p[0] / p[1])
+    t_fixed, t_compact = pairs[len(pairs) // 2]
+
+    steps = stats_fixed["harvested_steps"]
+    assert steps == stats_compact["harvested_steps"]
+    fixed_sps = steps / t_fixed
+    compact_sps = steps / t_compact
+    return {
+        "requests": n + 1,
+        "pool": pool,
+        "gen_steps": gen_steps,
+        "chunk": chunk,
+        "long_frac": long_frac,
+        "long_x": long_x,
+        "min_bucket": min_bucket,
+        "harvested_steps": steps,
+        "fixed": {
+            "wall_s": round(t_fixed, 3),
+            "steps_per_sec": round(fixed_sps, 1),
+            "occupancy": stats_fixed["occupancy"],
+            "wasted_steps": stats_fixed["wasted_steps"],
+        },
+        "compact": {
+            "wall_s": round(t_compact, 3),
+            "steps_per_sec": round(compact_sps, 1),
+            "occupancy": stats_compact["occupancy"],
+            "wasted_steps": stats_compact["wasted_steps"],
+            "ladder": stats_compact["ladder"],
+            "min_bucket_seen": stats_compact["min_bucket_seen"],
+            "pool_shrinks": stats_compact["pool_shrinks"],
+            "pool_grows": stats_compact["pool_grows"],
+            "c3_readmissions": stats_compact["c3_readmissions"],
+        },
+        "speedup": round(compact_sps / fixed_sps, 2),
+        "bit_identical": True,
+    }
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+
+def run_bench(quick: bool = False, shard: bool = False) -> dict:
+    import jax
+    if quick and shard:
+        # every loop iteration of a lane-partitioned fleet pays a
+        # cross-device collective (tens of ms on forced host devices, and
+        # worse as lanes grow), so the sharded sanity rung bounds BOTH the
+        # iteration count (bigger chunks, shorter lanes) and the lane
+        # count (two stratified census cells)
+        census = run_census_arm(chunk=64, scale=0.03, tail=3.0,
+                                min_bucket=4, shard=True,
+                                only_cells=[("asc", "getpid"),
+                                            ("signal", "read")])
+        serving = run_serving_arm(n=6, pool=4, gen_steps=128, chunk=64,
+                                  long_frac=0.25, long_x=5, min_bucket=1,
+                                  shard=True, passes=1)
+    elif quick:
+        census = run_census_arm(chunk=16, scale=0.06, tail=3.0,
+                                min_bucket=4)
+        serving = run_serving_arm(n=10, pool=4, gen_steps=96, chunk=16,
+                                  long_frac=0.2, long_x=12, min_bucket=1,
+                                  passes=1)
+    else:
+        census = run_census_arm(shard=shard)
+        serving = run_serving_arm(shard=shard)
+    return {
+        "schema": "BENCH_compaction/v1",
+        "config": {"devices": jax.device_count(), "shard": shard,
+                   "quick": quick},
+        "census": census,
+        "serving": serving,
+        "cond_pick": COND_PICK_NOTE,
+    }
+
+
+def write_result(payload: dict, path: pathlib.Path = RESULT_PATH) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True))
+
+
+def run() -> list:
+    c = run_bench()
+    write_result(c)
+    return [{
+        "variant": "compaction",
+        "census_speedup": c["census"]["speedup"],
+        "serving_speedup": c["serving"]["speedup"],
+        "serving_occupancy": c["serving"]["compact"]["occupancy"],
+        "bit_identical": True,
+    }]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="seconds-long sanity pass, no JSON write, no bar")
+    ap.add_argument("--shard", action="store_true",
+                    help="lane-partition both arms across local devices")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="force N host platform devices (implies --shard)")
+    args = ap.parse_args(argv)
+    if args.devices:
+        # must land before jax touches a backend — repro imports in this
+        # module are deferred for exactly this line
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+        args.shard = True
+
+    c = run_bench(quick=args.quick, shard=args.shard)
+    if not args.quick and not args.shard:
+        # the tracked record is the canonical single-device experiment;
+        # quick/sharded passes must not clobber it with a different config
+        write_result(c)
+    cen, srv = c["census"], c["serving"]
+    print("name,us_per_call,derived")
+    print(f"compaction/census,0,"
+          f"lanes={cen['lanes']} tail={cen['tail_scale']}x "
+          f"fixed={cen['fixed']['steps_per_sec']:.0f}sps "
+          f"compact={cen['compact']['steps_per_sec']:.0f}sps "
+          f"speedup={cen['speedup']}x "
+          f"occupancy={cen['fixed']['occupancy']}->"
+          f"{cen['compact']['occupancy']} "
+          f"final_bucket={cen['compact']['final_bucket']}")
+    print(f"compaction/serving,0,"
+          f"requests={srv['requests']} pool={srv['pool']} "
+          f"fixed={srv['fixed']['steps_per_sec']:.0f}sps "
+          f"compact={srv['compact']['steps_per_sec']:.0f}sps "
+          f"speedup={srv['speedup']}x "
+          f"occupancy={srv['fixed']['occupancy']}->"
+          f"{srv['compact']['occupancy']} "
+          f"min_bucket_seen={srv['compact']['min_bucket_seen']} "
+          f"c3_readmissions={srv['compact']['c3_readmissions']}")
+    if not args.quick and srv["speedup"] < SPEEDUP_BAR:
+        raise RuntimeError(
+            f"serving-mix compaction speedup {srv['speedup']}x is below "
+            f"the {SPEEDUP_BAR}x acceptance bar")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,9 @@
   * trace_overhead           — traced vs untraced fleet census (the
                                repro.trace subsystem's 3.7%-claim analog);
                                writes BENCH_trace.json itself
+  * compaction_speedup       — live-lane compaction vs fixed width on a
+                               tail-heavy census + bimodal serving mix;
+                               writes BENCH_compaction.json itself
   * roofline                 — dry-run roofline table (§Roofline)
 
 Besides the CSV stream, writes ``benchmarks/results/BENCH_fleet.json`` with
@@ -34,7 +37,7 @@ import traceback
 
 SUITES = ["hook_overhead", "svc_census", "app_bandwidth", "collective_census",
           "collective_hook_overhead", "serving_throughput", "trace_overhead",
-          "roofline"]
+          "compaction_speedup", "roofline"]
 
 # suites feeding the BENCH_fleet.json record (collect_fleet_bench)
 _FLEET_BENCH_INPUTS = {"hook_overhead", "collective_hook_overhead"}

@@ -76,7 +76,8 @@ def run_drain(reqs, pool: int, chunk: int, shard: bool = False):
     from repro.core import run_fleet_prepared
     t0 = time.perf_counter()
     steps = 0
-    dispatches = 0
+    dispatched = 0          # lane-steps paid: every batch runs its lanes
+    dispatches = 0          # (masked) to the longest lane's last chunk
     waits = []
     for i in range(0, len(reqs), pool):
         batch = reqs[i:i + pool]
@@ -84,7 +85,9 @@ def run_drain(reqs, pool: int, chunk: int, shard: bool = False):
         out = run_fleet_prepared([pp for pp, _ in batch], fuel=FUEL,
                                  chunk=chunk, regs=[rg for _, rg in batch],
                                  shard=shard)
-        steps += int(np.asarray(out.icount).sum())
+        icount = np.asarray(out.icount)
+        steps += int(icount.sum())
+        dispatched += len(batch) * (-(-int(icount.max()) // chunk)) * chunk
         dispatches += 1
     wall = time.perf_counter() - t0
     return {
@@ -92,6 +95,9 @@ def run_drain(reqs, pool: int, chunk: int, shard: bool = False):
         "steps": steps,
         "steps_per_sec": round(steps / wall, 1),
         "dispatches": dispatches,
+        "dispatched_steps": dispatched,
+        "wasted_steps": dispatched - steps,
+        "occupancy": round(steps / dispatched, 4),
         "admission_wait_ms_mean": round(1e3 * float(np.mean(waits)), 2),
         "admission_wait_ms_max": round(1e3 * float(np.max(waits)), 2),
     }
@@ -117,6 +123,9 @@ def run_server(reqs, pool: int, chunk: int, gen_steps: int,
         "dispatches": stats["dispatches"],
         "generations": stats["generations"],
         "gen_steps": gen_steps,
+        "dispatched_steps": stats["dispatched_steps"],
+        "wasted_steps": stats["wasted_steps"],
+        "occupancy": stats["occupancy"],
         "admission_wait_gens_mean": round(stats["admission_wait_gens_mean"], 2),
         "admission_wait_ms_mean": round(stats["admission_wait_ms_mean"], 2),
         "admission_wait_ms_max": round(stats["admission_wait_ms_max"], 2),
@@ -239,6 +248,7 @@ def main(argv=None) -> None:
           f"server={c['server']['steps_per_sec']:.0f}sps "
           f"per_device={c['server']['per_device_steps_per_sec']:.0f}sps "
           f"speedup={c['speedup']}x "
+          f"occupancy={c['drain']['occupancy']}->{c['server']['occupancy']} "
           f"admit_wait={c['server']['admission_wait_ms_mean']}ms")
     print(f"serving/c3,0,"
           f"readmissions={c['c3']['c3_readmissions']} "

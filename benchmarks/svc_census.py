@@ -95,14 +95,24 @@ def run_sharded(passes: int = 2) -> dict:
         t0 = time.perf_counter()
         out = run_fleet_prepared(pps, fuel=10_000_000, shard=shard)
         wall = min(wall, time.perf_counter() - t0)
-    steps = int(np.asarray(out.icount).sum())
+    icount = np.asarray(out.icount)
+    steps = int(icount.sum())
     sps = steps / wall
+    # occupancy of the fixed-width dispatch: every lane steps (masked) until
+    # the longest lane's last chunk, so the dispatched lane-steps are
+    # lanes x the longest lane rounded up to the chunk size (the chunk
+    # run_fleet_prepared actually used: the first process's config)
+    chunk = pps[0].cfg.fleet_chunk
+    dispatched = len(pps) * (-(-int(icount.max()) // chunk)) * chunk
     return {
         "devices": ndev,
         "sharded": shard,
         "lanes": len(pps),
         "lanes_per_device": len(pps) // ndev if shard else len(pps),
         "total_steps": steps,
+        "dispatched_lane_steps": dispatched,
+        "wasted_lane_steps": dispatched - steps,
+        "occupancy": round(steps / dispatched, 4),
         "wall_s": round(wall, 3),
         "steps_per_sec": round(sps, 1),
         "per_device_steps_per_sec": round(sps / (ndev if shard else 1), 1),
@@ -123,6 +133,11 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="sanity pass: single timing pass, no JSON write")
     args = ap.parse_args(argv)
+    if args.devices is None and not args.quick:
+        # the tracked record's sharded section is the 2-device
+        # lane-partitioned point — a flagless full run (run.py refreshes
+        # every suite that way) must not clobber it with a 1-device row
+        args.devices = 2
     if args.devices:
         # must land before jax touches a backend — all repro imports above
         # are deferred for exactly this line
@@ -133,8 +148,18 @@ def main(argv=None) -> None:
     rows = run()
     sharded = run_sharded(passes=1 if args.quick else 2)
     if not args.quick:
-        write_result({"schema": "BENCH_census/v1", "apps": rows,
-                      "sharded": sharded})
+        payload = {"schema": "BENCH_census/v1", "apps": rows,
+                   "sharded": sharded}
+        if not sharded["sharded"] and RESULT_PATH.exists():
+            # this run could not lane-partition (e.g. run.py imports an
+            # earlier suite first, so jax is already initialised and the
+            # forced device count above lands too late) — keep the
+            # existing record's real multi-device point instead of
+            # clobbering it with a 1-device row
+            old = json.loads(RESULT_PATH.read_text()).get("sharded")
+            if old and old.get("sharded"):
+                payload["sharded"] = old
+        write_result(payload)
     print("name,us_per_call,derived")
     for r in rows:
         print(f"svc_census/{r['app']},0,"
@@ -146,6 +171,7 @@ def main(argv=None) -> None:
           f"lanes_per_device={sharded['lanes_per_device']} "
           f"sps={sharded['steps_per_sec']:.0f} "
           f"per_device_sps={sharded['per_device_steps_per_sec']:.0f} "
+          f"occupancy={sharded['occupancy']} "
           f"ok={sharded['all_completed']}")
 
 

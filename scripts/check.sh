@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
-# CI-style gate: tier-1, the smoke + serving + trace tiers, and two
-# seconds-long sanity passes on 2 forced host devices (the sharded serving
-# pool and the lane-partitioned census).  See tests/README.md for the tiers.
+# CI-style gate: tier-1, the smoke + serving + trace + compaction tiers,
+# and seconds-long sanity passes — two on 2 forced host devices (the
+# sharded serving pool and the lane-partitioned census) plus the
+# trace-overhead and compaction benchmarks (--quick; the compaction one
+# also runs a 2-device sharded rung).  See tests/README.md for the tiers.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,6 +21,9 @@ ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m serving
 echo "== trace tier (heavier example counts) =="
 ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m trace
 
+echo "== compaction tier (heavier example counts) =="
+ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m compaction
+
 echo "== serving throughput sanity (sharded, 2 host devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
     python -m benchmarks.serving_throughput --quick --shard
@@ -28,5 +33,11 @@ python -m benchmarks.svc_census --devices 2 --quick
 
 echo "== trace overhead sanity =="
 python -m benchmarks.trace_overhead --quick
+
+echo "== compaction sanity (single device) =="
+python -m benchmarks.compaction_speedup --quick
+
+echo "== compaction sanity (sharded, 2 host devices) =="
+python -m benchmarks.compaction_speedup --quick --devices 2
 
 echo "check.sh: all green"

@@ -10,10 +10,11 @@ Public surface::
 from . import costmodel, fleet, isa, layout, programs
 from .completeness import (C3Event, diagnose_c3, diagnose_c3_fleet,
                            run_with_c3)
-from .fleet import (TraceState, admit_lanes, fleet_counters, fleet_step,
-                    fleet_step_traced, fleet_summary, run_fleet,
-                    run_fleet_span, set_image_row, stack_images, stack_states,
-                    unstack_state)
+from .fleet import (TraceState, admit_lanes, choose_bucket, compact_ladder,
+                    fleet_counters, fleet_step, fleet_step_traced,
+                    fleet_summary, make_halted_states, precompile_ladder,
+                    run_fleet, run_fleet_compact, run_fleet_span,
+                    set_image_row, stack_images, stack_states, unstack_state)
 from .hookcfg import HookConfig, PinnedSite, PolicyRule
 from .image import Image, build_minilibc, build_process
 from .machine import (HALT_EXIT, HALT_FUEL, HALT_KILL, HALT_SEGV, HALT_TRAP,
@@ -22,7 +23,8 @@ from .machine import (HALT_EXIT, HALT_FUEL, HALT_KILL, HALT_SEGV, HALT_TRAP,
 from .rewriter import RewriteReport, rewrite_all_to_signal, rewrite_image
 from .runtime import (FleetImageTable, Mechanism, PreparedProcess,
                       fleet_trace, hook_invocations, initial_state,
-                      pack_fleet, prepare, run_fleet_prepared, run_prepared)
+                      pack_fleet, precompile_compact, prepare,
+                      run_fleet_prepared, run_prepared)
 from .scanner import SvcSite, census, scan_image
 
 __all__ = [
@@ -30,13 +32,16 @@ __all__ = [
     "HALT_KILL", "HALT_SEGV", "HALT_TRAP", "HookConfig", "Image",
     "MachineState", "Mechanism", "PinnedSite", "PolicyRule",
     "PreparedProcess", "RewriteReport", "SvcSite", "TraceState",
-    "admit_lanes", "build_minilibc", "build_process", "census", "costmodel",
-    "decode_image", "diagnose_c3", "diagnose_c3_fleet", "fleet",
-    "fleet_counters", "fleet_step", "fleet_step_traced", "fleet_summary",
-    "fleet_trace", "hook_invocations", "initial_state", "isa", "layout",
-    "make_state", "mem_read", "mem_read_block", "mem_write", "pack_fleet",
-    "prepare", "programs", "rewrite_all_to_signal", "rewrite_image",
-    "run_fleet", "run_fleet_prepared", "run_fleet_span", "run_image",
+    "admit_lanes", "build_minilibc", "build_process", "census",
+    "choose_bucket", "compact_ladder", "costmodel", "decode_image",
+    "diagnose_c3", "diagnose_c3_fleet", "fleet", "fleet_counters",
+    "fleet_step", "fleet_step_traced", "fleet_summary", "fleet_trace",
+    "hook_invocations", "initial_state", "isa", "layout",
+    "make_halted_states", "make_state", "mem_read", "mem_read_block",
+    "mem_write", "pack_fleet", "precompile_compact", "precompile_ladder",
+    "prepare", "programs",
+    "rewrite_all_to_signal", "rewrite_image", "run_fleet",
+    "run_fleet_compact", "run_fleet_prepared", "run_fleet_span", "run_image",
     "run_prepared", "run_with_c3", "scan_image", "set_image_row",
     "stack_images", "stack_states", "unstack_state",
 ]

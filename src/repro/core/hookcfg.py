@@ -71,6 +71,18 @@ class HookConfig:
     # max_restarts).
     serve_gen_steps: int = 256
     serve_max_restarts: int = 4
+    # Live-lane compaction (fleet.run_fleet_compact / FleetServer): when
+    # enabled, a fleet compacts still-live lanes into a dense prefix at
+    # chunk boundaries and re-dispatches at the narrowest power-of-two
+    # bucket width >= the live count, down to compact_min_bucket (every
+    # rung is a precompiled executable — no mid-run XLA compiles).
+    # compact_hysteresis is the shrink margin: a rung is only taken when
+    # the live count also clears rung * (1 - hysteresis), which keeps a
+    # serving pool from oscillating when admissions re-expand it.
+    # Results are bit-identical and lane-ordered either way.
+    compact_enabled: bool = False
+    compact_min_bucket: int = 8
+    compact_hysteresis: float = 0.125
     # Syscall tracing + policy subsystem (repro.trace): ring capacity per
     # lane, whether the serving layer (FleetServer) traces by default —
     # fleet entry points only trace on an explicit trace= argument, so

@@ -259,7 +259,9 @@ def run_fleet_prepared(pps: Sequence[PreparedProcess], *,
                        chunk: Optional[int] = None,
                        regs: Optional[Sequence[Optional[Dict[int, int]]]] = None,
                        shard: bool = False,
-                       trace: Optional[bool] = None):
+                       trace: Optional[bool] = None,
+                       compact: Optional[bool] = None,
+                       compact_stats: Optional[dict] = None):
     """Run every prepared process to completion in ONE device dispatch.
 
     ``chunk`` defaults to the first process's ``HookConfig.fleet_chunk``.
@@ -270,16 +272,65 @@ def run_fleet_prepared(pps: Sequence[PreparedProcess], *,
     rings and policy verdicts of the whole fleet, captured in the same
     single dispatch.  Arity depends only on the explicit argument (see
     :func:`pack_fleet`).
+
+    ``compact`` switches to the occupancy-aware driver
+    (:func:`repro.core.fleet.run_fleet_compact`): live lanes are compacted
+    into narrowing bucket widths as the fleet drains, with the ladder
+    parameters (``compact_min_bucket`` / ``compact_hysteresis``) taken from
+    the first process's ``HookConfig``.  ``None`` defers to that config's
+    ``compact_enabled``.  Results — and the return arity — are unchanged:
+    compaction is bit-identical and lane-ordered.  ``compact_stats`` (a
+    dict, filled in place) receives the occupancy ledger of a compacted
+    run.
     """
     packed = pack_fleet(pps, fuel=fuel, regs=regs, trace=trace)
+    cfg = next((pp.cfg for pp in pps if pp.cfg is not None), None)
     if chunk is None:
-        cfg = next((pp.cfg for pp in pps if pp.cfg is not None), None)
         chunk = cfg.fleet_chunk if cfg is not None else F.DEFAULT_CHUNK
-    if len(packed) == 3:
-        imgs, ids, states = packed
+    if compact is None:
+        compact = cfg.compact_enabled if cfg is not None else False
+    ts = packed[3] if len(packed) == 4 else None
+    imgs, ids, states = packed[:3]
+    if compact:
+        ccfg = cfg or HookConfig()
+        out = F.run_fleet_compact(
+            imgs, states, ids, chunk=chunk, shard=shard, trace=ts,
+            min_bucket=ccfg.compact_min_bucket,
+            hysteresis=ccfg.compact_hysteresis, stats=compact_stats)
+        return out
+    if ts is None:
         return F.run_fleet(imgs, states, ids, chunk=chunk, shard=shard)
-    imgs, ids, states, ts = packed
     return F.run_fleet(imgs, states, ids, chunk=chunk, shard=shard, trace=ts)
+
+
+def precompile_compact(pps: Sequence[PreparedProcess], *,
+                       chunk: Optional[int] = None,
+                       min_bucket: Optional[int] = None,
+                       interval: Optional[int] = None,
+                       trace: Optional[bool] = None,
+                       shard: bool = False) -> List[int]:
+    """Warm every rung of the compaction ladder a
+    ``run_fleet_prepared(compact=True)`` over ``pps`` will visit, so the
+    timed (or serving) run never pays an XLA compile mid-flight.  Defaults
+    mirror :func:`run_fleet_prepared`: chunk / min_bucket from the first
+    process's config, ``interval = 8 * chunk``.  Returns the ladder."""
+    cfg = next((pp.cfg for pp in pps if pp.cfg is not None), None) \
+        or HookConfig()
+    chunk = cfg.fleet_chunk if chunk is None else chunk
+    min_bucket = cfg.compact_min_bucket if min_bucket is None else min_bucket
+    divisor = 1
+    if shard:
+        from repro.parallel.sharding import fleet_divisor
+        divisor = fleet_divisor(len(pps))
+    ladder = F.compact_ladder(len(pps), min_bucket, divisor=divisor)
+    imgs = pack_fleet(pps)[0]
+    cap = None
+    if trace:
+        caps = [pp.cfg.trace_cap for pp in pps if pp.cfg is not None]
+        cap = max(caps) if caps else F.DEFAULT_TRACE_CAP
+    F.precompile_ladder(imgs, ladder, chunk=chunk, interval=interval,
+                        trace_cap=cap, shard=shard)
+    return ladder
 
 
 def hook_invocations(state: M.MachineState) -> int:

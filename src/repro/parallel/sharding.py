@@ -236,6 +236,17 @@ def lane_sharding(mesh, extra_dims: int = 0):
         mesh, P(LANE_AXIS, *([None] * extra_dims)))
 
 
+def fleet_divisor(n_lanes: int, mesh=None) -> int:
+    """The lane-count divisor a partitioned fleet must respect: the device
+    count when it divides ``n_lanes`` (so :func:`shard_fleet` actually
+    partitions), else 1 (the replicated fallback).  Feed it to
+    ``fleet.compact_ladder(divisor=...)`` for per-shard bucket ladders —
+    every rung then keeps an equal lane slice per device."""
+    mesh = mesh or fleet_mesh()
+    ndev = int(np.prod(mesh.devices.shape))
+    return ndev if ndev > 1 and n_lanes % ndev == 0 else 1
+
+
 def shard_fleet(imgs, img_ids, states, mesh=None, trace=None):
     """Partition a fleet across devices: states/ids split along lanes, the
     deduplicated decode tables replicated.  ``trace`` (a fleet

@@ -34,6 +34,17 @@ the serving layer the ROADMAP asks for:
   ``admit_lanes`` recycles the ring rows in the same donated scatter as
   the machine state.  Machine states stay bit-identical to an untraced
   server under all-ALLOW policies.
+* **Live-lane compaction.**  With ``compact=True`` (or
+  ``cfg.compact_enabled``) generations run at the occupancy-chosen bucket
+  width from the pool's precompiled ladder
+  (:func:`repro.core.fleet.compact_ladder`): when occupied lanes + queued
+  demand fall below the next rung, the pool compacts occupied lanes into
+  a dense prefix (one gather-permutation over every carry leaf) and
+  re-dispatches narrower; admissions re-expand it up the ladder and
+  install into the compacted slots.  The physical-lane -> request mapping
+  is tracked host-side, so published results — including C3
+  pin-and-re-admit cycles and decoded trace rings — are bit-identical to
+  the fixed-width server's.
 """
 from __future__ import annotations
 
@@ -115,7 +126,8 @@ class FleetServer:
                  gen_steps: Optional[int] = None, chunk: Optional[int] = None,
                  table_capacity: Optional[int] = None,
                  fuel: int = 2_000_000, shard: bool = False,
-                 trace: Optional[bool] = None):
+                 trace: Optional[bool] = None,
+                 compact: Optional[bool] = None):
         assert pool >= 1
         self.pool = pool
         self.cfg = cfg or HookConfig()
@@ -128,6 +140,8 @@ class FleetServer:
         self.default_fuel = fuel
         self.trace_enabled = bool(self.cfg.trace_enabled if trace is None
                                   else trace)
+        self.compact_enabled = bool(self.cfg.compact_enabled if compact is None
+                                    else compact)
         self.table = FleetImageTable(table_capacity or pool + 8)
         self._slots: List[Optional[FleetRequest]] = [None] * pool
         self._ids = np.zeros(pool, np.int32)
@@ -146,27 +160,68 @@ class FleetServer:
         self.enosys_total = 0                    # -ENOSYS fall-throughs seen
         self.trace_records = 0                   # ring records published
         self.trace_dropped = 0                   # ring overflow drops
+        self.dispatched_steps = 0                # lane-steps paid for
+        self.executed_steps = 0                  # lane-steps actually run
+        self.pool_grows = 0
+        self.pool_shrinks = 0
         self._wait_gens: List[int] = []
         self._wait_s: List[float] = []
 
-        empty = M.make_state(0, fuel=0)._replace(
-            halted=jnp.int64(M.HALT_EXIT))
-        self._states = F.stack_states([empty] * pool)
+        # Physical lane pool.  ``_order[p]`` is the logical slot backed by
+        # physical lane ``p``; the device state arrays have width
+        # ``_W == len(_order)``.  Without compaction the mapping stays the
+        # identity at full pool width (the fixed-width server unchanged);
+        # with it, generations run at the occupancy-chosen rung of
+        # ``_ladder`` and the mapping tracks the compaction permutations so
+        # every logical slot's request survives shrink/grow cycles.
+        self._order = np.arange(pool)
+        self._W = pool
+        self._prev_icount = np.zeros(pool, np.int64)
+        self._shard = bool(shard)
+        divisor = 1
+        if self._shard:
+            from repro.parallel.sharding import fleet_divisor
+            divisor = fleet_divisor(pool)
+        self._ladder = (F.compact_ladder(pool, self.cfg.compact_min_bucket,
+                                         divisor=divisor)
+                        if self.compact_enabled else [pool])
+        self.min_bucket_seen = pool
+
+        self._states = F.make_halted_states(pool)
         self._trace = (trace_recorder.make_trace_state(pool,
                                                        self.cfg.trace_cap)
                        if self.trace_enabled else None)
-        # one dummy per unused admission slot: admissions are padded to pool
-        # width so the donated scatter compiles exactly once
+        # one dummy per unused admission slot: admissions are padded to the
+        # current bucket width so the donated scatter compiles once per rung
         self._pad_state = M.make_state(0, fuel=0)
-        if shard:
-            # lane-partition the pool state once; donated dispatches keep
-            # the placement (img ids stay host-side, re-shipped per dispatch)
-            from repro.parallel.sharding import shard_fleet
-            parts = shard_fleet(self.table.images, jnp.asarray(self._ids),
-                                self._states, trace=self._trace)
-            self._states = parts[2]
-            if self._trace is not None:
-                self._trace = parts[3]
+        self._place()
+
+    def _place(self) -> None:
+        """(Re-)apply the lane partitioning after a width change; donated
+        dispatches keep the placement between changes (img ids stay
+        host-side, re-shipped per dispatch)."""
+        if not self._shard:
+            return
+        from repro.parallel.sharding import shard_fleet
+        parts = shard_fleet(self.table.images,
+                            jnp.asarray(self._ids[self._order]),
+                            self._states, trace=self._trace)
+        self._states = parts[2]
+        if self._trace is not None:
+            self._trace = parts[3]
+
+    def precompile_ladder(self) -> List[int]:
+        """Warm every rung's span executable (one all-halted dummy dispatch
+        per rung) plus the shrink/grow transition graphs between rungs, so
+        the step path never pays an XLA compile mid-flight (the per-rung
+        admission scatters still compile on their first use); returns the
+        ladder.  Optional — everything otherwise compiles lazily."""
+        F.precompile_ladder(
+            self.table.images, self._ladder, chunk=self.chunk,
+            interval=self.gen_steps,
+            trace_cap=self.cfg.trace_cap if self.trace_enabled else None,
+            shard=self._shard)
+        return list(self._ladder)
 
     # -- request intake -------------------------------------------------------
 
@@ -226,13 +281,79 @@ class FleetServer:
     def _free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self._slots) if r is None]
 
+    def _occupied_lanes(self) -> int:
+        return sum(1 for p in range(self._W)
+                   if self._slots[self._order[p]] is not None)
+
+    def _grow_to(self, target: int) -> None:
+        """Re-expand the pool up the ladder: pad the device arrays with
+        all-halted lanes and back previously-compacted-away free slots."""
+        add = target - self._W
+        backed = set(int(s) for s in self._order)
+        new_slots = [s for s in range(self.pool) if s not in backed][:add]
+        assert len(new_slots) == add, "ladder grew past the free slots"
+        pad_s = F.make_halted_states(add)
+        if self._trace is None:
+            self._states = F.concat_lanes(self._states, pad_s)
+        else:
+            pad_t = F.make_empty_trace(add, self._trace.buf.shape[1])
+            self._states, self._trace = F.concat_lanes(
+                (self._states, self._trace), (pad_s, pad_t))
+        self._order = np.concatenate([self._order, np.asarray(new_slots)])
+        self._prev_icount = np.concatenate(
+            [self._prev_icount, np.zeros(add, np.int64)])
+        self._W = target
+        self.pool_grows += 1
+        self._place()
+
+    def _shrink_to(self, target: int) -> None:
+        """Compact occupied lanes into a dense prefix (one
+        gather-permutation over every carry leaf) and drop the free
+        suffix; the dropped lanes carry no request state."""
+        occ = np.asarray([self._slots[self._order[p]] is not None
+                          for p in range(self._W)])
+        perm = np.argsort(~occ, kind="stable")       # occupied lanes first
+        keep = jnp.asarray(perm[:target])
+        drop = jnp.asarray(perm[target:])
+        if self._trace is None:
+            self._states, _ = F.permute_split(self._states, keep, drop)
+        else:
+            (self._states, self._trace), _ = F.permute_split(
+                (self._states, self._trace), keep, drop)
+        self._order = self._order[perm[:target]]
+        self._prev_icount = self._prev_icount[perm[:target]]
+        self._W = target
+        self.pool_shrinks += 1
+        self.min_bucket_seen = min(self.min_bucket_seen, target)
+        self._place()
+
+    def _rebucket(self) -> None:
+        """Pick the occupancy-chosen rung for the next generation:
+        occupied lanes plus the demand about to be admitted, with the
+        hysteresis margin guarding borderline shrinks."""
+        if not self.compact_enabled:
+            return
+        occupied = self._occupied_lanes()
+        demand = min(len(self._queue), self.pool - occupied)
+        target = F.choose_bucket(
+            self._ladder, occupied + demand, cur=self._W,
+            hysteresis=self.cfg.compact_hysteresis)
+        if target > self._W:
+            self._grow_to(target)
+        elif target < self._W:
+            self._shrink_to(target)
+
     def _admit_pending(self) -> None:
         """Fill freed slots: C3 recycles first, then the request queue —
         one padded, donated scatter for the whole admission batch (the
-        trace rings and policy tables recycle in the same scatter)."""
-        slots, lanes, pols = [], [], []
+        trace rings and policy tables recycle in the same scatter).  In a
+        compacted pool the scatter targets *physical* lanes; the pool was
+        re-bucketed first, so every queued request that fits the pool has
+        a backed lane waiting."""
+        phys_of = {int(s): p for p, s in enumerate(self._order)}
+        lanes_idx, lanes, pols = [], [], []
         for req in self._readmit:                # slot already owned
-            slots.append(req.slot)
+            lanes_idx.append(phys_of[req.slot])
             lanes.append(initial_state(req.pp, fuel=req.fuel, regs=req.regs))
             pols.append(req.policy)
             self._ids[req.slot] = req.row
@@ -241,6 +362,9 @@ class FleetServer:
         for slot in self._free_slots():
             if not self._queue:
                 break
+            p = phys_of.get(slot)
+            if p is None:
+                continue                 # compacted-away slot: not backed
             req = self._queue[0]
             try:
                 row = self.table.admit(req.pp)
@@ -256,25 +380,35 @@ class FleetServer:
             self._slots[slot] = req
             self._ids[slot] = req.row
             self._fuel[slot] = req.fuel
-            slots.append(slot)
+            lanes_idx.append(p)
             lanes.append(initial_state(req.pp, fuel=req.fuel, regs=req.regs))
             pols.append(req.policy)
-        if not slots:
+        if not lanes_idx:
             return
-        pad = self.pool - len(slots)             # park padding out of range
-        slots += [self.pool + i for i in range(pad)]
+        self._prev_icount[lanes_idx] = 0         # admitted lanes restart
+        pad = self._W - len(lanes_idx)           # park padding out of range
+        lanes_idx += [self._W + i for i in range(pad)]
         lanes += [self._pad_state] * pad
         pols += [None] * pad
         if self._trace is None:
-            self._states = F.admit_lanes(self._states, slots, lanes)
+            self._states = F.admit_lanes(self._states, lanes_idx, lanes)
         else:
             self._states, self._trace = F.admit_lanes(
-                self._states, slots, lanes, trace=self._trace, policies=pols)
+                self._states, lanes_idx, lanes, trace=self._trace,
+                policies=pols)
 
     def _harvest(self) -> List[FleetResult]:
         halted = np.asarray(self._states.halted)
         icount = np.asarray(self._states.icount)
-        patched = F.finish_halt_codes(halted, icount, self._fuel)
+        # occupancy ledger: lane-steps actually executed this generation vs
+        # the lane-steps the dispatch paid for (bucket width x chunks run)
+        delta = icount - self._prev_icount
+        chunks_run = int(-(-int(delta.max()) // self.chunk)) if delta.max() \
+            else 0
+        self.dispatched_steps += self._W * chunks_run * self.chunk
+        self.executed_steps += int(delta.sum())
+        self._prev_icount = icount.copy()
+        patched = F.finish_halt_codes(halted, icount, self._fuel[self._order])
         done = patched != M.RUNNING
         if done.any():  # one transfer per field, only when publishing
             enosys = np.asarray(self._states.enosys_count)
@@ -283,18 +417,21 @@ class FleetServer:
                 trace_cnt = np.asarray(self._trace.count)
 
         # batch C3 diagnosis over every faulted, recyclable lane at once
-        c3_pps: List[Optional[PreparedProcess]] = [None] * self.pool
-        for i, req in enumerate(self._slots):
+        # (indexed by physical lane, like the device arrays)
+        c3_pps: List[Optional[PreparedProcess]] = [None] * self._W
+        for i in range(self._W):
+            req = self._slots[self._order[i]]
             if (req is not None and done[i]
                     and halted[i] == M.HALT_SEGV
                     and req.builder is not None and req.cfg.enable_c3):
                 c3_pps[i] = req.pp
         events = (diagnose_c3_fleet(c3_pps, self._states, halted=halted)
                   if any(p is not None for p in c3_pps)
-                  else [None] * self.pool)
+                  else [None] * self._W)
 
         results: List[FleetResult] = []
-        for i, req in enumerate(self._slots):
+        for i in range(self._W):
+            req = self._slots[self._order[i]]
             if req is None or not done[i]:
                 continue
             ev = events[i]
@@ -348,21 +485,24 @@ class FleetServer:
             self.trace_dropped += dropped
             self.completed += 1
             self.table.release(req.row)
-            self._slots[i] = None
+            self._slots[self._order[i]] = None
         return results
 
     def step(self) -> List[FleetResult]:
-        """One generation: admit -> one bounded dispatch -> harvest."""
+        """One generation: re-bucket -> admit -> one bounded dispatch at
+        the occupancy-chosen width -> harvest."""
+        self._rebucket()
         self._admit_pending()
         if all(r is None for r in self._slots):
             return []
+        ids = self._ids[self._order]
         if self._trace is None:
             self._states = F.run_fleet_span(
-                self.table.images, self._states, self._ids,
+                self.table.images, self._states, ids,
                 steps=self.gen_steps, chunk=self.chunk)
         else:
             self._states, self._trace = F.run_fleet_span(
-                self.table.images, self._states, self._ids,
+                self.table.images, self._states, ids,
                 steps=self.gen_steps, chunk=self.chunk, trace=self._trace)
         self.dispatches += 1
         self.generation += 1
@@ -407,6 +547,17 @@ class FleetServer:
             "trace_enabled": self.trace_enabled,
             "trace_records": self.trace_records,
             "trace_dropped": self.trace_dropped,
+            "compact_enabled": self.compact_enabled,
+            "ladder": list(self._ladder),
+            "bucket_width": self._W,
+            "min_bucket_seen": self.min_bucket_seen,
+            "pool_grows": self.pool_grows,
+            "pool_shrinks": self.pool_shrinks,
+            "dispatched_steps": self.dispatched_steps,
+            "executed_steps": self.executed_steps,
+            "wasted_steps": self.dispatched_steps - self.executed_steps,
+            "occupancy": round(self.executed_steps / self.dispatched_steps, 4)
+            if self.dispatched_steps else 1.0,
             "admission_wait_gens_mean": float(np.mean(waits_g)),
             "admission_wait_gens_max": int(np.max(waits_g)),
             "admission_wait_ms_mean": 1e3 * float(np.mean(waits_s)),

@@ -11,3 +11,10 @@ def pytest_configure(config):
         "trace: syscall tracing + policy subsystem suites (traced/untraced "
         "bit-exact parity, ring overflow, seccomp-style actions; scale up "
         "via ASC_TEST_EXAMPLES)")
+    config.addinivalue_line(
+        "markers",
+        "compaction: live-lane compaction suites (compacted vs fixed-width "
+        "bit-exact lane-ordered parity across mechanism x workload x chunk "
+        "x ladder rung, trace rings through shrink/re-expansion, FleetServer "
+        "C3 re-admission into a compacted pool; scale up via "
+        "ASC_TEST_EXAMPLES)")

@@ -1,0 +1,300 @@
+"""Live-lane compaction suite (marked ``compaction``).
+
+The property the scheduler must never break: compaction is pure
+bookkeeping.  For ANY mechanism, workload, chunk size, ladder rung and
+hysteresis — and through FleetServer shrink / re-expansion / C3
+pin-and-re-admit cycles — the results of a compacted run are BIT-identical
+and lane-ordered versus the fixed-width path: machine states, event lists
+and syscall trace rings alike.  On top of that: the ladder/bucket helpers
+honour their contracts and the compaction config round-trips through the
+JSON config file.
+"""
+import os
+
+import numpy as np
+import pytest
+from _hyp_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import (HookConfig, Mechanism, fleet, pack_fleet, prepare,
+                        programs, run_prepared, run_with_c3, unstack_state)
+from repro.serve.fleet_server import FleetServer
+
+pytestmark = pytest.mark.compaction
+
+FUEL = 150_000
+MAX_EXAMPLES = int(os.environ.get("ASC_TEST_EXAMPLES", "5"))
+
+_SETTINGS = dict(max_examples=MAX_EXAMPLES, deadline=None, derandomize=True)
+if HAVE_HYPOTHESIS:
+    from hypothesis import HealthCheck
+    _SETTINGS["suppress_health_check"] = list(HealthCheck)
+
+MECHS = [Mechanism.NONE, Mechanism.LD_PRELOAD, Mechanism.ASC,
+         Mechanism.SIGNAL, Mechanism.PTRACE]
+
+_WORKLOADS = {
+    "getpid": programs.getpid_loop_param,
+    "read": lambda: programs.read_loop_param(256),
+}
+
+_pp_cache = {}
+
+
+def _pp(wname, mech):
+    key = (wname, mech)
+    if key not in _pp_cache:
+        virt = mech is not Mechanism.NONE
+        _pp_cache[key] = prepare(_WORKLOADS[wname](), mech, virtualize=virt)
+    return _pp_cache[key]
+
+
+def _assert_state_equal(ref, got, ctx):
+    for field in ref._fields:
+        a, b = np.asarray(getattr(ref, field)), np.asarray(getattr(got, field))
+        assert np.array_equal(a, b), f"{ctx}: field {field!r} diverged"
+
+
+# -- ladder / bucket helpers --------------------------------------------------
+
+def test_compact_ladder_rungs():
+    """Full width first, then descending powers of two down to the minimum
+    bucket; per-shard ladders drop rungs a device slice cannot hold."""
+    assert fleet.compact_ladder(400, 8) == [400, 256, 128, 64, 32, 16, 8]
+    assert fleet.compact_ladder(8, 8) == [8]
+    assert fleet.compact_ladder(1, 1) == [1]
+    assert fleet.compact_ladder(10, 1) == [10, 8, 4, 2, 1]
+    assert fleet.compact_ladder(16, 2, divisor=2) == [16, 8, 4, 2]
+    # no power of two below 12 divides by 3: the ladder degenerates to the
+    # full width and compaction becomes a no-op rather than a wrong split
+    assert fleet.compact_ladder(12, 1, divisor=3) == [12]
+    with pytest.raises(ValueError):
+        fleet.compact_ladder(0)
+
+
+def test_choose_bucket_hysteresis():
+    ladder = [16, 8, 4, 2]
+    assert fleet.choose_bucket(ladder, 9) == 16
+    assert fleet.choose_bucket(ladder, 8) == 8
+    assert fleet.choose_bucket(ladder, 1) == 2
+    # a shrink needs the margin: 4 live in a rung of 4 is borderline
+    assert fleet.choose_bucket(ladder, 3, cur=16, hysteresis=0.25) == 4
+    assert fleet.choose_bucket(ladder, 4, cur=16, hysteresis=0.25) == 8
+    assert fleet.choose_bucket(ladder, 4, cur=16, hysteresis=0.0) == 4
+    # growth is demand-driven and ignores the margin
+    assert fleet.choose_bucket(ladder, 12, cur=8, hysteresis=0.5) == 16
+
+
+def test_hookcfg_compaction_roundtrip(tmp_path):
+    cfg = HookConfig(compact_enabled=True, compact_min_bucket=4,
+                     compact_hysteresis=0.25)
+    path = tmp_path / "hook.json"
+    cfg.save(path)
+    got = HookConfig.load(path)
+    assert got.compact_enabled is True
+    assert got.compact_min_bucket == 4
+    assert got.compact_hysteresis == 0.25
+
+
+# -- fleet-level parity -------------------------------------------------------
+
+def _bimodal_fleet(short=3, long=60):
+    """Every mechanism x workload twice: one short and one long lane per
+    cell, so the fleet drains through several ladder rungs."""
+    pps, regs = [], []
+    for mech in MECHS:
+        for wname in _WORKLOADS:
+            for n in (short, long):
+                pps.append(_pp(wname, mech))
+                regs.append({19: n})
+    return pps, regs
+
+
+def test_compact_matches_fixed_exhaustive():
+    """Every mechanism x workload (bimodal lane lengths) in ONE fleet:
+    the compacted run's states equal the fixed-width run's, lane for
+    lane, and the ladder was actually descended."""
+    pps, regs = _bimodal_fleet()
+    imgs, ids, states = pack_fleet(pps, fuel=FUEL, regs=regs)
+    ref = fleet.run_fleet(imgs, states, ids, chunk=8)
+    imgs, ids, states = pack_fleet(pps, fuel=FUEL, regs=regs)
+    stats = {}
+    out = fleet.run_fleet_compact(imgs, states, ids, chunk=8, min_bucket=1,
+                                  interval=32, stats=stats)
+    _assert_state_equal(ref, out, "exhaustive")
+    assert stats["compactions"], "fleet never compacted"
+    assert stats["occupancy"] <= 1.0
+    assert (stats["dispatched_lane_steps"]
+            == stats["useful_steps"] + stats["wasted_lane_steps"])
+
+
+@settings(**_SETTINGS)
+@given(data=st.data())
+def test_compact_parity_any_mech_workload_chunk_rung(data):
+    """Sampled mechanism x workload x chunk x interval x ladder rung x
+    hysteresis: compacted fleet == fixed-width fleet == scalar engine,
+    bit for bit and lane-ordered."""
+    chunk = data.draw(st.sampled_from([1, 8, 64]), label="chunk")
+    interval = data.draw(st.sampled_from([8, 40]), label="interval")
+    min_bucket = data.draw(st.sampled_from([1, 2, 4]), label="min_bucket")
+    hyst = data.draw(st.sampled_from([0.0, 0.25]), label="hysteresis")
+    n_lanes = data.draw(st.integers(1, 5), label="lanes")
+    reqs = [(data.draw(st.sampled_from(sorted(_WORKLOADS)), label="w"),
+             data.draw(st.sampled_from(MECHS), label="m"),
+             data.draw(st.integers(1, 40), label="n"))
+            for _ in range(n_lanes)]
+    pps = [_pp(w, m) for w, m, _ in reqs]
+    regs = [{19: n} for _, _, n in reqs]
+    imgs, ids, states = pack_fleet(pps, fuel=FUEL, regs=regs)
+    ref = fleet.run_fleet(imgs, states, ids, chunk=chunk)
+    imgs, ids, states = pack_fleet(pps, fuel=FUEL, regs=regs)
+    out = fleet.run_fleet_compact(imgs, states, ids, chunk=chunk,
+                                  min_bucket=min_bucket, hysteresis=hyst,
+                                  interval=interval)
+    _assert_state_equal(ref, out, f"chunk={chunk} iv={interval} "
+                                  f"mb={min_bucket} h={hyst}")
+    scalar_lane = data.draw(st.integers(0, n_lanes - 1), label="lane")
+    _assert_state_equal(run_prepared(pps[scalar_lane], fuel=FUEL,
+                                     regs=regs[scalar_lane]),
+                        unstack_state(out, scalar_lane),
+                        f"scalar lane {reqs[scalar_lane]}")
+
+
+def test_compact_traced_rings_identical():
+    """A traced compacted run: machine states AND the whole trace carry
+    (ring rows, lifetime counts, policy tables) equal the fixed-width
+    traced run's, lane for lane."""
+    pps, regs = _bimodal_fleet()
+    imgs, ids, states, tr = pack_fleet(pps, fuel=FUEL, regs=regs, trace=True)
+    ref_s, ref_t = fleet.run_fleet(imgs, states, ids, chunk=8, trace=tr)
+    imgs, ids, states, tr = pack_fleet(pps, fuel=FUEL, regs=regs, trace=True)
+    stats = {}
+    out_s, out_t = fleet.run_fleet_compact(imgs, states, ids, chunk=8,
+                                           min_bucket=1, interval=32,
+                                           trace=tr, stats=stats)
+    _assert_state_equal(ref_s, out_s, "traced states")
+    _assert_state_equal(ref_t, out_t, "trace carry")
+    assert stats["compactions"], "fleet never compacted"
+    assert (np.asarray(out_t.count) >= 1).any()
+
+
+def test_run_fleet_prepared_compact_config_path():
+    """HookConfig.compact_enabled drives run_fleet_prepared's driver
+    choice; results and return arity stay identical either way."""
+    pps, regs = _bimodal_fleet(short=2, long=30)
+    cfg = HookConfig(compact_enabled=True, compact_min_bucket=1)
+    pps = [prepare(_WORKLOADS[w](), m,
+                   virtualize=(m is not Mechanism.NONE), cfg=cfg)
+           for m in MECHS for w in _WORKLOADS for _ in (0, 1)]
+    from repro.core import run_fleet_prepared
+    ref = run_fleet_prepared(pps, fuel=FUEL, regs=regs, compact=False)
+    stats = {}
+    out = run_fleet_prepared(pps, fuel=FUEL, regs=regs,
+                             compact_stats=stats)  # compact=None -> cfg
+    _assert_state_equal(ref, out, "config path")
+    assert stats, "cfg.compact_enabled did not engage the compact driver"
+
+
+# -- server equivalence -------------------------------------------------------
+
+@settings(**_SETTINGS)
+@given(data=st.data())
+def test_compacted_server_matches_run_prepared(data):
+    """Any arrival order / pool width / hysteresis on a compacted traced
+    server, with a second submission wave landing after the pool has had
+    time to shrink: published machine states bit-identical to
+    run_prepared of each process alone (compaction never reschedules)."""
+    pool = data.draw(st.integers(2, 4), label="pool")
+    hyst = data.draw(st.sampled_from([0.0, 0.25]), label="hysteresis")
+    n1 = data.draw(st.integers(1, 3), label="wave1")
+    n2 = data.draw(st.integers(0, 2), label="wave2")
+    reqs = [(data.draw(st.sampled_from(sorted(_WORKLOADS)), label="w"),
+             data.draw(st.sampled_from(MECHS), label="m"),
+             data.draw(st.integers(1, 40), label="n"))
+            for _ in range(n1 + n2)]
+    srv = FleetServer(pool=pool, gen_steps=40, chunk=8, fuel=FUEL,
+                      trace=True, compact=True,
+                      cfg=HookConfig(compact_min_bucket=1,
+                                     compact_hysteresis=hyst))
+    rids = [srv.submit(_pp(w, m), regs={19: n}) for w, m, n in reqs[:n1]]
+    results = {}
+    for _ in range(3):   # let the pool drain/shrink before wave 2
+        for r in srv.step():
+            results[r.rid] = r
+    rids += [srv.submit(_pp(w, m), regs={19: n}) for w, m, n in reqs[n1:]]
+    for r in srv.run():
+        results[r.rid] = r
+    assert set(results) == set(rids)
+    for rid, (w, m, n) in zip(rids, reqs):
+        ref = run_prepared(_pp(w, m), fuel=FUEL, regs={19: n})
+        _assert_state_equal(ref, results[rid].state,
+                            f"pool={pool} h={hyst} lane=({w},{m},{n})")
+
+
+def test_server_traces_survive_shrink_and_regrow():
+    """Trace rings ride the compaction permutations: a traced compacted
+    server that shrinks to the min bucket and re-expands on a second wave
+    publishes the same decoded records (and machine states) as the
+    fixed-width server, for every request."""
+    def staged(compact):
+        srv = FleetServer(pool=8, gen_steps=48, chunk=8, fuel=FUEL,
+                          trace=True, compact=compact,
+                          cfg=HookConfig(compact_min_bucket=1))
+        res = {}
+        for i in range(8):   # 6 short + 2 long: the pool drains to 2 lanes
+            srv.submit(_pp("getpid" if i % 2 else "read", Mechanism.ASC),
+                       regs={19: 4 if i < 6 else 120})
+        while srv.completed < 6:
+            for r in srv.step():
+                res[r.rid] = r
+        for _ in range(3):   # the compacted pool shrinks in these steps
+            for r in srv.step():
+                res[r.rid] = r
+        for i in range(6):   # second wave: the pool must re-expand
+            srv.submit(_pp("read" if i % 2 else "getpid", Mechanism.SIGNAL),
+                       regs={19: 5})
+        for r in srv.run():
+            res[r.rid] = r
+        return res, srv.stats()
+
+    ref, _ = staged(False)
+    got, stats = staged(True)
+    assert set(ref) == set(got)
+    for rid in ref:
+        _assert_state_equal(ref[rid].state, got[rid].state, f"rid {rid}")
+        assert ref[rid].trace == got[rid].trace, f"rid {rid} trace"
+        assert ref[rid].trace_dropped == got[rid].trace_dropped
+        assert ref[rid].admitted_gen == got[rid].admitted_gen
+    assert stats["pool_shrinks"] >= 1 and stats["pool_grows"] >= 1
+    assert stats["min_bucket_seen"] < 8
+    assert any(len(r.trace) > 0 for r in got.values())
+
+
+def test_c3_readmission_into_compacted_pool():
+    """The Figure 4 flow inside a compacted pool: the pool shrinks around
+    a long-running lane first, THEN an R3-faulting request arrives — it
+    must re-expand the bucket, be diagnosed, pinned and re-admitted with
+    zero scalar re-executions, and its event list must equal
+    run_with_c3's."""
+    _, _, ev_ref, runs_ref = run_with_c3(
+        lambda: programs.indirect_svc(3), cfg=HookConfig(), virtualize=True,
+        fuel=FUEL)
+    srv = FleetServer(pool=4, gen_steps=64, chunk=8, fuel=FUEL, compact=True,
+                      cfg=HookConfig(compact_min_bucket=1))
+    srv.submit(_pp("getpid", Mechanism.ASC), regs={19: 60})  # a long lane
+    res = {}
+    for _ in range(4):   # the 4-wide pool compacts around the single lane
+        for r in srv.step():
+            res[r.rid] = r
+    assert srv.stats()["pool_shrinks"] >= 1
+    assert srv.stats()["bucket_width"] < 4
+    rid = srv.submit(lambda: programs.indirect_svc(3), virtualize=True)
+    for _ in range(2):   # enough demand that the bucket must re-expand
+        srv.submit(_pp("getpid", Mechanism.ASC), regs={19: 3})
+    for r in srv.run():
+        res[r.rid] = r
+    stats = srv.stats()
+    assert res[rid].events == ev_ref
+    assert res[rid].attempts == runs_ref
+    assert stats["scalar_reexecutions"] == 0
+    assert stats["c3_readmissions"] == runs_ref - 1
+    assert stats["pool_grows"] >= 1
