@@ -19,6 +19,10 @@
   * compaction_speedup       — live-lane compaction vs fixed width on a
                                tail-heavy census + bimodal serving mix;
                                writes BENCH_compaction.json itself
+  * policy_scheduler         — noisy-neighbor isolation (tenant budgets,
+                               SLO preemption, quarantine) + mid-flight
+                               policy updates; writes BENCH_sched.json
+                               itself
   * roofline                 — dry-run roofline table (§Roofline)
 
 Besides the CSV stream, writes ``benchmarks/results/BENCH_fleet.json`` with
@@ -37,7 +41,7 @@ import traceback
 
 SUITES = ["hook_overhead", "svc_census", "app_bandwidth", "collective_census",
           "collective_hook_overhead", "serving_throughput", "trace_overhead",
-          "compaction_speedup", "roofline"]
+          "compaction_speedup", "policy_scheduler", "roofline"]
 
 # suites feeding the BENCH_fleet.json record (collect_fleet_bench)
 _FLEET_BENCH_INPUTS = {"hook_overhead", "collective_hook_overhead"}

@@ -131,6 +131,12 @@ def run_server(reqs, pool: int, chunk: int, gen_steps: int,
         "admission_wait_ms_max": round(stats["admission_wait_ms_max"], 2),
         "image_admissions": stats["image_admissions"],
         "image_dedup_hits": stats["image_dedup_hits"],
+        # per-tenant verdict/budget accounting (repro.sched): this mix is
+        # untenanted and unscheduled, so everything lands on the "" tenant
+        # with zero exhaustions — the scheduled counterpart is
+        # BENCH_sched.json (benchmarks/policy_scheduler.py)
+        "tenants": stats["tenants"],
+        "budget_exhaustions": stats["budget_exhaustions"],
     }
 
 

@@ -24,6 +24,9 @@ ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m trace
 echo "== compaction tier (heavier example counts) =="
 ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m compaction
 
+echo "== sched tier (heavier example counts) =="
+ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m sched
+
 echo "== serving throughput sanity (sharded, 2 host devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
     python -m benchmarks.serving_throughput --quick --shard
@@ -39,5 +42,8 @@ python -m benchmarks.compaction_speedup --quick
 
 echo "== compaction sanity (sharded, 2 host devices) =="
 python -m benchmarks.compaction_speedup --quick --devices 2
+
+echo "== policy scheduler sanity =="
+python -m benchmarks.policy_scheduler --quick
 
 echo "check.sh: all green"

@@ -13,8 +13,10 @@ from .completeness import (C3Event, diagnose_c3, diagnose_c3_fleet,
 from .fleet import (TraceState, admit_lanes, choose_bucket, compact_ladder,
                     fleet_counters, fleet_step, fleet_step_traced,
                     fleet_summary, make_halted_states, precompile_ladder,
-                    run_fleet, run_fleet_compact, run_fleet_span,
-                    set_image_row, stack_images, stack_states, unstack_state)
+                    restore_lanes, run_fleet, run_fleet_compact,
+                    run_fleet_span, set_image_row, stack_images,
+                    stack_states, unstack_state, unstack_trace,
+                    update_policy_rows)
 from .hookcfg import HookConfig, PinnedSite, PolicyRule
 from .image import Image, build_minilibc, build_process
 from .machine import (HALT_EXIT, HALT_FUEL, HALT_KILL, HALT_SEGV, HALT_TRAP,
@@ -24,7 +26,7 @@ from .rewriter import RewriteReport, rewrite_all_to_signal, rewrite_image
 from .runtime import (FleetImageTable, Mechanism, PreparedProcess,
                       fleet_trace, hook_invocations, initial_state,
                       pack_fleet, precompile_compact, prepare,
-                      run_fleet_prepared, run_prepared)
+                      run_fleet_prepared, run_prepared, update_fleet_policy)
 from .scanner import SvcSite, census, scan_image
 
 __all__ = [
@@ -39,9 +41,10 @@ __all__ = [
     "hook_invocations", "initial_state", "isa", "layout",
     "make_halted_states", "make_state", "mem_read", "mem_read_block",
     "mem_write", "pack_fleet", "precompile_compact", "precompile_ladder",
-    "prepare", "programs",
+    "prepare", "programs", "restore_lanes",
     "rewrite_all_to_signal", "rewrite_image", "run_fleet",
     "run_fleet_compact", "run_fleet_prepared", "run_fleet_span", "run_image",
     "run_prepared", "run_with_c3", "scan_image", "set_image_row",
-    "stack_images", "stack_states", "unstack_state",
+    "stack_images", "stack_states", "unstack_state", "unstack_trace",
+    "update_fleet_policy", "update_policy_rows",
 ]

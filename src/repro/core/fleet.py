@@ -94,12 +94,21 @@ class TraceState(NamedTuple):
     ``buf[b, count[b] % CAP]`` is the next record slot for lane ``b`` —
     a full ring overwrites oldest-first, ``count`` keeps the lifetime
     total so the host decoder knows how many records were dropped.
+
+    The ``*_count`` verdict counters are the scheduler's feed
+    (:mod:`repro.sched`): cheap [B] adds bumped under the svc mask, so
+    per-tenant budget accounting harvests one small array per field
+    instead of decoding every ring.  ``count`` doubles as the per-lane
+    executed-svc total (every svc appends exactly one record).
     """
 
     buf: jnp.ndarray         # int64[B, CAP, REC_WORDS]
     count: jnp.ndarray       # int64[B]: records ever produced per lane
     pol_action: jnp.ndarray  # int32[B, N_POLICY_SLOTS]
     pol_arg: jnp.ndarray     # int64[B, N_POLICY_SLOTS]: errno / constant
+    deny_count: jnp.ndarray  # int64[B]: DENY verdicts per lane
+    emul_count: jnp.ndarray  # int64[B]: EMULATE verdicts per lane
+    kill_count: jnp.ndarray  # int64[B]: KILL verdicts per lane (0 or 1)
 
 
 # ---------------------------------------------------------------------------
@@ -611,8 +620,14 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
                                                                  REC_WORDS)
 
         buf = lax.cond(any_svc, append, lambda b: b, tr.buf)
+        one = jnp.int64(1)
         tr = tr._replace(
-            buf=buf, count=tr.count + jnp.where(m_svc, jnp.int64(1), zero))
+            buf=buf, count=tr.count + jnp.where(m_svc, one, zero),
+            # the scheduler's budget feed: plain masked adds, cheap enough
+            # to live outside the any_svc cond
+            deny_count=tr.deny_count + jnp.where(pol_deny, one, zero),
+            emul_count=tr.emul_count + jnp.where(pol_emul, one, zero),
+            kill_count=tr.kill_count + jnp.where(pol_kill, one, zero))
 
     return s._replace(
         regs=regs, sp=sp, pc=pc, nzcv=nzcv, mem=mem, cycles=cycles,
@@ -843,12 +858,16 @@ def _admit_lanes_traced(s: MachineState, tr: TraceState, idx: jnp.ndarray,
     the machine-state admission."""
     k = idx.shape[0]
     cap = tr.buf.shape[1]
+    zk = jnp.zeros((k,), I64)
     tr = tr._replace(
         buf=tr.buf.at[idx].set(jnp.zeros((k, cap, REC_WORDS), I64),
                                mode="drop"),
-        count=tr.count.at[idx].set(jnp.zeros((k,), I64), mode="drop"),
+        count=tr.count.at[idx].set(zk, mode="drop"),
         pol_action=tr.pol_action.at[idx].set(pol_action, mode="drop"),
         pol_arg=tr.pol_arg.at[idx].set(pol_arg, mode="drop"),
+        deny_count=tr.deny_count.at[idx].set(zk, mode="drop"),
+        emul_count=tr.emul_count.at[idx].set(zk, mode="drop"),
+        kill_count=tr.kill_count.at[idx].set(zk, mode="drop"),
     )
     return _admit_lanes(s, idx, regs, pc, fuel, sig_handler, ptrace,
                         virt_getpid), tr
@@ -916,6 +935,95 @@ def set_image_row(imgs: FleetImages, row: int,
     packed, imm = _jitted_set_image_row(
         imgs.packed, imgs.imm, jnp.int32(row), one.packed[0], one.imm[0])
     return FleetImages(packed=packed, imm=imm)
+
+
+def _update_policy_rows(tr: TraceState, idx: jnp.ndarray,
+                        pol_action: jnp.ndarray,
+                        pol_arg: jnp.ndarray) -> TraceState:
+    return tr._replace(
+        pol_action=tr.pol_action.at[idx].set(pol_action, mode="drop"),
+        pol_arg=tr.pol_arg.at[idx].set(pol_arg, mode="drop"))
+
+
+_jitted_update_policy_rows = jax.jit(_update_policy_rows, donate_argnums=(0,))
+
+
+def update_policy_rows(trace: TraceState, lanes: Sequence[int],
+                       rows: Sequence) -> TraceState:
+    """Swap the policy-table rows of *running* lanes in place, between
+    spans — one donated masked scatter over the two policy leaves (rings,
+    counters and machine states are untouched, so every other lane is
+    bit-identical afterwards).  This is how an operator tightens a
+    tenant's policy mid-flight without evicting its lanes
+    (:meth:`repro.serve.fleet_server.FleetServer.update_policy`).
+
+    ``lanes`` are physical lane indices (out-of-range entries drop, so
+    callers may pad for a compile-once width); ``rows`` is one compiled
+    ``(action_row, arg_row)`` pair per lane — ``None`` entries fall back
+    to all-ALLOW.
+    """
+    assert len(lanes) == len(rows) and len(lanes) > 0
+    pa = np.full((len(lanes), N_POLICY_SLOTS), POL_ALLOW, np.int32)
+    pg = np.zeros((len(lanes), N_POLICY_SLOTS), np.int64)
+    for i, r in enumerate(rows):
+        if r is not None:
+            pa[i], pg[i] = r
+    return _jitted_update_policy_rows(
+        trace, jnp.asarray(np.asarray(lanes, np.int64)),
+        jnp.asarray(pa), jnp.asarray(pg))
+
+
+def _restore_lanes(s: MachineState, idx: jnp.ndarray,
+                   lanes: MachineState) -> MachineState:
+    put = lambda leaf, val: leaf.at[idx].set(val, mode="drop")
+    return jax.tree_util.tree_map(put, s, lanes)
+
+
+_jitted_restore = jax.jit(_restore_lanes, donate_argnums=(0,))
+
+
+def _restore_lanes_traced(s: MachineState, tr: TraceState, idx: jnp.ndarray,
+                          lanes: MachineState, lane_tr: TraceState):
+    put = lambda leaf, val: leaf.at[idx].set(val, mode="drop")
+    return (jax.tree_util.tree_map(put, s, lanes),
+            jax.tree_util.tree_map(put, tr, lane_tr))
+
+
+_jitted_restore_traced = jax.jit(_restore_lanes_traced, donate_argnums=(0, 1))
+
+
+def restore_lanes(states: MachineState, slots: Sequence[int],
+                  lane_states: Sequence[MachineState], *,
+                  trace: Optional[TraceState] = None,
+                  lane_traces: Optional[Sequence[TraceState]] = None):
+    """Scatter *checkpointed* lanes back into slots ``slots``, in place.
+
+    The re-admission half of scheduler preemption
+    (:mod:`repro.sched.scheduler`): unlike :func:`admit_lanes`, which
+    rebuilds an initial state, the WHOLE per-lane tree is shipped — the
+    [MEM_WORDS] memory image, registers, counters, and (when traced) the
+    ring + policy tables + verdict counters — so a preempted lane resumes
+    exactly where its checkpoint (one :func:`unstack_state` at harvest
+    time) left off and its final published state stays bit-identical to an
+    uninterrupted run.  ``slots`` entries >= B drop (padding), matching
+    the admission scatter's compile-once convention.
+    """
+    assert len(slots) == len(lane_states) and len(slots) > 0
+    idx = jnp.asarray(np.asarray(slots, np.int64))
+    stacked = stack_states(lane_states)
+    if trace is None:
+        assert lane_traces is None, "lane_traces require a trace carry"
+        return _jitted_restore(states, idx, stacked)
+    assert lane_traces is not None and len(lane_traces) == len(slots)
+    stacked_tr = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                        *lane_traces)
+    return _jitted_restore_traced(states, trace, idx, stacked, stacked_tr)
+
+
+def unstack_trace(trace: TraceState, lane: int) -> TraceState:
+    """Extract one lane of a trace carry (the checkpoint counterpart of
+    :func:`unstack_state`)."""
+    return jax.tree_util.tree_map(lambda x: x[lane], trace)
 
 
 def run_fleet(imgs, states, img_ids=None, *, chunk: int = DEFAULT_CHUNK,
@@ -1052,7 +1160,10 @@ def make_empty_trace(n: int, cap: int) -> TraceState:
         buf=jnp.zeros((n, cap, REC_WORDS), I64),
         count=jnp.zeros((n,), I64),
         pol_action=jnp.full((n, N_POLICY_SLOTS), POL_ALLOW, I32),
-        pol_arg=jnp.zeros((n, N_POLICY_SLOTS), I64))
+        pol_arg=jnp.zeros((n, N_POLICY_SLOTS), I64),
+        deny_count=jnp.zeros((n,), I64),
+        emul_count=jnp.zeros((n,), I64),
+        kill_count=jnp.zeros((n,), I64))
 
 
 def _permute_split(tree, keep_idx, drop_idx):

@@ -91,6 +91,31 @@ class HookConfig:
     # machine states bit-identical to untraced runs).
     trace_enabled: bool = False
     trace_cap: int = 64
+    # Policy-driven serving scheduler (repro.sched / FleetServer).  The
+    # tenant label is the accounting principal: per-tenant verdict counts,
+    # syscall/deny budgets, quarantine and live policy updates all key on
+    # it ("" = the anonymous default tenant).  Budgets of 0 are unlimited;
+    # an exhausted tenant's lanes are checkpointed, re-queued and the
+    # tenant backs off (its usage window then resets — throttling, not a
+    # permanent ban, so serving always drains).  sched_deadline_steps is
+    # the latency SLO in simulated steps from submission (0 = none);
+    # sched_slo_margin_gens is how many generations before the deadline a
+    # queued request counts as at-risk (eligible to preempt a
+    # lower-priority lane).  sched_deny_rate evicts a lane whose
+    # DENY-verdict fraction exceeds it (0.0 = off; only judged past
+    # sched_deny_min_svc syscalls so short bursts don't trip it).
+    # Quarantine backoff after a HALT_KILL / eviction is exponential:
+    # base * 2^(streak-1) generations, capped.
+    tenant: str = ""
+    sched_priority: int = 0
+    sched_deadline_steps: int = 0
+    sched_slo_margin_gens: int = 2
+    budget_svc: int = 0
+    budget_deny: int = 0
+    sched_deny_rate: float = 0.0
+    sched_deny_min_svc: int = 8
+    sched_backoff_base: int = 2
+    sched_backoff_cap: int = 64
     policy: List[PolicyRule] = dataclasses.field(default_factory=list)
     pinned: List[PinnedSite] = dataclasses.field(default_factory=list)
 

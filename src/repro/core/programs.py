@@ -264,6 +264,43 @@ def unknown_svc(n: int = 4, nr: int = 181) -> Asm:
     return a
 
 
+def syscall_storm_param() -> Asm:
+    """Register-parameterised noisy neighbor: hammers svc at a configurable
+    rate.  Per-lane arguments (one shared image for a whole storm fleet):
+
+    * ``x19`` — outer iterations;
+    * ``x20`` — svc burst per iteration (raw getpid syscalls, caller-side
+      x8 assignment like :func:`caller_x8`);
+    * ``x21`` — burn-loop iterations per outer iteration (~2 cycles each).
+
+    ``x20=burst, x21=0`` is a pure syscall flood; raising ``x21`` dials
+    the svc density down to any victim-like mix.  Used by the policy
+    scheduler benchmark/tests (budget exhaustion, deny-rate eviction,
+    DENY-storm tenants) — see :mod:`repro.sched`.
+    """
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.label("outer")
+    a.emit(isa.mov_r(23, 20))
+    a.cbz_to(23, "burn")
+    a.label("burst")
+    a.emit(isa.movz(8, L.SYS_GETPID, sf=0))
+    a.bl_to("libc.so:raw_svc")
+    a.emit(isa.subsi(23, 23, 1))
+    a.b_to("burst", cond="ne")
+    a.label("burn")
+    a.emit(isa.mov_r(24, 21))
+    a.cbz_to(24, "next")
+    a.label("spin")
+    a.emit(isa.subsi(24, 24, 1))
+    a.b_to("spin", cond="ne")
+    a.label("next")
+    a.emit(isa.subsi(19, 19, 1))
+    a.b_to("outer", cond="ne")
+    _exit0(a)
+    return a
+
+
 def retry_loop(retries: int = 3) -> Asm:
     """Strategy C2: libc's retry_svc has a direct back-edge onto its svc."""
     a = Asm(APP_BASE)

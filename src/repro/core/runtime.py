@@ -254,6 +254,18 @@ def pack_fleet(pps: Sequence[PreparedProcess], *,
     return imgs, ids, states, fleet_trace(pps)
 
 
+def update_fleet_policy(trace: F.TraceState, lanes: Sequence[int],
+                        rules: Sequence) -> F.TraceState:
+    """Compile per-lane rule lists and swap them into the trace carry's
+    policy rows in place (:func:`repro.core.fleet.update_policy_rows`) —
+    the drain-mode counterpart of ``FleetServer.update_policy``.  ``rules``
+    is one ``PolicyRule`` list per lane (``None`` = all-ALLOW); rules are
+    validated up front (:func:`repro.trace.policy.validate_rules`)."""
+    from repro.trace import policy as TP  # local: repro.trace depends on core
+    rows = [TP.compile_policy(r) if r is not None else None for r in rules]
+    return F.update_policy_rows(trace, lanes, rows)
+
+
 def run_fleet_prepared(pps: Sequence[PreparedProcess], *,
                        fuel: int = 2_000_000,
                        chunk: Optional[int] = None,
@@ -261,7 +273,8 @@ def run_fleet_prepared(pps: Sequence[PreparedProcess], *,
                        shard: bool = False,
                        trace: Optional[bool] = None,
                        compact: Optional[bool] = None,
-                       compact_stats: Optional[dict] = None):
+                       compact_stats: Optional[dict] = None,
+                       policy_overrides: Optional[Dict[int, Sequence]] = None):
     """Run every prepared process to completion in ONE device dispatch.
 
     ``chunk`` defaults to the first process's ``HookConfig.fleet_chunk``.
@@ -282,8 +295,29 @@ def run_fleet_prepared(pps: Sequence[PreparedProcess], *,
     compaction is bit-identical and lane-ordered.  ``compact_stats`` (a
     dict, filled in place) receives the occupancy ledger of a compacted
     run.
+
+    ``policy_overrides`` (lane -> ``PolicyRule`` list; requires
+    ``trace=True``) swaps those lanes' policy-table rows after packing and
+    before the dispatch, through the same donated scatter the serving
+    layer's mid-flight ``update_policy`` uses
+    (:func:`repro.core.fleet.update_policy_rows`) — every other lane's
+    carry is untouched, so overrides are bit-invisible to bystanders.
     """
     packed = pack_fleet(pps, fuel=fuel, regs=regs, trace=trace)
+    if policy_overrides:
+        if len(packed) != 4:
+            raise ValueError("policy_overrides require trace=True")
+        lanes = sorted(policy_overrides)
+        bad = [ln for ln in lanes if not 0 <= ln < len(pps)]
+        if bad:
+            # the scatter's mode="drop" is a padding convention for
+            # internal callers — here a stray lane would silently leave
+            # the fleet unenforced
+            raise ValueError(
+                f"policy_overrides lanes {bad} out of range for "
+                f"{len(pps)} lanes")
+        packed = packed[:3] + (update_fleet_policy(
+            packed[3], lanes, [policy_overrides[ln] for ln in lanes]),)
     cfg = next((pp.cfg for pp in pps if pp.cfg is not None), None)
     if chunk is None:
         chunk = cfg.fleet_chunk if cfg is not None else F.DEFAULT_CHUNK

@@ -34,6 +34,21 @@ the serving layer the ROADMAP asks for:
   ``admit_lanes`` recycles the ring rows in the same donated scatter as
   the machine state.  Machine states stay bit-identical to an untraced
   server under all-ALLOW policies.
+* **Policy scheduler (repro.sched).**  With ``scheduler=`` (a
+  :class:`repro.sched.scheduler.PolicyScheduler`) the server closes the
+  loop from in-step verdicts to serving decisions: requests carry
+  ``tenant`` / ``priority`` / ``deadline_steps``, admission is
+  quarantine-gated and ordered deadline-risk-first-then-priority,
+  per-tenant syscall/deny budgets are fed by the on-device verdict
+  counters in the trace carry (no ring decoding), deny-storming or
+  budget-exhausted lanes are checkpointed (full-carry capture via
+  ``unstack_state``) and re-queued behind an exponential backoff, and a
+  deadline-risk request preempts the lowest-priority lane — restored
+  later bit-exactly by ``fleet.restore_lanes``.  ``update_policy(tenant,
+  rules)`` swaps running lanes' policy rows live
+  (``fleet.update_policy_rows``) with zero evictions.  ``scheduler=None``
+  (the default) keeps every decision point on the pre-scheduler code
+  path, bit-identically.
 * **Live-lane compaction.**  With ``compact=True`` (or
   ``cfg.compact_enabled``) generations run at the occupancy-chosen bucket
   width from the pool's precompiled ladder
@@ -63,6 +78,7 @@ from repro.core.hookcfg import HookConfig, PolicyRule
 from repro.core.isa import Asm
 from repro.core.runtime import (FleetImageTable, Mechanism, PreparedProcess,
                                 initial_state, prepare)
+from repro.sched.scheduler import PolicyScheduler
 from repro.trace import policy as trace_policy
 from repro.trace import recorder as trace_recorder
 
@@ -90,6 +106,19 @@ class FleetRequest:
     attempts: int = 0                  # executions so far (C3 restarts + 1)
     events: List[C3Event] = dataclasses.field(default_factory=list)
     policy: Optional[trace_policy.PolicyRows] = None  # compiled at submit
+    # -- scheduler fields (repro.sched) ---------------------------------------
+    tenant: str = ""                   # accounting principal
+    priority: int = 0                  # admission/preemption rank
+    deadline_steps: int = 0            # latency SLO (0 = none)
+    preemptions: int = 0               # checkpoint/resume cycles so far
+    # full lane checkpoint: (MachineState lane tree, TraceState lane tree
+    # or None) captured at preemption/eviction time; restored verbatim by
+    # fleet.restore_lanes on re-admission
+    checkpoint: Optional[tuple] = None
+    charged_svc: int = 0               # counters already charged to the
+    charged_deny: int = 0              # ledger (delta bookkeeping across
+    charged_emul: int = 0              # preempt/resume cycles)
+    charged_kill: int = 0
 
 
 @dataclasses.dataclass
@@ -109,6 +138,8 @@ class FleetResult:
     trace: List[trace_recorder.TraceRecord] = dataclasses.field(
         default_factory=list)
     trace_dropped: int = 0             # ring overflow: oldest records lost
+    tenant: str = ""
+    preemptions: int = 0               # scheduler checkpoint/resume cycles
 
 
 class FleetServer:
@@ -127,7 +158,8 @@ class FleetServer:
                  table_capacity: Optional[int] = None,
                  fuel: int = 2_000_000, shard: bool = False,
                  trace: Optional[bool] = None,
-                 compact: Optional[bool] = None):
+                 compact: Optional[bool] = None,
+                 scheduler: Optional[PolicyScheduler] = None):
         assert pool >= 1
         self.pool = pool
         self.cfg = cfg or HookConfig()
@@ -160,6 +192,25 @@ class FleetServer:
         self.enosys_total = 0                    # -ENOSYS fall-throughs seen
         self.trace_records = 0                   # ring records published
         self.trace_dropped = 0                   # ring overflow drops
+        # policy scheduler (repro.sched): None keeps every decision point
+        # on the pre-scheduler code path, bit-identically
+        self.sched = scheduler
+        if self.sched is not None:
+            self.sched.attach(self.cfg)
+            if not self.trace_enabled and (
+                    self.sched.ledger.budgets or self.cfg.budget_svc
+                    or self.cfg.budget_deny or self.cfg.sched_deny_rate > 0):
+                raise ValueError(
+                    "budget/deny-rate scheduling is fed by the on-device "
+                    "verdict counters in the trace carry: enable tracing "
+                    "(FleetServer(trace=True) or cfg.trace_enabled)")
+        self.preemptions = 0                     # lanes checkpointed for SLO
+        self.evictions = 0                       # deny-rate/budget removals
+        self.policy_updates = 0                  # live update_policy calls
+        self.quarantine_blocks = 0               # admissions gated by backoff
+        self.idle_generations = 0                # all-quarantined idle ticks
+        self._tenants: Dict[str, Dict[str, int]] = {}
+        self._readmit_rids: set = set()          # C3 lanes mid-recycle
         self.dispatched_steps = 0                # lane-steps paid for
         self.executed_steps = 0                  # lane-steps actually run
         self.pool_grows = 0
@@ -194,6 +245,12 @@ class FleetServer:
         # one dummy per unused admission slot: admissions are padded to the
         # current bucket width so the donated scatter compiles once per rung
         self._pad_state = M.make_state(0, fuel=0)
+        # the restore-scatter analogue (checkpoint re-admission padding):
+        # a single-lane all-halted state + empty trace row
+        self._pad_lane = F.unstack_state(F.make_halted_states(1), 0)
+        self._pad_trace_lane = (
+            F.unstack_trace(F.make_empty_trace(1, self.cfg.trace_cap), 0)
+            if self.trace_enabled else None)
         self._place()
 
     def _place(self) -> None:
@@ -230,7 +287,10 @@ class FleetServer:
                cfg: Optional[HookConfig] = None, virtualize: bool = False,
                fuel: Optional[int] = None,
                regs: Optional[Dict[int, int]] = None,
-               policy: Optional[Sequence[PolicyRule]] = None) -> int:
+               policy: Optional[Sequence[PolicyRule]] = None,
+               tenant: Optional[str] = None,
+               priority: Optional[int] = None,
+               deadline_steps: Optional[int] = None) -> int:
         """Queue one simulated process; returns its request id.
 
         ``app`` is either a zero-arg program builder (re-preparable: C3 can
@@ -242,7 +302,17 @@ class FleetServer:
         (:class:`repro.core.hookcfg.PolicyRule`, e.g. via the
         :mod:`repro.trace.policy` constructors) for this lane only; it
         defaults to the request config's ``policy`` list.  Requires a
-        traced server (``trace=True`` / ``cfg.trace_enabled``).
+        traced server (``trace=True`` / ``cfg.trace_enabled``).  Rules are
+        validated here — a malformed line raises ``ValueError`` naming the
+        offending rule at submission time, never inside table compilation
+        at admission.
+
+        ``tenant`` / ``priority`` / ``deadline_steps`` label the request
+        for the policy scheduler (:mod:`repro.sched`): the accounting
+        principal for budgets/quarantine, the admission/preemption rank,
+        and the latency SLO in simulated steps from submission.  Defaults
+        come from the request config (``cfg.tenant`` etc.); without a
+        ``scheduler=`` hook they are recorded but drive nothing.
         """
         rcfg = cfg or (self.cfg if isinstance(app, PreparedProcess) else
                        dataclasses.replace(self.cfg, pinned=list(self.cfg.pinned)))
@@ -251,6 +321,15 @@ class FleetServer:
         if policy is not None and not self.trace_enabled:
             raise ValueError(
                 "per-request policies need a traced server "
+                "(FleetServer(trace=True) or cfg.trace_enabled)")
+        if (self.sched is not None and not self.trace_enabled
+                and (rcfg.sched_deny_rate > 0 or rcfg.budget_svc
+                     or rcfg.budget_deny)):
+            # same rule as the constructor guard, for per-request configs:
+            # enforcement is fed by counters that only exist when tracing
+            raise ValueError(
+                "budget/deny-rate scheduling in the request config is fed "
+                "by the on-device verdict counters: enable tracing "
                 "(FleetServer(trace=True) or cfg.trace_enabled)")
         if isinstance(app, PreparedProcess):
             if ((mechanism is not Mechanism.ASC
@@ -270,11 +349,57 @@ class FleetServer:
             fuel=int(self.default_fuel if fuel is None else fuel), regs=regs,
             submitted_gen=self.generation, submitted_s=time.perf_counter(),
             policy=(trace_policy.compile_policy(policy)
-                    if policy is not None else None))
+                    if policy is not None else None),
+            tenant=str(rcfg.tenant if tenant is None else tenant),
+            priority=int(rcfg.sched_priority if priority is None
+                         else priority),
+            deadline_steps=int(rcfg.sched_deadline_steps
+                               if deadline_steps is None else deadline_steps))
         self._next_rid += 1
         req.attempts = 1
+        self._tstat(req.tenant)["submitted"] += 1
         self._queue.append(req)
         return req.rid
+
+    def update_policy(self, tenant: str,
+                      rules: Sequence[PolicyRule]) -> int:
+        """Swap a tenant's seccomp-style policy **live**: running lanes get
+        the recompiled rows through one donated masked scatter
+        (:func:`repro.core.fleet.update_policy_rows`) between spans — no
+        eviction, no recompile, bystander lanes bit-identical — and the
+        tenant's queued / checkpointed / C3-recycling requests are updated
+        so later (re-)admissions install the same rows.  Returns the
+        number of running lanes updated.  Requires a traced server; rules
+        are validated up front like ``submit(policy=)``.
+        """
+        if not self.trace_enabled:
+            raise ValueError("update_policy needs a traced server "
+                             "(FleetServer(trace=True) or cfg.trace_enabled)")
+        compiled = trace_policy.compile_policy(rules)   # validates too
+        lanes = [p for p in range(self._W)
+                 if (r := self._slots[self._order[p]]) is not None
+                 and r.tenant == tenant]
+        if lanes:
+            pad = [self._W + i for i in range(self._W - len(lanes))]
+            self._trace = F.update_policy_rows(
+                self._trace, lanes + pad,
+                [compiled] * len(lanes) + [None] * len(pad))
+        n_live = len(lanes)
+        occupying = [r for r in self._slots if r is not None]
+        for req in list(self._queue) + self._readmit + occupying:
+            if req.tenant != tenant:
+                continue
+            req.policy = compiled
+            if req.checkpoint is not None:       # patch the frozen carry too
+                state, tr = req.checkpoint
+                if tr is not None:
+                    tr = tr._replace(
+                        pol_action=jnp.asarray(compiled[0], jnp.int32),
+                        pol_arg=jnp.asarray(compiled[1], jnp.int64))
+                req.checkpoint = (state, tr)
+        self.policy_updates += 1
+        self._tstat(tenant)["policy_updates"] += 1
+        return n_live
 
     # -- the serving loop -----------------------------------------------------
 
@@ -284,6 +409,181 @@ class FleetServer:
     def _occupied_lanes(self) -> int:
         return sum(1 for p in range(self._W)
                    if self._slots[self._order[p]] is not None)
+
+    # -- the policy scheduler (repro.sched) -----------------------------------
+
+    def _tstat(self, tenant: str) -> Dict[str, int]:
+        if tenant not in self._tenants:
+            self._tenants[tenant] = {
+                "submitted": 0, "completed": 0, "svc": 0, "deny": 0,
+                "emul": 0, "kill": 0, "enosys": 0, "killed": 0,
+                "preemptions": 0, "evictions": 0, "budget_exhaustions": 0,
+                "policy_updates": 0}
+        return self._tenants[tenant]
+
+    def _charge(self, req: FleetRequest, svc: int, deny: int, emul: int,
+                kill: int, enosys: int = 0) -> None:
+        """Charge a lane's counter *deltas* (vs the request's last charge
+        point) to the per-tenant stats and, when scheduling, the budget
+        ledger; advances the charge point so preempt/resume cycles never
+        double-count."""
+        d_svc = svc - req.charged_svc
+        d_deny = deny - req.charged_deny
+        d_emul = emul - req.charged_emul
+        d_kill = kill - req.charged_kill
+        req.charged_svc, req.charged_deny = svc, deny
+        req.charged_emul, req.charged_kill = emul, kill
+        t = self._tstat(req.tenant)
+        t["svc"] += d_svc
+        t["deny"] += d_deny
+        t["emul"] += d_emul
+        t["kill"] += d_kill
+        t["enosys"] += enosys
+        if self.sched is not None:
+            self.sched.ledger.charge(req.tenant, svc=d_svc, deny=d_deny,
+                                     emul=d_emul, kill=d_kill, enosys=enosys)
+
+    def _checkpoint_lane(self, p: int) -> FleetRequest:
+        """Capture physical lane ``p``'s full carry (machine state + trace
+        ring/policy/counters) onto its request and vacate the slot — the
+        harvest-path checkpoint preemption and eviction share.  The device
+        lane itself is parked by the caller's park scatter.  The image-table
+        row stays referenced so re-admission is a pure restore."""
+        req = self._slots[self._order[p]]
+        state = F.unstack_state(self._states, p)
+        tr = (F.unstack_trace(self._trace, p)
+              if self._trace is not None else None)
+        req.checkpoint = (state, tr)
+        req.preemptions += 1
+        self._slots[self._order[p]] = None
+        return req
+
+    def _sched_pass(self) -> None:
+        """Pre-generation scheduling: deny-rate evictions, budget
+        exhaustion, and SLO preemption.  Checkpointed lanes are parked
+        (one padded donated scatter) so they stop executing until their
+        request is re-admitted."""
+        assert self.sched is not None
+        gen = self.generation
+        # running (preemptible) lanes: occupied, not mid-C3-recycle
+        running = [(p, self._slots[self._order[p]])
+                   for p in range(self._W)
+                   if self._slots[self._order[p]] is not None
+                   and self._slots[self._order[p]].rid
+                   not in self._readmit_rids]
+        to_checkpoint: List[int] = []
+        checkpointed = set()
+
+        # the counter readback (four [B] device syncs) only pays off when
+        # something is actually enforceable: a budget anywhere, or a
+        # deny-rate threshold on any running request
+        ledger = self.sched.ledger
+        enforcing = bool(
+            ledger.budgets or ledger.default.max_svc or ledger.default.max_deny
+            or any(req.cfg.sched_deny_rate > 0 for _, req in running))
+        if self._trace is not None and running and enforcing:
+            cnt = np.asarray(self._trace.count)
+            deny = np.asarray(self._trace.deny_count)
+            emul = np.asarray(self._trace.emul_count)
+            kills = np.asarray(self._trace.kill_count)
+            # deny-rate eviction: a lane whose DENY fraction this attempt
+            # crosses its config threshold is checkpointed, re-queued and
+            # its tenant quarantined (otherwise re-admission resumes the
+            # storm immediately and eviction is a treadmill; one offence
+            # per tenant per pass, so a multi-lane tenant's streak still
+            # escalates one doubling at a time)
+            evicted_tenants = set()
+            for p, req in running:
+                reason = self.sched.should_evict(req, int(cnt[p]),
+                                                 int(deny[p]))
+                if reason is None:
+                    continue
+                self._charge(req, int(cnt[p]), int(deny[p]), int(emul[p]),
+                             int(kills[p]))
+                self._checkpoint_lane(p)
+                to_checkpoint.append(p)
+                checkpointed.add(req.rid)
+                self._queue.append(req)
+                self.evictions += 1
+                self._tstat(req.tenant)["evictions"] += 1
+                if req.tenant not in evicted_tenants:
+                    evicted_tenants.add(req.tenant)
+                    self.sched.quarantine.punish(req.tenant, gen,
+                                                 reason="eviction:" + reason)
+            # budget exhaustion: window usage + uncharged in-flight deltas
+            by_tenant: Dict[str, List] = {}
+            for p, req in running:
+                if req.rid not in checkpointed:
+                    by_tenant.setdefault(req.tenant, []).append((p, req))
+            for tenant, lanes in by_tenant.items():
+                inflight_svc = sum(int(cnt[p]) - r.charged_svc
+                                   for p, r in lanes)
+                inflight_deny = sum(int(deny[p]) - r.charged_deny
+                                    for p, r in lanes)
+                reason = self.sched.exhausted(tenant, inflight_svc,
+                                              inflight_deny)
+                if reason is None:
+                    continue
+                for p, req in lanes:
+                    self._charge(req, int(cnt[p]), int(deny[p]),
+                                 int(emul[p]), int(kills[p]))
+                    self._checkpoint_lane(p)
+                    to_checkpoint.append(p)
+                    checkpointed.add(req.rid)
+                    self._queue.append(req)
+                    self.evictions += 1
+                    self._tstat(req.tenant)["evictions"] += 1
+                self.sched.ledger.reset_window(tenant, generation=gen,
+                                               reason=reason)
+                self._tstat(tenant)["budget_exhaustions"] += 1
+                self.sched.quarantine.punish(tenant, gen,
+                                             reason="budget:" + reason)
+
+        # SLO preemption: a deadline-risk queued request that would not
+        # get a slot checkpoints the lowest-priority running lane below
+        # its own priority
+        ordered = self.sched.admission_order(list(self._queue), gen,
+                                             self.gen_steps)
+        n_free = len(self._free_slots())
+        overflow = ordered[n_free:] if n_free < len(ordered) else []
+        for cand in overflow:
+            if cand.checkpoint is not None and cand.rid in checkpointed:
+                continue                      # just evicted this pass
+            if not self.sched.at_risk(cand, gen, self.gen_steps):
+                continue
+            live = [req for p, req in running
+                    if req.rid not in checkpointed
+                    and self._slots[req.slot] is req]
+            victim = self.sched.pick_victim(cand, live)
+            if victim is None:
+                continue
+            p = next(p for p, req in running if req is victim)
+            if self._trace is not None and enforcing:
+                # without enforcement the charge point stays put and the
+                # final publish-time charge covers the whole attempt
+                self._charge(victim, int(cnt[p]), int(deny[p]),
+                             int(emul[p]), int(kills[p]))
+            self._checkpoint_lane(p)
+            to_checkpoint.append(p)
+            checkpointed.add(victim.rid)
+            self._queue.append(victim)
+            self.preemptions += 1
+            self._tstat(victim.tenant)["preemptions"] += 1
+
+        if to_checkpoint:
+            # park the vacated physical lanes (fuel-0 dummies, padded to
+            # the bucket width): they stop stepping and the harvest skips
+            # them (their slots are empty)
+            self._prev_icount[to_checkpoint] = 0
+            idx = to_checkpoint + [
+                self._W + i for i in range(self._W - len(to_checkpoint))]
+            lanes = [self._pad_state] * len(idx)
+            if self._trace is None:
+                self._states = F.admit_lanes(self._states, idx, lanes)
+            else:
+                self._states, self._trace = F.admit_lanes(
+                    self._states, idx, lanes, trace=self._trace,
+                    policies=[None] * len(idx))
 
     def _grow_to(self, target: int) -> None:
         """Re-expand the pool up the ladder: pad the device arrays with
@@ -334,7 +634,16 @@ class FleetServer:
         if not self.compact_enabled:
             return
         occupied = self._occupied_lanes()
-        demand = min(len(self._queue), self.pool - occupied)
+        if self.sched is None:
+            admissible = len(self._queue)
+        else:
+            # quarantined tenants won't admit this generation: growing the
+            # bucket for them would dispatch parked lanes all backoff long
+            admissible = sum(
+                1 for r in self._queue
+                if not self.sched.quarantine.blocked(r.tenant,
+                                                     self.generation))
+        demand = min(admissible, self.pool - occupied)
         target = F.choose_bucket(
             self._ladder, occupied + demand, cur=self._W,
             hysteresis=self.cfg.compact_hysteresis)
@@ -349,9 +658,19 @@ class FleetServer:
         trace rings and policy tables recycle in the same scatter).  In a
         compacted pool the scatter targets *physical* lanes; the pool was
         re-bucketed first, so every queued request that fits the pool has
-        a backed lane waiting."""
+        a backed lane waiting.
+
+        With a scheduler the queue is taken in
+        :meth:`repro.sched.scheduler.PolicyScheduler.admission_order`
+        (quarantine-gated, deadline-risk first, then priority) instead of
+        FIFO, and checkpointed requests re-admit through a second, full
+        restore scatter (:func:`repro.core.fleet.restore_lanes`) that
+        resumes them bit-exactly where preemption froze them."""
         phys_of = {int(s): p for p, s in enumerate(self._order)}
         lanes_idx, lanes, pols = [], [], []
+        r_idx: List[int] = []                    # checkpoint restores
+        r_states: List[M.MachineState] = []
+        r_traces: List[F.TraceState] = []
         for req in self._readmit:                # slot already owned
             lanes_idx.append(phys_of[req.slot])
             lanes.append(initial_state(req.pp, fuel=req.fuel, regs=req.regs))
@@ -359,43 +678,90 @@ class FleetServer:
             self._ids[req.slot] = req.row
             self._fuel[req.slot] = req.fuel
         self._readmit.clear()
+        self._readmit_rids.clear()
+        if self.sched is None:
+            pending: Deque[FleetRequest] = self._queue
+        else:
+            ordered = self.sched.admission_order(
+                list(self._queue), self.generation, self.gen_steps)
+            if len(ordered) < len(self._queue):
+                self.quarantine_blocks += 1
+            pending = deque(ordered)
         for slot in self._free_slots():
-            if not self._queue:
+            if not pending:
                 break
             p = phys_of.get(slot)
             if p is None:
                 continue                 # compacted-away slot: not backed
-            req = self._queue[0]
-            try:
-                row = self.table.admit(req.pp)
-            except RuntimeError:
-                break  # table transiently full: rows free as lanes finish,
-                       # the request stays queued and retries next harvest
-            self._queue.popleft()
-            req.slot, req.row = slot, row
-            req.admitted_gen = self.generation
-            req.admitted_s = time.perf_counter()
-            self._wait_gens.append(req.admitted_gen - req.submitted_gen)
-            self._wait_s.append(req.admitted_s - req.submitted_s)
+            req = None
+            while pending:
+                cand = pending[0]
+                if cand.checkpoint is None:
+                    try:
+                        cand.row = self.table.admit(cand.pp)
+                    except RuntimeError:
+                        # table transiently full: rows free as lanes
+                        # finish.  Without a scheduler the FIFO head
+                        # blocks (the pre-scheduler behavior); with one,
+                        # the blocked candidate is skipped (it stays in
+                        # _queue) so checkpoint restores — which need no
+                        # table row and eventually release theirs — and
+                        # other tenants keep flowing instead of
+                        # livelocking behind it.
+                        if self.sched is None:
+                            break
+                        pending.popleft()
+                        continue
+                pending.popleft()
+                req = cand
+                break
+            if req is None:
+                break
+            if self.sched is not None:
+                self._queue.remove(req)
+            req.slot = slot
+            if req.admitted_gen < 0:     # first admission: latency metrics
+                req.admitted_gen = self.generation
+                req.admitted_s = time.perf_counter()
+                self._wait_gens.append(req.admitted_gen - req.submitted_gen)
+                self._wait_s.append(req.admitted_s - req.submitted_s)
             self._slots[slot] = req
             self._ids[slot] = req.row
             self._fuel[slot] = req.fuel
+            if req.checkpoint is not None:       # resume, don't restart
+                state, tr = req.checkpoint
+                req.checkpoint = None
+                self._prev_icount[p] = int(np.asarray(state.icount))
+                r_idx.append(p)
+                r_states.append(state)
+                r_traces.append(tr)
+                continue
             lanes_idx.append(p)
             lanes.append(initial_state(req.pp, fuel=req.fuel, regs=req.regs))
             pols.append(req.policy)
-        if not lanes_idx:
-            return
-        self._prev_icount[lanes_idx] = 0         # admitted lanes restart
-        pad = self._W - len(lanes_idx)           # park padding out of range
-        lanes_idx += [self._W + i for i in range(pad)]
-        lanes += [self._pad_state] * pad
-        pols += [None] * pad
-        if self._trace is None:
-            self._states = F.admit_lanes(self._states, lanes_idx, lanes)
-        else:
-            self._states, self._trace = F.admit_lanes(
-                self._states, lanes_idx, lanes, trace=self._trace,
-                policies=pols)
+        if lanes_idx:
+            self._prev_icount[lanes_idx] = 0     # admitted lanes restart
+            pad = self._W - len(lanes_idx)       # park padding out of range
+            lanes_idx += [self._W + i for i in range(pad)]
+            lanes += [self._pad_state] * pad
+            pols += [None] * pad
+            if self._trace is None:
+                self._states = F.admit_lanes(self._states, lanes_idx, lanes)
+            else:
+                self._states, self._trace = F.admit_lanes(
+                    self._states, lanes_idx, lanes, trace=self._trace,
+                    policies=pols)
+        if r_idx:
+            pad = self._W - len(r_idx)
+            r_idx += [self._W + i for i in range(pad)]
+            r_states += [self._pad_lane] * pad
+            if self._trace is None:
+                self._states = F.restore_lanes(self._states, r_idx, r_states)
+            else:
+                r_traces += [self._pad_trace_lane] * pad
+                self._states, self._trace = F.restore_lanes(
+                    self._states, r_idx, r_states, trace=self._trace,
+                    lane_traces=r_traces)
 
     def _harvest(self) -> List[FleetResult]:
         halted = np.asarray(self._states.halted)
@@ -415,6 +781,9 @@ class FleetServer:
             if self._trace is not None:
                 trace_buf = np.asarray(self._trace.buf)
                 trace_cnt = np.asarray(self._trace.count)
+                trace_deny = np.asarray(self._trace.deny_count)
+                trace_emul = np.asarray(self._trace.emul_count)
+                trace_kill = np.asarray(self._trace.kill_count)
 
         # batch C3 diagnosis over every faulted, recyclable lane at once
         # (indexed by physical lane, like the device arrays)
@@ -465,6 +834,13 @@ class FleetServer:
                     req.attempts += 1
                     self.discarded_steps += int(icount[i])
                     self._readmit.append(req)
+                    self._readmit_rids.add(req.rid)
+                    # a C3 recycle restarts the attempt from scratch and
+                    # its ring counters reset with it: roll any usage the
+                    # discarded attempt already charged (at a preemption /
+                    # budget checkpoint) back OUT of the ledger, or the
+                    # replay would double-bill the same syscalls
+                    self._charge(req, 0, 0, 0, 0)
                     self.c3_readmissions += 1
                     continue
             lane = F.unstack_state(self._states, i)
@@ -478,22 +854,50 @@ class FleetServer:
                 admitted_gen=req.admitted_gen, completed_gen=self.generation,
                 admission_wait_gens=req.admitted_gen - req.submitted_gen,
                 admission_wait_s=req.admitted_s - req.submitted_s,
-                trace=recs, trace_dropped=dropped))
+                trace=recs, trace_dropped=dropped, tenant=req.tenant,
+                preemptions=req.preemptions))
             self.harvested_steps += int(icount[i])
             self.enosys_total += int(enosys[i])
             self.trace_records += len(recs) + dropped
             self.trace_dropped += dropped
             self.completed += 1
+            if self._trace is not None:
+                self._charge(req, int(trace_cnt[i]), int(trace_deny[i]),
+                             int(trace_emul[i]), int(trace_kill[i]),
+                             enosys=int(enosys[i]))
+            else:
+                self._charge(req, req.charged_svc, req.charged_deny,
+                             req.charged_emul, req.charged_kill,
+                             enosys=int(enosys[i]))
+            t = self._tstat(req.tenant)
+            t["completed"] += 1
+            if self.sched is not None:
+                if patched[i] == M.HALT_KILL:
+                    t["killed"] += 1
+                    self.sched.quarantine.punish(req.tenant, self.generation,
+                                                 reason="halt_kill")
+                elif patched[i] == M.HALT_EXIT:
+                    self.sched.quarantine.clear(req.tenant)
+            elif patched[i] == M.HALT_KILL:
+                t["killed"] += 1
             self.table.release(req.row)
             self._slots[self._order[i]] = None
         return results
 
     def step(self) -> List[FleetResult]:
-        """One generation: re-bucket -> admit -> one bounded dispatch at
-        the occupancy-chosen width -> harvest."""
+        """One generation: scheduler pass (evict/exhaust/preempt) ->
+        re-bucket -> admit -> one bounded dispatch at the occupancy-chosen
+        width -> harvest."""
+        if self.sched is not None:
+            self._sched_pass()
         self._rebucket()
         self._admit_pending()
         if all(r is None for r in self._slots):
+            if self.sched is not None and (self._queue or self._readmit):
+                # every queued tenant is waiting out quarantine: tick the
+                # generation clock so backoffs expire (no dispatch)
+                self.generation += 1
+                self.idle_generations += 1
             return []
         ids = self._ids[self._order]
         if self._trace is None:
@@ -562,4 +966,18 @@ class FleetServer:
             "admission_wait_gens_max": int(np.max(waits_g)),
             "admission_wait_ms_mean": 1e3 * float(np.mean(waits_s)),
             "admission_wait_ms_max": 1e3 * float(np.max(waits_s)),
+            # policy scheduler (repro.sched) + per-tenant accounting
+            "scheduler_enabled": self.sched is not None,
+            "preemptions": self.preemptions,
+            "evictions": self.evictions,
+            "policy_updates": self.policy_updates,
+            "quarantine_blocks": self.quarantine_blocks,
+            "idle_generations": self.idle_generations,
+            "tenants": {t: dict(v) for t, v in self._tenants.items()},
+            "budget_exhaustions": (len(self.sched.ledger.events)
+                                   if self.sched is not None else 0),
+            "budget_events": (list(self.sched.ledger.events)
+                              if self.sched is not None else []),
+            "quarantine": (self.sched.quarantine.state()
+                           if self.sched is not None else None),
         }

@@ -66,13 +66,55 @@ def _slot_of(nr: int) -> int:
     return TRACE_SYS.index(nr) if nr in TRACE_SYS else SLOT_UNKNOWN
 
 
+# Any legal arm64 syscall number fits comfortably below this; a rule
+# outside the range is a typo, not a request for the UNKNOWN class.
+MAX_SYSCALL_NR = 1024
+
+_ACTION_NAMES = frozenset(a.name.lower() for a in Action)
+
+
+def validate_rules(rules: Optional[Iterable[PolicyRule]]) -> None:
+    """Reject malformed policy lines up front, naming the offending rule.
+
+    Raises ``ValueError`` for an action outside allow/deny/emulate/kill,
+    a non-integer or out-of-range syscall number (< -1 or >=
+    ``MAX_SYSCALL_NR``), or a non-integer arg — the failures that used to
+    surface as opaque ``KeyError``/cast errors inside table compilation
+    at admission time.  An unmodelled-but-plausible number is NOT an
+    error: it selects the UNKNOWN slot (the -ENOSYS fall-through class),
+    which is a documented feature.
+    """
+    for r in rules or ():
+        if (not isinstance(r.action, str)
+                or r.action.lower() not in _ACTION_NAMES):
+            raise ValueError(
+                f"bad policy action {r.action!r} in rule {r!r}: expected "
+                f"one of {sorted(_ACTION_NAMES)}")
+        if (not isinstance(r.syscall_nr, int)
+                or isinstance(r.syscall_nr, bool)
+                or not -1 <= r.syscall_nr < MAX_SYSCALL_NR):
+            raise ValueError(
+                f"bad syscall_nr {r.syscall_nr!r} in rule {r!r}: expected "
+                f"an int in [-1, {MAX_SYSCALL_NR}) (-1 = every syscall)")
+        if not isinstance(r.arg, int) or isinstance(r.arg, bool):
+            raise ValueError(
+                f"bad arg {r.arg!r} in rule {r!r}: expected an int "
+                f"(errno for deny, return constant for emulate)")
+
+
 def compile_policy(rules: Optional[Iterable[PolicyRule]]) -> PolicyRows:
     """Rules -> ``(action_row, arg_row)`` slot tables, last match wins.
 
     ``syscall_nr == -1`` sets every slot (the default-action line);
     a number outside the modelled set selects the UNKNOWN slot, i.e. the
-    whole -ENOSYS fall-through class at once.
+    whole -ENOSYS fall-through class at once.  Malformed rules raise
+    ``ValueError`` via :func:`validate_rules`.
     """
+    # materialise first: validation + compilation each iterate, and a
+    # one-shot iterable that survived validation must not compile to a
+    # silent all-ALLOW table
+    rules = list(rules) if rules is not None else None
+    validate_rules(rules)
     action_row = np.full(N_POLICY_SLOTS, POL_ALLOW, np.int32)
     arg_row = np.zeros(N_POLICY_SLOTS, np.int64)
     for r in rules or ():

@@ -81,6 +81,9 @@ def make_trace_state(n_lanes: int, cap: int = DEFAULT_TRACE_CAP, *,
         count=jnp.zeros((n_lanes,), jnp.int64),
         pol_action=jnp.asarray(pa, jnp.int32),
         pol_arg=jnp.asarray(pg, jnp.int64),
+        deny_count=jnp.zeros((n_lanes,), jnp.int64),
+        emul_count=jnp.zeros((n_lanes,), jnp.int64),
+        kill_count=jnp.zeros((n_lanes,), jnp.int64),
     )
 
 

@@ -18,3 +18,10 @@ def pytest_configure(config):
         "x ladder rung, trace rings through shrink/re-expansion, FleetServer "
         "C3 re-admission into a compacted pool; scale up via "
         "ASC_TEST_EXAMPLES)")
+    config.addinivalue_line(
+        "markers",
+        "sched: policy scheduler suites (default-scheduler vs unscheduled "
+        "bit-exact equivalence traced/untraced x compact on/off, "
+        "preempt/evict/budget checkpoints resume bit-identically, live "
+        "update_policy with bit-identical bystanders, quarantine backoff; "
+        "scale up via ASC_TEST_EXAMPLES)")

@@ -1,0 +1,582 @@
+"""Policy-driven serving scheduler suite (marked ``sched``).
+
+Two invariants anchor everything:
+
+* **Scheduler-off equivalence** — ``FleetServer(scheduler=None)`` is the
+  pre-scheduler server, and a :class:`PolicyScheduler` with all-default
+  budgets/priorities/deadlines is bit-identical lane-for-lane to it
+  (traced and untraced, compact on and off): with nothing to enforce,
+  admission degrades to FIFO and no checkpoint/park scatter ever runs.
+* **Scheduling is never semantics** — preemption, deny-rate eviction and
+  budget-exhaustion checkpoints pause a lane and later resume it via the
+  full-carry restore scatter, so every published state (and decoded
+  trace) stays bit-identical to ``run_prepared`` of that process alone.
+
+Plus the control surfaces: HookConfig round-trip of the sched fields,
+``submit(policy=)`` validation, live ``update_policy`` with bit-identical
+bystanders, quarantine backoff doubling, and the budget ledger fed by the
+on-device verdict counters.  Example counts scale via ASC_TEST_EXAMPLES.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+from _hyp_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import (HALT_EXIT, HALT_KILL, HookConfig, Mechanism,
+                        layout as L, prepare, programs, run_prepared,
+                        run_fleet_prepared)
+from repro.core.hookcfg import PolicyRule
+from repro.sched import BudgetLedger, PolicyScheduler, Quarantine, TenantBudget
+from repro.serve.fleet_server import FleetServer
+from repro.trace.policy import deny, emulate, kill, validate_rules
+
+pytestmark = pytest.mark.sched
+
+FUEL = 150_000
+MAX_EXAMPLES = int(os.environ.get("ASC_TEST_EXAMPLES", "5"))
+
+_SETTINGS = dict(max_examples=MAX_EXAMPLES, deadline=None, derandomize=True)
+if HAVE_HYPOTHESIS:
+    from hypothesis import HealthCheck
+    _SETTINGS["suppress_health_check"] = list(HealthCheck)
+
+MECHS = [Mechanism.NONE, Mechanism.ASC, Mechanism.SIGNAL]
+
+_WORKLOADS = {
+    "getpid": programs.getpid_loop_param,
+    "read": lambda: programs.read_loop_param(256),
+    "storm": programs.syscall_storm_param,
+}
+
+_pp_cache = {}
+
+
+def _pp(wname, mech=Mechanism.NONE):
+    key = (wname, mech)
+    if key not in _pp_cache:
+        virt = mech is not Mechanism.NONE
+        _pp_cache[key] = prepare(_WORKLOADS[wname](), mech, virtualize=virt)
+    return _pp_cache[key]
+
+
+def _assert_state_equal(ref, got, ctx):
+    for field in ref._fields:
+        a, b = np.asarray(getattr(ref, field)), np.asarray(getattr(got, field))
+        assert np.array_equal(a, b), f"{ctx}: field {field!r} diverged"
+
+
+def _storm_regs(n, burst, burn):
+    return {19: n, 20: burst, 21: burn}
+
+
+# -- config round-trip --------------------------------------------------------
+
+def test_hookcfg_sched_roundtrip(tmp_path):
+    cfg = HookConfig(tenant="acme", sched_priority=7,
+                     sched_deadline_steps=4096, sched_slo_margin_gens=3,
+                     budget_svc=500, budget_deny=20, sched_deny_rate=0.5,
+                     sched_deny_min_svc=16, sched_backoff_base=4,
+                     sched_backoff_cap=128,
+                     policy=[PolicyRule(syscall_nr=L.SYS_READ, action="deny",
+                                        arg=13)])
+    path = tmp_path / "sched.json"
+    cfg.save(path)
+    back = HookConfig.load(path)
+    assert back == cfg
+    for f in ("tenant", "sched_priority", "sched_deadline_steps",
+              "sched_slo_margin_gens", "budget_svc", "budget_deny",
+              "sched_deny_rate", "sched_deny_min_svc", "sched_backoff_base",
+              "sched_backoff_cap"):
+        assert getattr(back, f) == getattr(cfg, f), f
+
+
+def test_hookcfg_sched_defaults_are_inert():
+    cfg = HookConfig()
+    assert cfg.tenant == "" and cfg.sched_priority == 0
+    assert cfg.sched_deadline_steps == 0
+    assert cfg.budget_svc == 0 and cfg.budget_deny == 0
+    assert cfg.sched_deny_rate == 0.0
+
+
+# -- submit(policy=) validation ----------------------------------------------
+
+def test_submit_policy_validates_at_submission():
+    srv = FleetServer(pool=1, gen_steps=64, fuel=FUEL, trace=True)
+    pp = _pp("getpid", Mechanism.ASC)
+    with pytest.raises(ValueError, match="syscall_nr 5000"):
+        srv.submit(pp, policy=[PolicyRule(syscall_nr=5000, action="deny")])
+    with pytest.raises(ValueError, match="action 'denyy'"):
+        srv.submit(pp, policy=[PolicyRule(syscall_nr=1, action="denyy")])
+    with pytest.raises(ValueError, match="syscall_nr -7"):
+        srv.submit(pp, policy=[PolicyRule(syscall_nr=-7, action="allow")])
+    with pytest.raises(ValueError, match="arg"):
+        srv.submit(pp, policy=[PolicyRule(syscall_nr=1, action="deny",
+                                          arg="EPERM")])
+    assert len(srv._queue) == 0          # nothing half-queued
+    # the unmodelled-class feature is NOT an error (documented: UNKNOWN slot)
+    validate_rules([kill(181), deny(-1), emulate(L.SYS_GETPID, 4)])
+
+
+def test_untraced_submit_policy_still_rejected_after_validation():
+    srv = FleetServer(pool=1, gen_steps=64, fuel=FUEL)
+    with pytest.raises(ValueError, match="traced server"):
+        srv.submit(_pp("getpid", Mechanism.ASC), policy=[deny(L.SYS_READ)])
+
+
+# -- unit: budgets / quarantine / ordering ------------------------------------
+
+def test_budget_ledger_windows_and_events():
+    led = BudgetLedger({"a": TenantBudget(max_svc=10)})
+    led.charge("a", svc=6, deny=2)
+    assert led.exhausted("a") is None
+    assert led.exhausted("a", inflight_svc=5) == "svc"
+    ev = led.reset_window("a", generation=3, reason="svc")
+    assert ev["window_svc"] == 6 and led.usage("a").window_svc == 0
+    assert led.usage("a").svc == 6       # lifetime total survives the reset
+    assert led.events == [ev]
+    # unlimited default budget never exhausts
+    led.charge("b", svc=10**9)
+    assert led.exhausted("b") is None
+
+
+def test_quarantine_backoff_doubles_and_resets():
+    q = Quarantine(base=2, cap=16)
+    assert q.punish("t", 0, reason="x") == 2
+    assert q.blocked("t", 1) and not q.blocked("t", 2)
+    assert q.punish("t", 10, reason="x") == 14    # 2 -> 4
+    assert q.punish("t", 20, reason="x") == 28    # -> 8
+    assert q.punish("t", 30, reason="x") == 46    # capped at 16
+    q.clear("t")
+    assert q.punish("t", 50, reason="x") == 52    # streak reset -> base
+
+
+def test_admission_order_defaults_to_fifo():
+    sched = PolicyScheduler()
+    sched.attach(HookConfig())
+
+    @dataclasses.dataclass
+    class R:
+        rid: int
+        tenant: str = ""
+        priority: int = 0
+        deadline_steps: int = 0
+        submitted_gen: int = 0
+        cfg: HookConfig = dataclasses.field(default_factory=HookConfig)
+
+    reqs = [R(rid=i) for i in range(5)]
+    assert sched.admission_order(reqs, 10, 64) == reqs   # stable FIFO
+    # priority beats FIFO; deadline risk beats priority
+    reqs[3].priority = 5
+    reqs[1].deadline_steps = 64          # due at gen 1, long past at gen 10
+    order = sched.admission_order(reqs, 10, 64)
+    assert order[0] is reqs[1] and order[1] is reqs[3]
+    # quarantine gates
+    sched.quarantine.punish("noisy", 9, reason="x")
+    reqs[3].tenant = "noisy"
+    assert reqs[3] not in sched.admission_order(reqs, 10, 64)
+
+
+def test_pick_victim_needs_strictly_lower_priority():
+    sched = PolicyScheduler()
+    sched.attach(HookConfig())
+
+    @dataclasses.dataclass
+    class R:
+        rid: int
+        priority: int
+
+    cand = R(rid=9, priority=3)
+    assert sched.pick_victim(cand, [R(0, 3), R(1, 5)]) is None
+    v = sched.pick_victim(cand, [R(0, 1), R(1, 0), R(2, 0), R(3, 5)])
+    assert v.rid == 2                    # lowest priority, newest first
+
+
+# -- on-device counters -------------------------------------------------------
+
+def test_verdict_counters_match_decoded_rings():
+    """The budget feed (TraceState.deny/emul/kill_count) agrees with the
+    ground truth of decoding every ring record."""
+    from repro.trace import recorder
+    pps = [_pp("storm")] * 3
+    cfgs = [[deny(L.SYS_GETPID, errno=13)],
+            [emulate(L.SYS_GETPID, 77)], None]
+    out, tr = run_fleet_prepared(
+        pps, fuel=FUEL, regs=[_storm_regs(6, 3, 2)] * 3, trace=True,
+        policy_overrides={0: cfgs[0], 1: cfgs[1]})
+    deny_c = np.asarray(tr.deny_count)
+    emul_c = np.asarray(tr.emul_count)
+    kill_c = np.asarray(tr.kill_count)
+    for lane, (recs, dropped) in enumerate(recorder.harvest(tr)):
+        assert dropped == 0
+        verds = [r.verdict for r in recs]
+        assert deny_c[lane] == sum(v == 1 for v in verds)
+        assert emul_c[lane] == sum(v == 2 for v in verds)
+        assert kill_c[lane] == sum(v == 3 for v in verds)
+    assert deny_c[0] == 18 and emul_c[1] == 18    # 6 iters x 3-svc burst
+    assert deny_c[2] == emul_c[2] == kill_c[2] == 0
+
+
+def test_update_policy_rows_is_bystander_invisible():
+    """Core-level: the donated row swap changes only the targeted lanes'
+    tables; a re-run from identical states with the bystander's row
+    untouched produces identical bystander results."""
+    pps = [_pp("storm")] * 2
+    regs = [_storm_regs(4, 2, 2)] * 2
+    ref, ref_tr = run_fleet_prepared(pps, fuel=FUEL, regs=regs, trace=True)
+    got, got_tr = run_fleet_prepared(
+        pps, fuel=FUEL, regs=regs, trace=True,
+        policy_overrides={0: [deny(L.SYS_GETPID, errno=1)]})
+    # lane 0 changed (denied), lane 1 bit-identical incl. its ring
+    assert int(np.asarray(got.regs)[0, 0]) != int(np.asarray(ref.regs)[0, 0]) \
+        or int(np.asarray(got_tr.deny_count)[0]) > 0
+    for field in ref._fields:
+        assert np.array_equal(np.asarray(getattr(ref, field))[1],
+                              np.asarray(getattr(got, field))[1]), field
+    assert np.array_equal(np.asarray(ref_tr.buf)[1],
+                          np.asarray(got_tr.buf)[1])
+
+
+# -- the equivalence property (acceptance) ------------------------------------
+
+def _serve(reqs, *, scheduler, trace, compact, pool, mid_flight=0):
+    cfg = HookConfig(compact_min_bucket=1) if compact else HookConfig()
+    srv = FleetServer(pool=pool, gen_steps=40, chunk=8, fuel=FUEL,
+                      trace=trace, compact=compact, cfg=cfg,
+                      scheduler=scheduler)
+    rids = [srv.submit(_pp(w, m), regs=rg)
+            for w, m, rg in reqs[:len(reqs) - mid_flight]]
+    results = {}
+    for r in srv.step():
+        results[r.rid] = r
+    rids += [srv.submit(_pp(w, m), regs=rg)
+             for w, m, rg in reqs[len(reqs) - mid_flight:]]
+    for r in srv.run():
+        results[r.rid] = r
+    return rids, results, srv.stats()
+
+
+@settings(**_SETTINGS)
+@given(data=st.data())
+def test_default_scheduler_bit_identical_to_unscheduled(data):
+    """A PolicyScheduler with all-default budgets/priorities/deadlines is
+    bit-identical lane-for-lane to the scheduler-less server — traced and
+    untraced, compact on and off, including mid-flight submissions and
+    completion generations."""
+    pool = data.draw(st.integers(1, 3), label="pool")
+    trace = data.draw(st.booleans(), label="trace")
+    compact = data.draw(st.booleans(), label="compact")
+    n_reqs = data.draw(st.integers(1, 5), label="n_reqs")
+    mid = data.draw(st.integers(0, min(2, n_reqs - 1)), label="mid")
+    reqs = []
+    for _ in range(n_reqs):
+        w = data.draw(st.sampled_from(sorted(_WORKLOADS)), label="w")
+        m = data.draw(st.sampled_from(MECHS), label="m")
+        n = data.draw(st.integers(1, 12), label="n")
+        reqs.append((w, m, _storm_regs(n, 2, 3) if w == "storm"
+                     else {19: n}))
+
+    base = _serve(reqs, scheduler=None, trace=trace, compact=compact,
+                  pool=pool, mid_flight=mid)
+    sched = _serve(reqs, scheduler=PolicyScheduler(), trace=trace,
+                   compact=compact, pool=pool, mid_flight=mid)
+    assert base[0] == sched[0]
+    assert set(base[1]) == set(sched[1])
+    for rid in base[0]:
+        rb, rs = base[1][rid], sched[1][rid]
+        _assert_state_equal(rb.state, rs.state,
+                            f"rid={rid} trace={trace} compact={compact}")
+        assert rb.completed_gen == rs.completed_gen
+        assert rb.admitted_gen == rs.admitted_gen
+        assert rb.trace == rs.trace and rb.trace_dropped == rs.trace_dropped
+    assert sched[2]["preemptions"] == 0 and sched[2]["evictions"] == 0
+    assert sched[2]["budget_exhaustions"] == 0
+
+
+# -- scheduling is never semantics --------------------------------------------
+
+@settings(**_SETTINGS)
+@given(data=st.data())
+def test_preempted_lanes_publish_bit_identical_states(data):
+    """Preemption + resume (and budget eviction cycles) across pool
+    widths, trace and compact modes: every published state equals
+    run_prepared of that process alone."""
+    pool = data.draw(st.integers(1, 2), label="pool")
+    trace = data.draw(st.booleans(), label="trace")
+    compact = data.draw(st.booleans(), label="compact")
+    burn = data.draw(st.sampled_from([10, 40]), label="burn")
+    budget = data.draw(st.sampled_from([0, 8]), label="budget")
+
+    sched = PolicyScheduler(
+        budgets={"noisy": TenantBudget(max_svc=budget)} if budget else None)
+    cfg = HookConfig(compact_min_bucket=1) if compact else HookConfig()
+    srv = FleetServer(pool=pool, gen_steps=48, chunk=8, fuel=FUEL,
+                      trace=trace or budget > 0,   # budgets need the counters
+                      compact=compact, cfg=cfg, scheduler=sched)
+    noisy_regs = _storm_regs(30, 2, burn)
+    noisy = [srv.submit(_pp("storm"), regs=noisy_regs, tenant="noisy",
+                        priority=0) for _ in range(pool + 1)]
+    for r in srv.step():
+        pass
+    vic = srv.submit(_pp("getpid", Mechanism.ASC), regs={19: 4},
+                     tenant="victim", priority=10, deadline_steps=96)
+    results = {r.rid: r for r in srv.run(max_generations=20000)}
+    assert set(results) == set(noisy + [vic])
+    ref_v = run_prepared(_pp("getpid", Mechanism.ASC), fuel=FUEL,
+                         regs={19: 4})
+    _assert_state_equal(ref_v, results[vic].state, "victim")
+    ref_n = run_prepared(_pp("storm"), fuel=FUEL, regs=noisy_regs)
+    for rid in noisy:
+        _assert_state_equal(ref_n, results[rid].state, f"noisy rid={rid}")
+    stats = srv.stats()
+    if budget:
+        assert stats["budget_exhaustions"] >= 1
+        assert stats["tenants"]["noisy"]["svc"] == 30 * 2 * (pool + 1) + \
+            (pool + 1)  # bursts + one exit svc per lane
+
+
+def test_deny_rate_eviction_quarantines_and_resumes():
+    """A DENY-storming lane is evicted (checkpoint + backoff) and still
+    publishes the exact solo state; the clean co-tenant is untouched."""
+    cfg = HookConfig(sched_deny_rate=0.5, sched_deny_min_svc=4)
+    srv = FleetServer(pool=2, gen_steps=48, fuel=FUEL, trace=True,
+                      scheduler=PolicyScheduler(), cfg=cfg)
+    regs = _storm_regs(20, 3, 2)
+    bad = srv.submit(_pp("storm"), regs=regs, tenant="bad",
+                     policy=[deny(L.SYS_GETPID, errno=13)])
+    good = srv.submit(_pp("getpid", Mechanism.ASC), regs={19: 6},
+                      tenant="good")
+    results = {r.rid: r for r in srv.run(max_generations=20000)}
+    stats = srv.stats()
+    assert stats["evictions"] >= 1
+    assert stats["tenants"]["bad"]["deny"] == 60
+    assert results[bad].preemptions >= 1
+    ref_bad = run_fleet_prepared(
+        [_pp("storm")], fuel=FUEL, regs=[regs], trace=True,
+        policy_overrides={0: [deny(L.SYS_GETPID, errno=13)]})[0]
+    for field in ref_bad._fields:
+        assert np.array_equal(np.asarray(getattr(ref_bad, field))[0],
+                              np.asarray(getattr(results[bad].state, field))
+                              ), field
+    _assert_state_equal(run_prepared(_pp("getpid", Mechanism.ASC), fuel=FUEL,
+                                     regs={19: 6}),
+                        results[good].state, "good tenant")
+
+
+def test_halt_kill_quarantine_backs_off_readmission():
+    srv = FleetServer(pool=1, gen_steps=32, fuel=FUEL, trace=True,
+                      scheduler=PolicyScheduler())
+    pol = [kill(L.SYS_GETPID)]
+    regs = _storm_regs(4, 2, 2)
+    k1 = srv.submit(_pp("storm"), regs=regs, tenant="bad", policy=pol)
+    k2 = srv.submit(_pp("storm"), regs=regs, tenant="bad", policy=pol)
+    results = {r.rid: r for r in srv.run(max_generations=20000)}
+    stats = srv.stats()
+    assert int(np.asarray(results[k1].state.halted)) == HALT_KILL
+    assert int(np.asarray(results[k2].state.halted)) == HALT_KILL
+    assert stats["tenants"]["bad"]["killed"] == 2
+    events = stats["quarantine"]["events"]
+    assert [e["reason"] for e in events] == ["halt_kill", "halt_kill"]
+    assert events[1]["backoff_gens"] == 2 * events[0]["backoff_gens"]
+    # the second kill's backoff actually delayed re-admission
+    assert results[k2].admitted_gen > results[k1].completed_gen + 1
+
+
+def test_update_policy_live_lanes_zero_evictions():
+    """Mid-flight policy tightening flips a tenant's verdicts in place:
+    no evictions, no preemptions, bystander bit-identical."""
+    srv = FleetServer(pool=2, gen_steps=32, fuel=FUEL, trace=True,
+                      scheduler=PolicyScheduler())
+    # 25 x 2 bursts + exit = 51 records: fits the cap-64 ring, so the
+    # pre-update ALLOW records survive for the flip assertion
+    a = srv.submit(_pp("storm"), regs=_storm_regs(25, 2, 30), tenant="A")
+    b = srv.submit(_pp("getpid", Mechanism.ASC), regs={19: 30}, tenant="B")
+    srv.step()
+    srv.step()
+    assert srv.update_policy("A", [deny(L.SYS_GETPID, errno=1)]) == 1
+    results = {r.rid: r for r in srv.run(max_generations=20000)}
+    verdicts = [r.verdict for r in results[a].trace
+                if r.nr == L.SYS_GETPID]
+    assert 0 in verdicts and 1 in verdicts     # ALLOW before, DENY after
+    assert verdicts.index(1) > 0               # the flip happened mid-ring
+    assert all(v == 1 for v in verdicts[verdicts.index(1):])
+    stats = srv.stats()
+    assert stats["evictions"] == 0 and stats["preemptions"] == 0
+    assert stats["policy_updates"] == 1
+    _assert_state_equal(run_prepared(_pp("getpid", Mechanism.ASC), fuel=FUEL,
+                                     regs={19: 30}),
+                        results[b].state, "bystander")
+
+
+def test_update_policy_reaches_queued_and_checkpointed():
+    """A queued (not yet admitted) request of the tenant picks up the
+    updated rules at admission."""
+    srv = FleetServer(pool=1, gen_steps=32, fuel=FUEL, trace=True)
+    a1 = srv.submit(_pp("storm"), regs=_storm_regs(10, 2, 10), tenant="A")
+    a2 = srv.submit(_pp("storm"), regs=_storm_regs(4, 2, 2), tenant="A")
+    srv.step()
+    srv.update_policy("A", [deny(L.SYS_GETPID, errno=13)])
+    results = {r.rid: r for r in srv.run(max_generations=20000)}
+    assert any(r.verdict == 1 for r in results[a2].trace)   # queued req too
+    assert all(r.verdict == 1 for r in results[a2].trace
+               if r.nr == L.SYS_GETPID)
+
+
+def test_update_policy_untraced_raises():
+    srv = FleetServer(pool=1, gen_steps=32, fuel=FUEL)
+    with pytest.raises(ValueError, match="traced"):
+        srv.update_policy("A", [deny(L.SYS_GETPID)])
+
+
+def test_update_policy_patches_running_requests_for_readmission():
+    """A running lane's request object picks up the new rules too, so a
+    later C3 re-admission (which re-installs req.policy through
+    admit_lanes) cannot resurrect the stale pre-update tables."""
+    srv = FleetServer(pool=1, gen_steps=32, fuel=FUEL, trace=True)
+    srv.submit(_pp("storm"), regs=_storm_regs(30, 2, 30), tenant="A")
+    srv.step()
+    compiled_before = srv._slots[0].policy
+    srv.update_policy("A", [deny(L.SYS_GETPID, errno=13)])
+    assert srv._slots[0].policy is not compiled_before
+    assert srv._slots[0].policy is not None
+    srv.run(max_generations=20000)
+
+
+def test_untraced_scheduled_enforcement_rejected():
+    """Budget / deny-rate enforcement needs the trace-carry counters: the
+    misconfiguration raises at construction (server cfg) and at submit
+    (per-request cfg) instead of silently never firing."""
+    with pytest.raises(ValueError, match="verdict counters"):
+        FleetServer(pool=1, gen_steps=32, fuel=FUEL,
+                    scheduler=PolicyScheduler(
+                        budgets={"t": TenantBudget(max_svc=5)}))
+    with pytest.raises(ValueError, match="verdict counters"):
+        FleetServer(pool=1, gen_steps=32, fuel=FUEL,
+                    cfg=HookConfig(budget_svc=5),
+                    scheduler=PolicyScheduler())
+    srv = FleetServer(pool=1, gen_steps=32, fuel=FUEL,
+                      scheduler=PolicyScheduler())
+    with pytest.raises(ValueError, match="verdict counters"):
+        srv.submit(_pp("storm"), regs=_storm_regs(2, 1, 1),
+                   cfg=HookConfig(sched_deny_rate=0.5))
+
+
+def test_compile_policy_accepts_one_shot_iterables():
+    """A generator rule list must compile to the real tables, not be
+    consumed by validation and silently fall back to all-ALLOW."""
+    from repro.core.fleet import POL_DENY, SLOT_UNKNOWN, TRACE_SYS
+    from repro.trace.policy import compile_policy
+    rows = compile_policy(deny(nr, errno=13) for nr in TRACE_SYS)
+    assert all(rows[0][:SLOT_UNKNOWN] == POL_DENY)
+    srv = FleetServer(pool=1, gen_steps=32, fuel=FUEL, trace=True)
+    rid = srv.submit(_pp("storm"), regs=_storm_regs(2, 2, 1),
+                     policy=(r for r in [deny(L.SYS_GETPID, errno=13)]))
+    res = {r.rid: r for r in srv.run()}
+    assert all(r.verdict == 1 for r in res[rid].trace
+               if r.nr == L.SYS_GETPID)
+
+
+def test_full_table_does_not_livelock_checkpoint_restores():
+    """A fresh request that cannot get an image-table row must not
+    head-block a checkpointed request behind it: the restore needs no
+    row and eventually releases the one it holds."""
+    srv = FleetServer(pool=1, gen_steps=48, fuel=FUEL, trace=True,
+                      table_capacity=1, scheduler=PolicyScheduler())
+    a = srv.submit(_pp("storm"), regs=_storm_regs(30, 2, 20), tenant="a")
+    srv.step()                           # a admitted, holds the only row
+    b = srv.submit(_pp("getpid", Mechanism.ASC), regs={19: 3}, tenant="b",
+                   priority=10, deadline_steps=48)
+    results = {r.rid: r for r in srv.run(max_generations=2000)}
+    assert set(results) == {a, b}        # nobody starved
+    assert srv.stats()["preemptions"] >= 1
+    _assert_state_equal(run_prepared(_pp("storm"), fuel=FUEL,
+                                     regs=_storm_regs(30, 2, 20)),
+                        results[a].state, "preempted row-holder")
+
+
+def test_deny_rate_eviction_punishes_tenant_once_per_pass():
+    """Two storming lanes of one tenant evicted in the same pass escalate
+    the quarantine streak by ONE doubling, not one per lane."""
+    cfg = HookConfig(sched_deny_rate=0.5, sched_deny_min_svc=4)
+    srv = FleetServer(pool=2, gen_steps=48, fuel=FUEL, trace=True,
+                      scheduler=PolicyScheduler(), cfg=cfg)
+    regs = _storm_regs(20, 3, 2)
+    for _ in range(2):
+        srv.submit(_pp("storm"), regs=regs, tenant="bad",
+                   policy=[deny(L.SYS_GETPID, errno=13)])
+    srv.run(max_generations=20000)
+    events = srv.stats()["quarantine"]["events"]
+    assert len(events) >= 1
+    assert events[0]["streak"] == 1          # first pass: one offence
+    for prev, nxt in zip(events, events[1:]):
+        assert nxt["streak"] == prev["streak"] + 1
+
+
+# -- interplay with compaction + C3 (acceptance) ------------------------------
+
+def test_preemption_survives_compact_shrink_and_regrow():
+    """A preempted lane re-admitted into a pool that compacted down and
+    must re-expand publishes the exact solo state (checkpoint restore
+    rides the rung transitions)."""
+    sched = PolicyScheduler()
+    srv = FleetServer(pool=4, gen_steps=48, chunk=8, fuel=FUEL, trace=True,
+                      compact=True, scheduler=sched,
+                      cfg=HookConfig(compact_min_bucket=1))
+    regs = _storm_regs(40, 2, 20)
+    noisy = [srv.submit(_pp("storm"), regs=regs, tenant="noisy")
+             for _ in range(5)]
+    for _ in range(2):
+        srv.step()                       # pool fills, maybe compacts
+    vics = [srv.submit(_pp("getpid", Mechanism.ASC), regs={19: 3},
+                       tenant="vip", priority=9, deadline_steps=48)
+            for _ in range(2)]
+    results = {r.rid: r for r in srv.run(max_generations=20000)}
+    assert set(results) == set(noisy + vics)
+    ref_n = run_prepared(_pp("storm"), fuel=FUEL, regs=regs)
+    for rid in noisy:
+        _assert_state_equal(ref_n, results[rid].state, f"noisy {rid}")
+    ref_v = run_prepared(_pp("getpid", Mechanism.ASC), fuel=FUEL,
+                         regs={19: 3})
+    for rid in vics:
+        _assert_state_equal(ref_v, results[rid].state, f"vip {rid}")
+    assert srv.stats()["preemptions"] >= 1
+
+
+def test_c3_readmission_under_scheduler():
+    """The C3 trap -> pin -> re-admit loop still runs scalar-free under a
+    scheduler, next to a preemptable noisy tenant."""
+    from repro.core import run_with_c3
+    _, _, ev_ref, runs_ref = run_with_c3(
+        lambda: programs.indirect_svc(3), cfg=HookConfig(), virtualize=True,
+        fuel=FUEL)
+    srv = FleetServer(pool=2, gen_steps=64, fuel=FUEL,
+                      scheduler=PolicyScheduler())
+    rid = srv.submit(lambda: programs.indirect_svc(3), virtualize=True,
+                     tenant="c3")
+    noisy = srv.submit(_pp("storm"), regs=_storm_regs(10, 2, 10),
+                       tenant="noisy")
+    results = {r.rid: r for r in srv.run(max_generations=20000)}
+    assert results[rid].events == ev_ref
+    assert results[rid].attempts == runs_ref
+    stats = srv.stats()
+    assert stats["scalar_reexecutions"] == 0
+    assert stats["c3_readmissions"] == 1
+    _assert_state_equal(run_prepared(_pp("storm"), fuel=FUEL,
+                                     regs=_storm_regs(10, 2, 10)),
+                        results[noisy].state, "noisy bystander")
+
+
+def test_syscall_storm_param_counts():
+    """The storm's svc volume is exactly iterations x burst (+ exit),
+    and the burn knob scales icount without changing the svc count."""
+    pp = _pp("storm")
+    lo = run_prepared(pp, fuel=FUEL, regs=_storm_regs(5, 4, 0))
+    hi = run_prepared(pp, fuel=FUEL, regs=_storm_regs(5, 4, 50))
+    _, tr = run_fleet_prepared([pp, pp], fuel=FUEL,
+                               regs=[_storm_regs(5, 4, 0),
+                                     _storm_regs(5, 4, 50)], trace=True)
+    assert int(lo.halted) == HALT_EXIT and int(hi.halted) == HALT_EXIT
+    cnt = np.asarray(tr.count)
+    assert cnt[0] == cnt[1] == 5 * 4 + 1      # bursts + exit
+    assert int(hi.icount) > int(lo.icount) + 5 * 50
