@@ -1,0 +1,267 @@
+"""Durability overhead census + kill-and-recover wall-clock.
+
+The durable server journals every generation and snapshots the full
+fleet carry every ``snapshot_interval`` generations; this census prices
+that insurance on the same 400-lane mechanism x workload x
+iteration-count grid as ``collective_hook_overhead``, pushed through the
+continuous-batching server twice — plain, then with a write-ahead
+journal + snapshots at the default interval 8 — and reports the
+aggregate steps/sec delta.  The acceptance bar is <10% (enforced on the
+full run only).
+
+The second half is the recovery claim made measurable: a durable server
+is killed mid-run, ``FleetServer.recover`` restores the newest snapshot
+and replays the journal tail, and the drained results must be
+bit-identical to the uninterrupted run; the payload records the restore
+and drain wall-clocks plus the replayed-generation count.
+
+Writes ``benchmarks/results/BENCH_durability.json`` (schema
+``BENCH_durability/v1``); ``--quick`` runs a seconds-long sanity pass on
+a scaled-down grid (no JSON write, no bar).  ``--devices N`` forces N
+host platform devices and implies ``--shard`` so the pool
+lane-partitions across them; repro imports are deferred so the
+device-count flag lands before jax initialises its backends.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+RESULT_PATH = (pathlib.Path(__file__).parent / "results"
+               / "BENCH_durability.json")
+
+FUEL = 10_000_000
+SNAPSHOT_INTERVAL = 8
+OVERHEAD_BAR_PCT = 10.0
+
+
+def build_requests(scale: float = 1.0):
+    """The 400-lane census as an arrival stream: (prepared process,
+    regs) pairs — 12 distinct images, bimodal-ish iteration counts."""
+    from benchmarks.collective_hook_overhead import census_grid, _prepare_cells
+    grid = census_grid()
+    cells = _prepare_cells()
+    return [(cells[(g[0], g[3])], {19: max(2, int(g[4] * scale))})
+            for g in grid]
+
+
+def _result_key(r):
+    return (r.rid, tuple(int(x) for x in np.asarray(r.state.regs)),
+            int(r.state.halted), int(r.state.icount))
+
+
+def run_server(reqs, pool: int, chunk: int, gen_steps: int,
+               durable_dir=None, shard: bool = False):
+    """One full drain through the server; returns (wall_s, stats,
+    result keys)."""
+    from repro.core import HookConfig
+    from repro.serve.durability import DurabilityManager
+    from repro.serve.fleet_server import FleetServer
+    dur = None
+    cfg = HookConfig(snapshot_interval=SNAPSHOT_INTERVAL)
+    if durable_dir is not None:
+        dur = DurabilityManager(durable_dir)
+    srv = FleetServer(pool=pool, gen_steps=gen_steps, chunk=chunk,
+                      fuel=FUEL, shard=shard, cfg=cfg, durability=dur)
+    t0 = time.perf_counter()
+    for pp, rg in reqs:
+        srv.submit(pp, regs=rg)
+    results = srv.run()
+    wall = time.perf_counter() - t0
+    assert len(results) == len(reqs)
+    return wall, srv.stats(), sorted(_result_key(r) for r in results)
+
+
+def run_overhead(reqs, pool: int, chunk: int, gen_steps: int,
+                 passes: int, workdir: pathlib.Path,
+                 shard: bool = False) -> dict:
+    """Interleaved plain/durable pairs, median-ratio pair reported (the
+    trace_overhead methodology: back-to-back pairs see the same box
+    conditions, the median tolerates outlier pairs)."""
+    # warm both compilation caches; the warm pass also supplies the
+    # bit-identity reference and proves durable == plain results
+    _, _, ref_keys = run_server(reqs, pool, chunk, gen_steps, shard=shard)
+    _, dstats, dur_keys = run_server(reqs, pool, chunk, gen_steps,
+                                     durable_dir=workdir / "warm",
+                                     shard=shard)
+    assert dur_keys == ref_keys, "durable results diverged from plain"
+    steps = dstats["harvested_steps"]
+
+    pairs = []
+    for i in range(passes):
+        t0 = time.perf_counter()
+        run_server(reqs, pool, chunk, gen_steps, shard=shard)
+        t1 = time.perf_counter()
+        run_server(reqs, pool, chunk, gen_steps,
+                   durable_dir=workdir / f"pass{i}", shard=shard)
+        pairs.append((t1 - t0, time.perf_counter() - t1))
+    pairs.sort(key=lambda p: p[1] / p[0])
+    t_plain, t_durable = pairs[len(pairs) // 2]
+
+    plain_sps = steps / t_plain
+    durable_sps = steps / t_durable
+    return {
+        "plain": {"wall_s": round(t_plain, 3),
+                  "steps_per_sec": round(plain_sps, 1)},
+        "durable": {"wall_s": round(t_durable, 3),
+                    "steps_per_sec": round(durable_sps, 1),
+                    "snapshots": dstats["snapshots"],
+                    "snapshot_bytes": dstats["snapshot_bytes"],
+                    "journal_records": dstats["journal_records"]},
+        "total_steps": steps,
+        "overhead_pct": round(
+            100.0 * (plain_sps - durable_sps) / plain_sps, 2),
+        "bit_identical": True,
+        "_ref_keys": ref_keys,
+    }
+
+
+def run_kill_recover(reqs, pool: int, chunk: int, gen_steps: int,
+                     ref_keys, workdir: pathlib.Path,
+                     shard: bool = False) -> dict:
+    """Kill a durable server mid-run, recover, drain; results must be
+    bit-identical to the uninterrupted reference."""
+    from repro.core import HookConfig
+    from repro.serve.durability import DurabilityManager
+    from repro.serve.fleet_server import FleetServer
+    d = workdir / "victim"
+    srv = FleetServer(pool=pool, gen_steps=gen_steps, chunk=chunk,
+                      fuel=FUEL, shard=shard,
+                      cfg=HookConfig(snapshot_interval=SNAPSHOT_INTERVAL),
+                      durability=DurabilityManager(d))
+    for pp, rg in reqs:
+        srv.submit(pp, regs=rg)
+    pre = []
+    # run past the first snapshot boundary, then kill mid-window (the
+    # interesting case: snapshot restore AND journal-tail replay)
+    for _ in range(SNAPSHOT_INTERVAL + 3):
+        if (not srv._queue and not srv._readmit
+                and all(r is None for r in srv._slots)):
+            break
+        pre.extend(srv.step())
+    kill_gen = srv.generation
+    del srv                                    # the crash
+
+    t0 = time.perf_counter()
+    srv, replayed = FleetServer.recover(d)  # shard restored from the journal
+    t_restore = time.perf_counter() - t0
+    post = srv.run()
+    t_drain = time.perf_counter() - t0 - t_restore
+    union = {}
+    for r in pre + replayed + post:            # at-least-once: rid wins
+        union[r.rid] = r
+    got = sorted(_result_key(r) for r in union.values())
+    assert got == ref_keys, "recovered results diverged from reference"
+    return {
+        "killed_at_generation": kill_gen,
+        "restore_wall_s": round(t_restore, 3),
+        "drain_wall_s": round(t_drain, 3),
+        "replayed_generations": srv.stats()["recovery_generations"],
+        "replayed_results": len(replayed),
+        "bit_identical": True,
+    }
+
+
+def run_bench(pool: int = 400, chunk: int = 128, gen_steps: int = 512,
+              passes: int = 5, scale: float = 1.0,
+              shard: bool = False) -> dict:
+    reqs = build_requests(scale)
+    if pool > len(reqs):
+        pool = len(reqs)
+    workdir = pathlib.Path(tempfile.mkdtemp(prefix="asc-bench-dur-"))
+    try:
+        over = run_overhead(reqs, pool, chunk, gen_steps, passes, workdir,
+                            shard=shard)
+        ref_keys = over.pop("_ref_keys")
+        recov = run_kill_recover(reqs, pool, chunk, gen_steps, ref_keys,
+                                 workdir, shard=shard)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+    import jax
+    return {
+        "schema": "BENCH_durability/v1",
+        "config": {"lanes": len(reqs), "pool": pool, "chunk": chunk,
+                   "gen_steps": gen_steps,
+                   "snapshot_interval": SNAPSHOT_INTERVAL,
+                   "fuel": FUEL, "shard": shard,
+                   "devices": jax.device_count()},
+        **over,
+        "recovery": recov,
+    }
+
+
+def write_result(payload: dict, path: pathlib.Path = RESULT_PATH) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True))
+
+
+def run() -> list:
+    c = run_bench()
+    write_result(c)
+    return [{
+        "variant": "durability_overhead",
+        "plain_steps_per_sec": c["plain"]["steps_per_sec"],
+        "durable_steps_per_sec": c["durable"]["steps_per_sec"],
+        "overhead_pct": c["overhead_pct"],
+        "restore_wall_s": c["recovery"]["restore_wall_s"],
+        "bit_identical": c["bit_identical"] and c["recovery"]["bit_identical"],
+    }]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="seconds-long sanity pass, no JSON write, no bar")
+    ap.add_argument("--shard", action="store_true",
+                    help="lane-partition the pool across local devices")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="force N host platform devices (implies --shard)")
+    args = ap.parse_args(argv)
+    if args.devices:
+        # must land before jax touches a backend — repro imports in this
+        # module are deferred for exactly this line
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+        args.shard = True
+
+    if args.quick:
+        kw = dict(pool=64, chunk=16, gen_steps=48, passes=1, scale=0.05)
+    else:
+        kw = {}
+    c = run_bench(shard=args.shard, **kw)
+    if not args.quick:  # sanity passes must not clobber the tracked record
+        write_result(c)
+    print("name,us_per_call,derived")
+    print(f"durability/census,0,"
+          f"lanes={c['config']['lanes']} pool={c['config']['pool']} "
+          f"devices={c['config']['devices']} "
+          f"plain={c['plain']['steps_per_sec']:.0f}sps "
+          f"durable={c['durable']['steps_per_sec']:.0f}sps "
+          f"overhead={c['overhead_pct']}% "
+          f"snapshots={c['durable']['snapshots']} "
+          f"journal_records={c['durable']['journal_records']} "
+          f"bit_identical={c['bit_identical']}")
+    r = c["recovery"]
+    print(f"durability/recovery,0,"
+          f"killed_at_gen={r['killed_at_generation']} "
+          f"restore={r['restore_wall_s']}s drain={r['drain_wall_s']}s "
+          f"replayed_gens={r['replayed_generations']} "
+          f"bit_identical={r['bit_identical']}")
+    # The acceptance bar, enforced on the full (median interleaved-pair)
+    # run only — the --quick grid is too small to time meaningfully.
+    if not args.quick and c["overhead_pct"] > OVERHEAD_BAR_PCT:
+        raise RuntimeError(
+            f"durability overhead {c['overhead_pct']}% exceeds the "
+            f"{OVERHEAD_BAR_PCT}% acceptance bar")
+
+
+if __name__ == "__main__":
+    main()

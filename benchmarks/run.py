@@ -23,6 +23,10 @@
                                SLO preemption, quarantine) + mid-flight
                                policy updates; writes BENCH_sched.json
                                itself
+  * durability_overhead      — write-ahead journal + snapshot cost on the
+                               400-lane census (<10% bar) and a
+                               kill-and-recover wall-clock; writes
+                               BENCH_durability.json itself
   * roofline                 — dry-run roofline table (§Roofline)
 
 Besides the CSV stream, writes ``benchmarks/results/BENCH_fleet.json`` with
@@ -41,7 +45,8 @@ import traceback
 
 SUITES = ["hook_overhead", "svc_census", "app_bandwidth", "collective_census",
           "collective_hook_overhead", "serving_throughput", "trace_overhead",
-          "compaction_speedup", "policy_scheduler", "roofline"]
+          "compaction_speedup", "policy_scheduler", "durability_overhead",
+          "roofline"]
 
 # suites feeding the BENCH_fleet.json record (collect_fleet_bench)
 _FLEET_BENCH_INPUTS = {"hook_overhead", "collective_hook_overhead"}

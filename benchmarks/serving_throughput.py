@@ -137,6 +137,14 @@ def run_server(reqs, pool: int, chunk: int, gen_steps: int,
         # BENCH_sched.json (benchmarks/policy_scheduler.py)
         "tenants": stats["tenants"],
         "budget_exhaustions": stats["budget_exhaustions"],
+        # durability counters: this mix runs without a journal, so all
+        # zero here — the durable counterpart is BENCH_durability.json
+        # (benchmarks/durability_overhead.py)
+        "retries": stats["retries"],
+        "rollbacks": stats["rollbacks"],
+        "shed_requests": stats["shed_requests"],
+        "snapshot_bytes": stats["snapshot_bytes"],
+        "recovery_generations": stats["recovery_generations"],
     }
 
 

@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
-# CI-style gate: tier-1, the smoke + serving + trace + compaction tiers,
-# and seconds-long sanity passes — two on 2 forced host devices (the
-# sharded serving pool and the lane-partitioned census) plus the
-# trace-overhead and compaction benchmarks (--quick; the compaction one
-# also runs a 2-device sharded rung).  See tests/README.md for the tiers.
+# CI-style gate: tier-1, the smoke + serving + trace + compaction +
+# sched + durability tiers, and seconds-long sanity passes — several on
+# 2 forced host devices (the sharded serving pool, the lane-partitioned
+# census, a compaction rung, and the durability kill-recover pass) plus
+# the trace-overhead, compaction, scheduler, and durability benchmarks
+# (--quick).  See tests/README.md for the tiers.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -27,6 +28,9 @@ ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m compaction
 echo "== sched tier (heavier example counts) =="
 ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m sched
 
+echo "== durability tier (heavier example counts) =="
+ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m durability
+
 echo "== serving throughput sanity (sharded, 2 host devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
     python -m benchmarks.serving_throughput --quick --shard
@@ -45,5 +49,11 @@ python -m benchmarks.compaction_speedup --quick --devices 2
 
 echo "== policy scheduler sanity =="
 python -m benchmarks.policy_scheduler --quick
+
+echo "== durability kill-recover sanity (single device) =="
+python -m benchmarks.durability_overhead --quick
+
+echo "== durability kill-recover sanity (sharded, 2 host devices) =="
+python -m benchmarks.durability_overhead --quick --devices 2
 
 echo "check.sh: all green"

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import logging
 import os
 import pathlib
 import shutil
@@ -28,6 +29,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+log = logging.getLogger(__name__)
 
 Pytree = Any
 
@@ -97,33 +100,84 @@ class CheckpointManager:
                       if p.is_dir() and not p.name.endswith(".tmp"))
 
     # -- restore ------------------------------------------------------------------
-    def restore_latest(self, like: Pytree, *, sharding_tree: Optional[Pytree] = None
-                       ) -> Optional[Tuple[int, Pytree, Dict[str, Any]]]:
-        ptr = self.dir / "LATEST"
-        if not ptr.exists():
-            return None
-        path = self.dir / ptr.read_text().strip()
-        if not (path / "manifest.json").exists():
-            return None
+    def load_step(self, path: pathlib.Path
+                  ) -> Tuple[Dict[str, Any], Dict[str, np.ndarray]]:
+        """Load and verify one step directory, raising on any corruption.
+
+        Raises ``IOError`` when the manifest hash does not match the arrays
+        (the classic integrity failure); a torn/corrupted npz or manifest
+        surfaces as whatever ``np.load``/``json.loads`` raises.  Callers that
+        want the newest *valid* step should go through :meth:`restore_latest`,
+        which catches all of these and falls back.
+        """
         manifest = json.loads((path / "manifest.json").read_text())
         with np.load(path / "arrays.npz") as z:
             arrays = {k: z[k] for k in manifest["keys"]}
         items = [(k, arrays[k]) for k in manifest["keys"]]
         if _tree_hash(items) != manifest["hash"]:
             raise IOError(f"checkpoint {path} failed integrity check")
+        return manifest, arrays
 
-        flat_like, treedef = jax.tree_util.tree_flatten(like)
-        flat_paths = [k for k, _ in _flatten_with_paths(like)]
-        assert flat_paths == manifest["keys"], "checkpoint/model structure mismatch"
-        shardings = (jax.tree_util.tree_leaves(sharding_tree)
-                     if sharding_tree is not None else [None] * len(flat_like))
-        leaves = []
-        for (k, arr), ref, sh in zip(items, flat_like, shardings):
-            arr = arr.astype(ref.dtype) if hasattr(ref, "dtype") else arr
-            leaves.append(jax.device_put(arr, sh) if sh is not None
-                          else jax.device_put(arr))
-        state = jax.tree_util.tree_unflatten(treedef, leaves)
-        return manifest["step"], state, manifest.get("extra", {})
+    def _candidates(self) -> List[pathlib.Path]:
+        """Step dirs to try, LATEST-pointed first, then the rest newest-first."""
+        steps = sorted((p for p in self.dir.glob("step_*")
+                        if p.is_dir() and not p.name.endswith(".tmp")),
+                       reverse=True)
+        ptr = self.dir / "LATEST"
+        if ptr.exists():
+            head = self.dir / ptr.read_text().strip()
+            if head in steps:
+                steps.remove(head)
+                steps.insert(0, head)
+        return steps
+
+    def restore_latest(self, like: Optional[Pytree] = None, *,
+                       sharding_tree: Optional[Pytree] = None
+                       ) -> Optional[Tuple[int, Pytree, Dict[str, Any]]]:
+        """Restore the newest valid checkpoint.
+
+        Tries the ``LATEST``-pointed step first; if it fails its manifest-hash
+        check (or is torn/unreadable), logs the skip and falls back to the
+        newest remaining valid step rather than giving up on the directory.
+        Raises ``IOError`` only when steps exist but none are valid; returns
+        ``None`` when the directory holds no steps at all.
+
+        With ``like=None`` the raw host array dict is returned in place of a
+        device pytree — the durable-serving path, whose snapshot layout is a
+        flat dict rather than a model pytree.
+        """
+        candidates = self._candidates()
+        if not candidates:
+            return None
+        errors: List[str] = []
+        for path in candidates:
+            try:
+                manifest, arrays = self.load_step(path)
+            except Exception as e:  # noqa: BLE001 — any corruption means "try older"
+                log.warning("skipping corrupt checkpoint %s: %s", path.name, e)
+                errors.append(f"{path.name}: {e}")
+                continue
+            if errors:
+                log.warning("restored fallback checkpoint %s (skipped: %s)",
+                            path.name, "; ".join(errors))
+            if like is None:
+                return manifest["step"], arrays, manifest.get("extra", {})
+            items = [(k, arrays[k]) for k in manifest["keys"]]
+            flat_like, treedef = jax.tree_util.tree_flatten(like)
+            flat_paths = [k for k, _ in _flatten_with_paths(like)]
+            assert flat_paths == manifest["keys"], "checkpoint/model structure mismatch"
+            shardings = (jax.tree_util.tree_leaves(sharding_tree)
+                         if sharding_tree is not None else [None] * len(flat_like))
+            leaves = []
+            for (k, arr), ref, sh in zip(items, flat_like, shardings):
+                arr = arr.astype(ref.dtype) if hasattr(ref, "dtype") else arr
+                leaves.append(jax.device_put(arr, sh) if sh is not None
+                              else jax.device_put(arr))
+            state = jax.tree_util.tree_unflatten(treedef, leaves)
+            return manifest["step"], state, manifest.get("extra", {})
+        raise IOError(
+            f"checkpoint dir {self.dir} failed integrity check: no valid step "
+            f"({'; '.join(errors)})")
 
 
 class AsyncWriter:

@@ -33,7 +33,8 @@ devices via :mod:`repro.parallel.sharding`.
 from __future__ import annotations
 
 import functools
-from typing import List, NamedTuple, Optional, Sequence
+import zlib
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -1458,3 +1459,121 @@ def fleet_summary(states: MachineState) -> List[dict]:
     n = fields["halted"].shape[0]
     return [dict({k: int(v[i]) for k, v in fields.items()},
                  hooks=int(hooks[i])) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# durable-serving helpers (the device side of repro.serve.durability)
+# ---------------------------------------------------------------------------
+#
+# A fleet snapshot is the WHOLE carry — MachineState tree, optional
+# TraceState tree — moved to host as a flat {key: np.ndarray} dict plus a
+# full-coverage digest.  The digest intentionally does NOT reuse
+# checkpoint.manager._tree_hash: that one prefix-hashes the first 64KB of
+# each leaf (fine for torn-file detection on big training arrays), while
+# the chaos harness must catch a single flipped bit anywhere in a
+# [B, MEM_WORDS] memory image, so every byte participates here.  crc32 is
+# plenty: this is corruption *detection* inside one trust domain, not an
+# authenticated hash.
+
+def _carry_bytes(leaf) -> memoryview:
+    a = np.ascontiguousarray(np.asarray(leaf))
+    return memoryview(a).cast("B")
+
+
+def carry_digest(states: MachineState,
+                 trace: Optional[TraceState] = None) -> int:
+    """Full-coverage crc32 over every byte of a fleet carry (machine state
+    tree + optional trace tree), shape/dtype-framed so a reshaped-but-
+    equal-bytes carry does not collide.  The per-snapshot integrity check
+    of :mod:`repro.serve.durability` and the detector for chaos-injected
+    lane-carry bit-flips."""
+    crc = 0
+    for tree in (states,) if trace is None else (states, trace):
+        for key, leaf in zip(tree._fields, tree):
+            frame = f"{key}:{np.asarray(leaf).shape}:{np.asarray(leaf).dtype};"
+            crc = zlib.crc32(frame.encode(), crc)
+            crc = zlib.crc32(_carry_bytes(leaf), crc)
+    return crc
+
+
+def lane_digests(states: MachineState,
+                 trace: Optional[TraceState] = None) -> List[int]:
+    """Per-lane crc32s of a fleet carry — ``carry_digest`` restricted to
+    lane ``b`` of every leaf.  Lets rollback attribute a corrupted carry
+    to the specific lanes (and so tenants) whose bytes diverged."""
+    n = int(np.asarray(states.halted).shape[0])
+    host = [np.ascontiguousarray(np.asarray(leaf)) for leaf in
+            (list(states) + (list(trace) if trace is not None else []))]
+    out = []
+    for b in range(n):
+        crc = 0
+        for a in host:
+            crc = zlib.crc32(memoryview(np.ascontiguousarray(a[b])).cast("B"),
+                             crc)
+        out.append(crc)
+    return out
+
+
+def pack_carry(states: MachineState, trace: Optional[TraceState] = None,
+               *, prefix: str = "") -> Dict[str, np.ndarray]:
+    """Flatten a fleet carry into snapshot arrays: ``state/<field>`` and
+    ``trace/<field>`` host arrays, with the mostly-zero [B, MEM_WORDS]
+    memory leaf stored sparsely (``state/mem@idx`` flat nonzero indices +
+    ``state/mem@val`` values) — a 400-lane pool's dense memory plane is
+    100MB/snapshot, which would sink the <10% durability-overhead budget
+    on its own.  :func:`unpack_carry` reverses both encodings."""
+    out: Dict[str, np.ndarray] = {}
+    mem = np.asarray(states.mem)
+    idx = np.flatnonzero(mem.reshape(-1))
+    out[f"{prefix}state/mem@idx"] = idx
+    out[f"{prefix}state/mem@val"] = mem.reshape(-1)[idx]
+    out[f"{prefix}state/mem@shape"] = np.asarray(mem.shape, np.int64)
+    for key, leaf in zip(states._fields, states):
+        if key != "mem":
+            out[f"{prefix}state/{key}"] = np.asarray(leaf)
+    if trace is not None:
+        for key, leaf in zip(trace._fields, trace):
+            out[f"{prefix}trace/{key}"] = np.asarray(leaf)
+    return out
+
+
+def unpack_carry(arrays, *, prefix: str = ""
+                 ) -> Tuple[MachineState, Optional[TraceState]]:
+    """Rebuild ``(MachineState, TraceState | None)`` host trees from
+    :func:`pack_carry` snapshot arrays."""
+    shape = tuple(int(x) for x in arrays[f"{prefix}state/mem@shape"])
+    mem = np.zeros(int(np.prod(shape)), I64)
+    mem[np.asarray(arrays[f"{prefix}state/mem@idx"])] = \
+        np.asarray(arrays[f"{prefix}state/mem@val"])
+    fields = {"mem": mem.reshape(shape)}
+    for key in MachineState._fields:
+        if key != "mem":
+            fields[key] = np.asarray(arrays[f"{prefix}state/{key}"])
+    states = MachineState(**fields)
+    if f"{prefix}trace/count" not in arrays:
+        return states, None
+    trace = TraceState(**{key: np.asarray(arrays[f"{prefix}trace/{key}"])
+                          for key in TraceState._fields})
+    return states, trace
+
+
+def unpack_images(imgs: FleetImages) -> DecodedImage:
+    """Invert :func:`pack_images`: packed int64 words back to the eight
+    SoA decode tables, vectorised (no per-word Python loop — recovery
+    rehydrates images from the content-addressed store without paying
+    ``machine.decode_image``'s 65536-iteration host decode)."""
+    p = np.asarray(imgs.packed)
+    f32 = lambda shift, mask: ((p >> shift) & mask).astype(np.int32)
+    return DecodedImage(
+        op=f32(0, 0x3F), rd=f32(6, 0x1F), rn=f32(11, 0x1F),
+        rm=f32(16, 0x1F), sh=f32(22, 0x3F), cond=f32(28, 0xF),
+        sf=f32(32, 0x1), imm=np.asarray(imgs.imm))
+
+
+def flip_bit(states: MachineState, lane: int, word: int,
+             bit: int) -> MachineState:
+    """Flip one bit of one lane's memory plane — the chaos harness's
+    injected carry corruption (what :func:`carry_digest` must catch)."""
+    mem = np.asarray(states.mem).copy()
+    mem[lane, word] ^= np.int64(1) << np.int64(bit)
+    return states._replace(mem=jnp.asarray(mem))

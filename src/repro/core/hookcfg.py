@@ -116,23 +116,67 @@ class HookConfig:
     sched_deny_min_svc: int = 8
     sched_backoff_base: int = 2
     sched_backoff_cap: int = 64
+    # Durable serving (repro.serve.durability / FleetServer(durability=)).
+    # snapshot_interval is the generation cadence of full-fleet snapshots
+    # (0 = journal-only: recovery then replays the whole journal from the
+    # initial state); snapshot_keep bounds the snapshot directory like
+    # CheckpointManager's keep-k GC.  journal_fsync controls whether the
+    # write-ahead journal fsyncs at its commit points (one group-fsync per
+    # generation, not one per record); turning it off trades crash
+    # durability for write latency, e.g. in soak tests on slow disks.
+    snapshot_interval: int = 8
+    snapshot_keep: int = 3
+    journal_fsync: bool = True
+    # Wall-clock generation watchdog (seconds; 0 = off): a generation that
+    # has already blown this budget before its dispatch launches is failed
+    # and retried like any other dispatch fault.
+    serve_watchdog_s: float = 0.0
+    # Chaos fault injection (repro.serve.chaos / FleetServer(chaos=)).
+    # Rates are per-opportunity probabilities drawn from a deterministic
+    # generator seeded by chaos_seed: dispatch faults and hangs are drawn
+    # once per dispatch attempt, snapshot corruption and lane-carry
+    # bit-flips once per snapshot written.  Faults are answered by bounded
+    # exponential-backoff retry (chaos_max_retries extra attempts,
+    # chaos_backoff_base_ms doubling per attempt), lane rollback to the
+    # last snapshot, quarantine escalation, and load-shedding.
+    chaos_seed: int = 0
+    chaos_dispatch_fault_rate: float = 0.0
+    chaos_hang_rate: float = 0.0
+    chaos_bitflip_rate: float = 0.0
+    chaos_snapshot_corrupt_rate: float = 0.0
+    chaos_max_retries: int = 3
+    chaos_backoff_base_ms: int = 1
     policy: List[PolicyRule] = dataclasses.field(default_factory=list)
     pinned: List[PinnedSite] = dataclasses.field(default_factory=list)
 
     # -- persistence -----------------------------------------------------------
+    def to_dict(self) -> dict:
+        """JSON-ready dict (the exact shape :meth:`from_dict` accepts).
+        Hand-rolled rather than ``dataclasses.asdict``: the only nested
+        dataclasses are ``policy``/``pinned``, and the recursive deep
+        copy is ~10x slower — this sits on the durable server's
+        per-request journal path."""
+        d = dict(self.__dict__)
+        d["policy"] = [dataclasses.asdict(r) for r in self.policy]
+        d["pinned"] = [dataclasses.asdict(p) for p in self.pinned]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "HookConfig":
+        d = dict(d)
+        pins = [PinnedSite(**x) for x in d.pop("pinned", [])]
+        rules = [PolicyRule(**x) for x in d.pop("policy", [])]
+        return cls(pinned=pins, policy=rules, **d)
+
     def save(self, path: str | pathlib.Path) -> None:
-        d = dataclasses.asdict(self)
-        pathlib.Path(path).write_text(json.dumps(d, indent=2))
+        pathlib.Path(path).write_text(json.dumps(self.to_dict(), indent=2))
 
     @classmethod
     def load(cls, path: str | pathlib.Path) -> "HookConfig":
         p = pathlib.Path(path)
         if not p.exists():
             return cls()
-        d = json.loads(p.read_text())
-        pins = [PinnedSite(**x) for x in d.pop("pinned", [])]
-        rules = [PolicyRule(**x) for x in d.pop("policy", [])]
-        return cls(pinned=pins, policy=rules, **d)
+        return cls.from_dict(json.loads(p.read_text()))
 
     def pin(self, *, lib: str = "", offset: int = -1, vaddr: int = -1,
             syscall_nr: int = -1) -> None:

@@ -116,3 +116,11 @@ class PolicyScheduler:
         """Budget check for one tenant given uncharged in-flight deltas."""
         return self.ledger.exhausted(tenant, inflight_svc=inflight_svc,
                                      inflight_deny=inflight_deny)
+
+    def note_corruption(self, tenant: str, generation: int) -> int:
+        """Escalate a detected carry corruption (durable serving's
+        replay-verify caught a digest mismatch on this tenant's lanes)
+        into the same exponential quarantine backoff as a kill/eviction.
+        Returns the generation the tenant is blocked until."""
+        return self.quarantine.punish(tenant, generation,
+                                      reason="carry_corruption")

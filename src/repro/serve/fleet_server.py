@@ -159,7 +159,8 @@ class FleetServer:
                  fuel: int = 2_000_000, shard: bool = False,
                  trace: Optional[bool] = None,
                  compact: Optional[bool] = None,
-                 scheduler: Optional[PolicyScheduler] = None):
+                 scheduler: Optional[PolicyScheduler] = None,
+                 durability=None, chaos=None):
         assert pool >= 1
         self.pool = pool
         self.cfg = cfg or HookConfig()
@@ -217,6 +218,15 @@ class FleetServer:
         self.pool_shrinks = 0
         self._wait_gens: List[int] = []
         self._wait_s: List[float] = []
+        # durable serving (repro.serve.durability) + chaos injection
+        self.retries = 0                         # dispatch attempts re-run
+        self.rollbacks = 0                       # carry rollbacks to snapshot
+        self.shed_requests = 0                   # load-shed (rejected) reqs
+        self.recovery_generations = 0            # generations replayed
+        self.watchdog_trips = 0                  # wall-clock budget blown
+        self.shed: List[dict] = []               # rejected-with-reason ledger
+        self._dur = None                         # DurabilityManager
+        self._chaos = None                       # ChaosMonkey
 
         # Physical lane pool.  ``_order[p]`` is the logical slot backed by
         # physical lane ``p``; the device state arrays have width
@@ -252,6 +262,14 @@ class FleetServer:
             F.unstack_trace(F.make_empty_trace(1, self.cfg.trace_cap), 0)
             if self.trace_enabled else None)
         self._place()
+        # durability first (chaos.attach checks for it: bitflip/corruption
+        # injection is only answerable with snapshots to roll back to)
+        if durability is not None:
+            self._dur = durability
+            durability.attach(self)
+        if chaos is not None:
+            self._chaos = chaos
+            chaos.attach(self)
 
     def _place(self) -> None:
         """(Re-)apply the lane partitioning after a width change; donated
@@ -313,7 +331,34 @@ class FleetServer:
         and the latency SLO in simulated steps from submission.  Defaults
         come from the request config (``cfg.tenant`` etc.); without a
         ``scheduler=`` hook they are recorded but drive nothing.
+
+        Scheduling kwargs are validated eagerly — a bad value raises
+        ``ValueError`` naming the field here, at submission, not
+        generations later inside a scheduler pass.
         """
+        if tenant is not None and not isinstance(tenant, str):
+            raise ValueError(
+                f"tenant must be a string, got {type(tenant).__name__} "
+                f"{tenant!r}")
+        if priority is not None and (isinstance(priority, bool)
+                                     or not isinstance(priority,
+                                                       (int, np.integer))):
+            raise ValueError(
+                f"priority must be an int, got {type(priority).__name__} "
+                f"{priority!r}")
+        if deadline_steps is not None and (
+                isinstance(deadline_steps, bool)
+                or not isinstance(deadline_steps, (int, np.integer))
+                or deadline_steps < 0):
+            raise ValueError(
+                f"deadline_steps must be a non-negative int (0 = no SLO), "
+                f"got {type(deadline_steps).__name__} {deadline_steps!r}")
+        if fuel is not None and (isinstance(fuel, bool)
+                                 or not isinstance(fuel, (int, np.integer))
+                                 or fuel < 1):
+            raise ValueError(
+                f"fuel must be a positive int, got {type(fuel).__name__} "
+                f"{fuel!r}")
         rcfg = cfg or (self.cfg if isinstance(app, PreparedProcess) else
                        dataclasses.replace(self.cfg, pinned=list(self.cfg.pinned)))
         if policy is None and rcfg.policy:
@@ -342,6 +387,10 @@ class FleetServer:
             mechanism, virtualize = app.mechanism, app.virtualize
         else:
             builder = app
+            if self._dur is not None:
+                # a journaled request must be reconstructable: refuse an
+                # unserialisable builder now, not at recovery time
+                self._dur.check_builder(builder)
             pp = prepare(builder(), mechanism, virtualize=virtualize, cfg=rcfg)
         req = FleetRequest(
             rid=self._next_rid, pp=pp, builder=builder, cfg=rcfg,
@@ -359,7 +408,17 @@ class FleetServer:
         req.attempts = 1
         self._tstat(req.tenant)["submitted"] += 1
         self._queue.append(req)
+        if self._dur is not None:
+            self._dur.on_submit(self, req)       # write-ahead: durable
+            # before any generation can observe the request
         return req.rid
+
+    def _restore_submit(self, req: FleetRequest) -> None:
+        """Journal-replay intake: re-enqueue an already-journaled request
+        without re-journaling it (repro.serve.durability)."""
+        self._next_rid = max(self._next_rid, req.rid + 1)
+        self._tstat(req.tenant)["submitted"] += 1
+        self._queue.append(req)
 
     def update_policy(self, tenant: str,
                       rules: Sequence[PolicyRule]) -> int:
@@ -399,6 +458,8 @@ class FleetServer:
                 req.checkpoint = (state, tr)
         self.policy_updates += 1
         self._tstat(tenant)["policy_updates"] += 1
+        if self._dur is not None:
+            self._dur.on_update_policy(self, tenant, list(rules))
         return n_live
 
     # -- the serving loop -----------------------------------------------------
@@ -418,7 +479,7 @@ class FleetServer:
                 "submitted": 0, "completed": 0, "svc": 0, "deny": 0,
                 "emul": 0, "kill": 0, "enosys": 0, "killed": 0,
                 "preemptions": 0, "evictions": 0, "budget_exhaustions": 0,
-                "policy_updates": 0}
+                "policy_updates": 0, "shed": 0}
         return self._tenants[tenant]
 
     def _charge(self, req: FleetRequest, svc: int, deny: int, emul: int,
@@ -884,10 +945,86 @@ class FleetServer:
             self._slots[self._order[i]] = None
         return results
 
+    def _dispatch(self, ids: np.ndarray) -> None:
+        if self._trace is None:
+            self._states = F.run_fleet_span(
+                self.table.images, self._states, ids,
+                steps=self.gen_steps, chunk=self.chunk)
+        else:
+            self._states, self._trace = F.run_fleet_span(
+                self.table.images, self._states, ids,
+                steps=self.gen_steps, chunk=self.chunk, trace=self._trace)
+
+    def _drop_request(self, req: FleetRequest, reason: str) -> None:
+        """Load-shed one queued request: reject-with-reason, releasing any
+        image-table row its frozen checkpoint still holds."""
+        if req.checkpoint is not None and req.row >= 0:
+            self.table.release(req.row)
+        self.shed.append({"rid": req.rid, "tenant": req.tenant,
+                          "reason": reason, "generation": self.generation})
+        self.shed_requests += 1
+        self._tstat(req.tenant)["shed"] += 1
+        if self._dur is not None:
+            self._dur.on_shed(self, req, reason)
+
+    def _shed_queue(self, reason: str) -> None:
+        """Reject every queued request (retries exhausted: the server
+        cannot currently dispatch, so holding the queue would just
+        time-out clients silently)."""
+        while self._queue:
+            self._drop_request(self._queue.popleft(), reason)
+
+    def _apply_shed(self, rid: int, reason: str) -> None:
+        """Journal-replay twin of a shed record."""
+        for req in list(self._queue):
+            if req.rid == rid:
+                self._queue.remove(req)
+                self._drop_request(req, reason)
+                return
+
+    def _skip_generation(self, reason: str) -> None:
+        """Tick the generation clock without dispatching — the
+        retries-exhausted path.  ``gen_steps`` invariance makes a skipped
+        dispatch semantics-free: lanes just run those steps in a later
+        generation."""
+        self.generation += 1
+        self.idle_generations += 1
+
+    def _replay_skipped_generation(self) -> None:
+        """Journal-replay twin of a skipped generation: the pre-dispatch
+        phases (scheduling, re-bucket, admissions) DID run live before
+        the dispatch gave up, so replay must run them too — otherwise
+        admission timing (``admitted_gen``) would diverge."""
+        if self.sched is not None:
+            self._sched_pass()
+        self._rebucket()
+        self._admit_pending()
+        self._skip_generation("replay")
+
+    def _adopt(self, other: "FleetServer") -> None:
+        """Become ``other`` (a replica recovered from disk): the chaos
+        rollback path.  Durability/chaos wiring and cumulative
+        chaos-era counters stay ours; everything the replay rebuilt —
+        carry, slots, queue, table, scheduler, tenant stats — is taken
+        wholesale."""
+        keep = {"_dur", "_chaos", "retries", "rollbacks", "shed_requests",
+                "recovery_generations", "watchdog_trips"}
+        for k, v in other.__dict__.items():
+            if k not in keep:
+                self.__dict__[k] = v
+
     def step(self) -> List[FleetResult]:
         """One generation: scheduler pass (evict/exhaust/preempt) ->
         re-bucket -> admit -> one bounded dispatch at the occupancy-chosen
-        width -> harvest."""
+        width -> harvest.
+
+        With chaos attached the dispatch is wrapped in a bounded
+        exponential-backoff retry loop: injected faults (raised *before*
+        the dispatch donates its buffers) are retried up to
+        ``cfg.chaos_max_retries`` extra attempts, then the queue is
+        load-shed with a reason and the generation skipped.  With
+        durability attached every generation (dispatched, idle or
+        skipped) is journaled so replay re-walks the same sequence."""
         if self.sched is not None:
             self._sched_pass()
         self._rebucket()
@@ -898,19 +1035,61 @@ class FleetServer:
                 # generation clock so backoffs expire (no dispatch)
                 self.generation += 1
                 self.idle_generations += 1
+                if self._dur is not None:
+                    return self._dur.after_generation(self, [])
             return []
         ids = self._ids[self._order]
-        if self._trace is None:
-            self._states = F.run_fleet_span(
-                self.table.images, self._states, ids,
-                steps=self.gen_steps, chunk=self.chunk)
+        if self._dur is not None:
+            self._dur.before_dispatch(self)
+        skipped = False
+        if self._chaos is None:
+            self._dispatch(ids)
         else:
-            self._states, self._trace = F.run_fleet_span(
-                self.table.images, self._states, ids,
-                steps=self.gen_steps, chunk=self.chunk, trace=self._trace)
-        self.dispatches += 1
-        self.generation += 1
-        return self._harvest()
+            tries, faults = 0, []
+            while True:
+                try:
+                    self._chaos.pre_dispatch(self)
+                    self._dispatch(ids)
+                    if faults:
+                        self._chaos.resolve(faults, "retried")
+                    break
+                except Exception as e:
+                    kind = getattr(e, "chaos_kind", None)
+                    if kind is None:
+                        raise                    # a real error, not chaos
+                    faults.append(e.injection_id)
+                    if kind == "watchdog":
+                        self.watchdog_trips += 1
+                    tries += 1
+                    self.retries += 1
+                    if tries > self.cfg.chaos_max_retries:
+                        self._chaos.resolve(faults, "shed")
+                        self._shed_queue(f"retries_exhausted:{kind}")
+                        skipped = True
+                        break
+                    time.sleep(self.cfg.chaos_backoff_base_ms
+                               * (1 << (tries - 1)) / 1000.0)
+        if skipped:
+            self._skip_generation("retries_exhausted")
+            results: List[FleetResult] = []
+        else:
+            self.dispatches += 1
+            self.generation += 1
+            results = self._harvest()
+        if self._dur is not None:
+            results = self._dur.after_generation(self, results,
+                                                 skipped=skipped)
+        return results
+
+    @classmethod
+    def recover(cls, directory, *, builders: Optional[Dict] = None,
+                chaos=None, fsync: Optional[bool] = None):
+        """Rebuild a crashed durable server from its durability directory;
+        returns ``(server, replayed_results)``.  See
+        :func:`repro.serve.durability.recover`."""
+        from repro.serve import durability as D
+        return D.recover(directory, builders=builders, chaos=chaos,
+                         fsync=fsync)
 
     def run(self, max_generations: int = 1_000_000) -> List[FleetResult]:
         """Serve until the queue and every lane drain; results in
@@ -980,4 +1159,20 @@ class FleetServer:
                               if self.sched is not None else []),
             "quarantine": (self.sched.quarantine.state()
                            if self.sched is not None else None),
+            # durable serving (repro.serve.durability) + chaos injection
+            "durability_enabled": self._dur is not None,
+            "chaos_enabled": self._chaos is not None,
+            "retries": self.retries,
+            "rollbacks": self.rollbacks,
+            "shed_requests": self.shed_requests,
+            "shed": [dict(s) for s in self.shed],
+            "recovery_generations": self.recovery_generations,
+            "watchdog_trips": self.watchdog_trips,
+            "snapshots": (self._dur.snapshots if self._dur else 0),
+            "snapshot_bytes": (self._dur.snapshot_bytes if self._dur else 0),
+            "snapshot_rewrites": (self._dur.snapshot_rewrites
+                                  if self._dur else 0),
+            "journal_records": (self._dur.journal.records
+                                if self._dur and self._dur.journal else 0),
+            "chaos": (self._chaos.summary() if self._chaos else None),
         }

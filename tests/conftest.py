@@ -25,3 +25,10 @@ def pytest_configure(config):
         "preempt/evict/budget checkpoints resume bit-identically, live "
         "update_policy with bit-identical bystanders, quarantine backoff; "
         "scale up via ASC_TEST_EXAMPLES)")
+    config.addinivalue_line(
+        "markers",
+        "durability: durable-serving suites (write-ahead journal torn-tail "
+        "semantics, kill-at-any-generation recovery bit-identity across "
+        "sched+trace+compact, chaos fault injection answered by "
+        "retry/rollback/quarantine/shed, snapshot corruption fallback; "
+        "scale up via ASC_TEST_EXAMPLES)")
