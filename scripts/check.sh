@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # CI-style gate: tier-1, the smoke + serving + trace + compaction +
-# sched + durability tiers, and seconds-long sanity passes — several on
+# sched + stream + durability tiers, and seconds-long sanity passes — several on
 # 2 forced host devices (the sharded serving pool, the lane-partitioned
 # census, a compaction rung, and the durability kill-recover pass) plus
 # the trace-overhead, compaction, scheduler, and durability benchmarks
@@ -27,6 +27,9 @@ ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m compaction
 
 echo "== sched tier (heavier example counts) =="
 ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m sched
+
+echo "== stream tier (heavier example counts) =="
+ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m stream
 
 echo "== durability tier (heavier example counts) =="
 ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m durability

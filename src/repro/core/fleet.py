@@ -85,6 +85,7 @@ N_POLICY_SLOTS = len(TRACE_SYS) + 1
 # UNKNOWN marking an ALLOWed syscall that fell through to -ENOSYS.
 POL_ALLOW, POL_DENY, POL_EMULATE, POL_KILL = 0, 1, 2, 3
 VERDICT_UNKNOWN = 4
+N_VERDICTS = 5
 
 DEFAULT_TRACE_CAP = 64
 
@@ -92,19 +93,34 @@ DEFAULT_TRACE_CAP = 64
 class TraceState(NamedTuple):
     """Per-lane syscall trace ring + policy tables, carried on-device.
 
-    ``buf[b, count[b] % CAP]`` is the next record slot for lane ``b`` —
-    a full ring overwrites oldest-first, ``count`` keeps the lifetime
-    total so the host decoder knows how many records were dropped.
+    ``buf`` is double-buffered: two ``CAP``-row halves per lane.  Lane
+    ``b`` appends into half ``hot[b]`` at row ``(count[b] - base[b]) %
+    CAP`` — ``base`` is the lifetime count at the last half-flip, so a
+    never-flipped carry (``hot == base == 0``) behaves exactly like the
+    classic single ring: a full half overwrites oldest-first and
+    ``count`` keeps the lifetime total so the host decoder knows how
+    many records were dropped.  The streaming pipeline
+    (:func:`run_fleet_stream`, :mod:`repro.trace.stream`) instead flips
+    halves at span boundaries — one cheap [B] meta update, no buffer
+    copy — and harvests the cold half off-device while the hot half
+    keeps filling, which is what makes zero-drop tracing possible at a
+    fixed CAP.
 
     The ``*_count`` verdict counters are the scheduler's feed
     (:mod:`repro.sched`): cheap [B] adds bumped under the svc mask, so
     per-tenant budget accounting harvests one small array per field
     instead of decoding every ring.  ``count`` doubles as the per-lane
     executed-svc total (every svc appends exactly one record).
+    ``hist`` is the analytics feed: per-lane policy-slot x verdict
+    totals bumped by the same masked scatter-add as the record append,
+    so syscall histograms never require decoding a ring at all.
     """
 
-    buf: jnp.ndarray         # int64[B, CAP, REC_WORDS]
+    buf: jnp.ndarray         # int64[B, 2, CAP, REC_WORDS]: hot/cold halves
     count: jnp.ndarray       # int64[B]: records ever produced per lane
+    hot: jnp.ndarray         # int64[B]: the half currently appended to
+    base: jnp.ndarray        # int64[B]: lifetime count at the last flip
+    hist: jnp.ndarray        # int64[B, N_POLICY_SLOTS, N_VERDICTS]
     pol_action: jnp.ndarray  # int32[B, N_POLICY_SLOTS]
     pol_arg: jnp.ndarray     # int64[B, N_POLICY_SLOTS]: errno / constant
     deny_count: jnp.ndarray  # int64[B]: DENY verdicts per lane
@@ -356,10 +372,12 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
         any_svc = jnp.any(m_svc)
         action = tr.pol_action[:, SLOT_UNKNOWN]
         pol_arg = tr.pol_arg[:, SLOT_UNKNOWN]
+        pol_slot = jnp.full((B,), SLOT_UNKNOWN, I64)
         for i, sysnr in enumerate(TRACE_SYS):
             hit = nr == sysnr
             action = jnp.where(hit, tr.pol_action[:, i], action)
             pol_arg = jnp.where(hit, tr.pol_arg[:, i], pol_arg)
+            pol_slot = jnp.where(hit, jnp.int64(i), pol_slot)
         pol_deny = m_svc & (action == POL_DENY)
         pol_emul = m_svc & (action == POL_EMULATE)
         pol_kill = m_svc & (action == POL_KILL)
@@ -593,13 +611,14 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
 
     # -- trace record append (traced path only) ------------------------------
     if traced:
-        cap = tr.buf.shape[1]
+        cap = tr.buf.shape[2]
 
         # Svc steps are rare (one in tens of steps), so the whole record
-        # computation + 8-word row scatter hides behind the same
-        # batch-uniform cond as the policy lookup (like the sigframe push);
-        # parked out-of-bounds indices drop the non-svc lanes.
-        def append(buf):
+        # computation + 8-word row scatter + histogram bump hide behind the
+        # same batch-uniform cond as the policy lookup (like the sigframe
+        # push); parked out-of-bounds indices drop the non-svc lanes.
+        def append(operand):
+            buf, hist = operand
             ret = jnp.select(
                 [pol_deny, pol_emul, pol_kill, sys_exit, sys_sigret],
                 [-pol_arg, pol_arg, zero, x0, frame_in[:, 0]],
@@ -611,19 +630,33 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
                  jnp.full((B,), POL_KILL, I64),
                  jnp.full((B,), VERDICT_UNKNOWN, I64)],
                 zero)  # POL_ALLOW
-            flat = buf.reshape(B * cap, REC_WORDS)
-            pos = (lanes * cap).astype(I64) + tr.count % cap
-            idx = jnp.where(m_svc, pos, jnp.int64(B * cap) + lanes.astype(I64))
+            flat = buf.reshape(B * 2 * cap, REC_WORDS)
+            pos = (lanes * (2 * cap)).astype(I64) + tr.hot * cap \
+                + (tr.count - tr.base) % cap
+            idx = jnp.where(m_svc, pos,
+                            jnp.int64(B * 2 * cap) + lanes.astype(I64))
             rows = jnp.stack([s.icount, pc0, nr, x0, x1, x2, ret, verdict],
                              axis=1)
-            return flat.at[idx].set(rows, mode="drop",
-                                    unique_indices=True).reshape(B, cap,
-                                                                 REC_WORDS)
+            buf = flat.at[idx].set(rows, mode="drop",
+                                   unique_indices=True).reshape(B, 2, cap,
+                                                                REC_WORDS)
+            hflat = hist.reshape(B * N_POLICY_SLOTS * N_VERDICTS)
+            hpos = lanes.astype(I64) * (N_POLICY_SLOTS * N_VERDICTS) \
+                + pol_slot * N_VERDICTS + verdict
+            hidx = jnp.where(m_svc, hpos,
+                             jnp.int64(B * N_POLICY_SLOTS * N_VERDICTS)
+                             + lanes.astype(I64))
+            hist = hflat.at[hidx].add(jnp.int64(1), mode="drop",
+                                      unique_indices=True).reshape(
+                                          B, N_POLICY_SLOTS, N_VERDICTS)
+            return buf, hist
 
-        buf = lax.cond(any_svc, append, lambda b: b, tr.buf)
+        buf, hist = lax.cond(any_svc, append, lambda op: op,
+                             (tr.buf, tr.hist))
         one = jnp.int64(1)
         tr = tr._replace(
-            buf=buf, count=tr.count + jnp.where(m_svc, one, zero),
+            buf=buf, hist=hist,
+            count=tr.count + jnp.where(m_svc, one, zero),
             # the scheduler's budget feed: plain masked adds, cheap enough
             # to live outside the any_svc cond
             deny_count=tr.deny_count + jnp.where(pol_deny, one, zero),
@@ -858,12 +891,16 @@ def _admit_lanes_traced(s: MachineState, tr: TraceState, idx: jnp.ndarray,
     and install its per-request policy tables, same donated-scatter shape as
     the machine-state admission."""
     k = idx.shape[0]
-    cap = tr.buf.shape[1]
+    cap = tr.buf.shape[2]
     zk = jnp.zeros((k,), I64)
     tr = tr._replace(
-        buf=tr.buf.at[idx].set(jnp.zeros((k, cap, REC_WORDS), I64),
+        buf=tr.buf.at[idx].set(jnp.zeros((k, 2, cap, REC_WORDS), I64),
                                mode="drop"),
         count=tr.count.at[idx].set(zk, mode="drop"),
+        hot=tr.hot.at[idx].set(zk, mode="drop"),
+        base=tr.base.at[idx].set(zk, mode="drop"),
+        hist=tr.hist.at[idx].set(
+            jnp.zeros((k, N_POLICY_SLOTS, N_VERDICTS), I64), mode="drop"),
         pol_action=tr.pol_action.at[idx].set(pol_action, mode="drop"),
         pol_arg=tr.pol_arg.at[idx].set(pol_arg, mode="drop"),
         deny_count=tr.deny_count.at[idx].set(zk, mode="drop"),
@@ -1077,6 +1114,133 @@ def run_fleet(imgs, states, img_ids=None, *, chunk: int = DEFAULT_CHUNK,
 
 
 # ---------------------------------------------------------------------------
+# streaming trace harvest: half-flips + overlapped cold-half readback
+# ---------------------------------------------------------------------------
+#
+# The fixed ring drops oldest-first once a lane logs more than CAP records
+# between harvests — on the 400-lane census that is ~47% of all records
+# (BENCH_trace/v1).  The streaming pipeline bounds the un-harvested window
+# instead: at span boundaries the driver flips every lane's hot half (one
+# [B] meta update, the 2xCAP buffer itself is never copied on-device) and
+# gathers the now-cold half into a fresh device buffer whose device->host
+# copy overlaps the next span's dispatch.  As long as a span runs at most
+# CAP steps per lane (worst case one svc per step), a half can never wrap
+# between flips, so every record reaches the host: zero drops at fixed
+# device memory.  Host-side decoding / ordering / sinks live in
+# repro.trace.stream.
+
+def _flip_halves(buf, hot, count):
+    B = hot.shape[0]
+    cold = buf[jnp.arange(B), hot]
+    # count + 0: the new base must be a FRESH buffer — several entry points
+    # donate the whole trace carry, and donating one shared buffer through
+    # two leaves (base aliasing count) is an XLA error.
+    return cold, jnp.int64(1) - hot, count + jnp.int64(0)
+
+
+_jitted_flip_halves = jax.jit(_flip_halves)
+
+
+def flip_trace(trace: TraceState):
+    """Flip every lane's hot half and gather the cold half for harvest.
+
+    Returns ``(trace', cold, counts, bases)``: the updated carry (``hot``
+    toggled, ``base`` advanced to the current lifetime count; ``buf``
+    untouched — stale cold rows are simply overwritten on the next pass),
+    the cold halves as a device array ``int64[B, CAP, REC_WORDS]`` whose
+    host conversion the caller should defer until after dispatching the
+    next span (that is the overlap), and host copies of the pre-flip
+    ``count`` / ``base`` — lane ``b``'s cold half holds records with
+    lifetime sequence numbers ``[bases[b], counts[b])`` (oldest-first from
+    row 0 when it did not wrap).
+    """
+    counts = np.asarray(trace.count)
+    bases = np.asarray(trace.base)
+    cold, new_hot, new_base = _jitted_flip_halves(trace.buf, trace.hot,
+                                                  trace.count)
+    return trace._replace(hot=new_hot, base=new_base), cold, counts, bases
+
+
+def stream_interval(cap: int, chunk: int) -> int:
+    """The widest flip interval (in steps) that still guarantees zero
+    drops when chunk boundaries permit it: the largest multiple of
+    ``chunk`` that is <= ``cap`` (worst case one record per step fills
+    exactly one half between flips).  When ``chunk > cap`` a flip cannot
+    land inside a chunk, so the interval degrades to one chunk — drops
+    are then *possible* for svc-every-step lanes and are detected and
+    counted by the sink, never silent."""
+    if chunk >= cap:
+        return int(chunk)
+    return (cap // chunk) * chunk
+
+
+def run_fleet_stream(imgs, states, img_ids=None, *,
+                     chunk: int = DEFAULT_CHUNK,
+                     trace: TraceState,
+                     stream,
+                     interval: Optional[int] = None,
+                     keys: Optional[Sequence] = None):
+    """:func:`run_fleet` with streaming trace harvest: run every lane to
+    halt in bounded spans, flipping ring halves at each span boundary and
+    pushing the cold halves into ``stream`` (a
+    :class:`repro.trace.stream.TraceStream`).  Machine states are
+    bit-identical to the untraced/plain-traced run; the stream receives
+    every record (zero drops) whenever ``interval <= cap``
+    (:func:`stream_interval`, the default).
+
+    The cold-half device->host copy of span *k* is converted on the host
+    while span *k+1* executes on the device, so streaming costs one small
+    gather + meta update per span, not a synchronous drain.
+
+    ``keys`` names each lane in the stream (default: the lane index).
+    Returns ``(states, trace)``; harvested records live in ``stream``.
+    """
+    imgs = pack_images(imgs)
+    if not isinstance(states, MachineState):
+        states = stack_states(states)
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    n_lanes = int(states.pc.shape[0])
+    if img_ids is None:
+        if int(imgs.packed.shape[0]) != n_lanes:
+            raise ValueError("img_ids required when #images != #lanes")
+        img_ids = jnp.arange(n_lanes, dtype=I32)
+    else:
+        img_ids = jnp.asarray(img_ids, I32)
+    cap = int(trace.buf.shape[2])
+    interval = stream_interval(cap, chunk) if interval is None else \
+        int(interval)
+    if interval < 1:
+        raise ValueError(f"interval must be >= 1, got {interval}")
+    span = -(-interval // chunk)
+    run_span = _jitted_span_traced(int(chunk), int(span))
+    if keys is None:
+        keys = list(range(n_lanes))
+
+    cur_s, cur_t = states, trace
+    pending = None
+    while True:
+        cur_s, cur_t = run_span(imgs, img_ids, cur_s, cur_t)
+        if pending is not None:
+            # decode the PREVIOUS span's cold halves while the device runs
+            # this span — np.asarray here only waits on the old gather
+            stream.push_block(*pending)
+            pending = None
+        halted = np.asarray(cur_s.halted)
+        icount = np.asarray(cur_s.icount)
+        fuel = np.asarray(cur_s.fuel)
+        alive = (halted == RUNNING) & (icount < fuel)
+        cur_t, cold, counts, bases = flip_trace(cur_t)
+        pending = (keys, cold, counts, bases)
+        if not alive.any():
+            break
+    stream.push_block(*pending)
+    cur_s = cur_s._replace(
+        halted=jnp.asarray(finish_halt_codes(halted, icount, fuel)))
+    return cur_s, cur_t
+
+
+# ---------------------------------------------------------------------------
 # live-lane compaction: bucketed re-dispatch over a precompiled ladder
 # ---------------------------------------------------------------------------
 #
@@ -1158,8 +1322,11 @@ def make_empty_trace(n: int, cap: int) -> TraceState:
     """An all-ALLOW, empty-ring trace carry (the device-only counterpart of
     ``repro.trace.recorder.make_trace_state`` for padding/precompile)."""
     return TraceState(
-        buf=jnp.zeros((n, cap, REC_WORDS), I64),
+        buf=jnp.zeros((n, 2, cap, REC_WORDS), I64),
         count=jnp.zeros((n,), I64),
+        hot=jnp.zeros((n,), I64),
+        base=jnp.zeros((n,), I64),
+        hist=jnp.zeros((n, N_POLICY_SLOTS, N_VERDICTS), I64),
         pol_action=jnp.full((n, N_POLICY_SLOTS), POL_ALLOW, I32),
         pol_arg=jnp.zeros((n, N_POLICY_SLOTS), I64),
         deny_count=jnp.zeros((n,), I64),

@@ -91,6 +91,18 @@ class HookConfig:
     # machine states bit-identical to untraced runs).
     trace_enabled: bool = False
     trace_cap: int = 64
+    # Streaming trace pipeline (repro.trace.stream): when trace_stream is
+    # on, a traced FleetServer dispatches each generation in sub-spans of
+    # at most trace_cap steps, flipping the double-buffered rings between
+    # them and draining the cold halves into a host-side TraceStream —
+    # zero dropped records at fixed ring capacity (the classic mode keeps
+    # the single-ring drop-oldest contract).  trace_sink selects the
+    # stream's writer: "" = in-memory reassembly only, "memory" = a
+    # MemoryWriter, anything else = a JSONL file path appended to as
+    # records emit (exactly-once by (key, epoch, seq) across crash
+    # recovery).
+    trace_stream: bool = False
+    trace_sink: str = ""
     # Policy-driven serving scheduler (repro.sched / FleetServer).  The
     # tenant label is the accounting principal: per-tenant verdict counts,
     # syscall/deny budgets, quarantine and live policy updates all key on

@@ -461,6 +461,7 @@ def _server_meta(srv) -> dict:
         "gen_steps": srv.gen_steps, "chunk": srv.chunk,
         "table_capacity": srv.table.capacity, "default_fuel": srv.default_fuel,
         "shard": srv._shard, "trace_enabled": srv.trace_enabled,
+        "stream_enabled": srv.stream_enabled,
         "compact_enabled": srv.compact_enabled,
         "sched": _sched_meta(srv.sched),
     }
@@ -478,6 +479,24 @@ def snapshot_server(srv, *, journal_seq: int) -> Tuple[Dict[str, np.ndarray],
     for req in parked:
         st, tr = req.checkpoint
         arrays.update(F.pack_carry(st, tr, prefix=f"ckpt/{req.rid}/"))
+    arrays["host/hist_total"] = np.asarray(srv._hist_total, np.int64)
+    # streaming trace pipeline: buffered (not-yet-published) rows plus the
+    # per-key emission watermarks, so a recovered stream neither re-emits
+    # nor loses a record (see recover()'s priming pass)
+    stream_meta = None
+    if srv._stream is not None:
+        s = srv._stream
+        stream_meta = {
+            "counters": {"records_seen": s.records_seen,
+                         "records_emitted": s.records_emitted,
+                         "records_dropped": s.records_dropped,
+                         "flips": s.flips},
+            "keys": [],
+        }
+        for key in s.keys():
+            ex = s.export_key(key)
+            arrays[f"stream/{key}"] = np.asarray(ex.pop("rows"), np.int64)
+            stream_meta["keys"].append([key, ex])
     meta = _server_meta(srv)
     memo: Dict[int, str] = {}    # digest once per distinct image
     meta.update({
@@ -497,6 +516,7 @@ def snapshot_server(srv, *, journal_seq: int) -> Tuple[Dict[str, np.ndarray],
         "tenants": {t: dict(v) for t, v in srv._tenants.items()},
         "wait_gens": list(srv._wait_gens), "wait_s": list(srv._wait_s),
         "shed": list(srv.shed),
+        "stream": stream_meta,
         "table": {
             "capacity": srv.table.capacity,
             "row_digest": [d.hex() if d is not None else None
@@ -530,6 +550,16 @@ def _apply_snapshot(srv, arrays: Dict[str, np.ndarray], meta: dict, *,
     srv._next_rid = int(meta["next_rid"])
     for k, v in meta["counters"].items():
         setattr(srv, k, v)
+    if "host/hist_total" in arrays:
+        srv._hist_total = np.asarray(arrays["host/hist_total"],
+                                     np.int64).copy()
+    sm = meta.get("stream")
+    if sm is not None and srv._stream is not None:
+        for k, v in sm["counters"].items():
+            setattr(srv._stream, k, v)
+        for key, ex in sm["keys"]:
+            srv._stream.restore_key(int(key),
+                                    rows=arrays[f"stream/{key}"], **ex)
     srv._tenants = {t: dict(v) for t, v in meta["tenants"].items()}
     srv._wait_gens = list(meta["wait_gens"])
     srv._wait_s = list(meta["wait_s"])
@@ -692,8 +722,15 @@ class DurabilityManager:
         (chaos-mode) replay-verify then write a snapshot.  Returns the
         results to publish — possibly extended with a corrected window
         after a rollback."""
-        self.journal.append("gen", gen=srv.generation - 1,
-                            rids=[r.rid for r in results], skipped=skipped)
+        fields = dict(gen=srv.generation - 1,
+                      rids=[r.rid for r in results], skipped=skipped)
+        if srv._stream is not None:
+            # per-key emission watermarks: recover() primes the rebuilt
+            # stream with these so replayed pushes re-buffer rows for
+            # result assembly without re-emitting them to the sink
+            fields["stream_hwm"] = {str(k): v for k, v in
+                                    srv._stream.hwm_map().items()}
+        self.journal.append("gen", **fields)
         self.journal.commit()
         if (self._interval and
                 srv.generation - self._last_snapshot_gen >= self._interval):
@@ -813,7 +850,9 @@ def recover(directory: str | pathlib.Path, *,
             gen_steps=meta["gen_steps"], chunk=meta["chunk"],
             table_capacity=meta["table_capacity"],
             fuel=meta["default_fuel"], shard=meta["shard"],
-            trace=meta["trace_enabled"], compact=meta["compact_enabled"],
+            trace=meta["trace_enabled"],
+            stream=meta.get("stream_enabled", False),
+            compact=meta["compact_enabled"],
             scheduler=_scheduler_from_meta(meta["sched"]))
         _apply_snapshot(srv, arrays, meta, store=store, builders=builders)
         start_seq = int(meta["journal_seq"])
@@ -828,12 +867,31 @@ def recover(directory: str | pathlib.Path, *,
             gen_steps=om["gen_steps"], chunk=om["chunk"],
             table_capacity=om["table_capacity"], fuel=om["default_fuel"],
             shard=om["shard"], trace=om["trace_enabled"],
+            stream=om.get("stream_enabled", False),
             compact=om["compact_enabled"],
             scheduler=_scheduler_from_meta(om["sched"]))
         if om["sched"] is not None:
             _restore_sched_state(srv.sched, om["sched"])
         start_seq = records[0]["seq"]
         last_snapshot_gen = 0
+
+    # prime the stream's emission watermarks with the highest (epoch, hwm)
+    # the dead server journaled AFTER the restored snapshot, so the tail
+    # replay re-buffers rows for result assembly without re-emitting them
+    # to the sink (requests that published inside the tail ARE re-emitted
+    # under the same (key, epoch, seq) — the line-level at-least-once,
+    # key-level exactly-once contract of repro.trace.stream)
+    if getattr(srv, "_stream", None) is not None:
+        prime: Dict[int, list] = {}
+        for rec in records:
+            if rec["seq"] <= start_seq or rec["kind"] != "gen":
+                continue
+            for k, eh in (rec.get("stream_hwm") or {}).items():
+                cur = prime.get(int(k))
+                if cur is None or tuple(eh) > tuple(cur):
+                    prime[int(k)] = eh
+        if prime:
+            srv._stream.prime(prime)
 
     # replay the tail
     cache: Dict[tuple, PreparedProcess] = {}

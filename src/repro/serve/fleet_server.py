@@ -81,6 +81,7 @@ from repro.core.runtime import (FleetImageTable, Mechanism, PreparedProcess,
 from repro.sched.scheduler import PolicyScheduler
 from repro.trace import policy as trace_policy
 from repro.trace import recorder as trace_recorder
+from repro.trace import stream as trace_stream
 
 AppBuilder = Callable[[], Asm]
 
@@ -138,6 +139,9 @@ class FleetResult:
     trace: List[trace_recorder.TraceRecord] = dataclasses.field(
         default_factory=list)
     trace_dropped: int = 0             # ring overflow: oldest records lost
+    # per-syscall x per-verdict totals from the on-device hist plane
+    # ({name: {verdict: n}}, traced servers only) — never decodes a ring
+    histogram: Dict = dataclasses.field(default_factory=dict)
     tenant: str = ""
     preemptions: int = 0               # scheduler checkpoint/resume cycles
 
@@ -158,6 +162,7 @@ class FleetServer:
                  table_capacity: Optional[int] = None,
                  fuel: int = 2_000_000, shard: bool = False,
                  trace: Optional[bool] = None,
+                 stream: Optional[bool] = None,
                  compact: Optional[bool] = None,
                  scheduler: Optional[PolicyScheduler] = None,
                  durability=None, chaos=None):
@@ -173,6 +178,12 @@ class FleetServer:
         self.default_fuel = fuel
         self.trace_enabled = bool(self.cfg.trace_enabled if trace is None
                                   else trace)
+        self.stream_enabled = bool(self.cfg.trace_stream if stream is None
+                                   else stream)
+        if self.stream_enabled and not self.trace_enabled:
+            raise ValueError(
+                "streaming needs the trace carry: enable tracing too "
+                "(FleetServer(trace=True) or cfg.trace_enabled)")
         self.compact_enabled = bool(self.cfg.compact_enabled if compact is None
                                     else compact)
         self.table = FleetImageTable(table_capacity or pool + 8)
@@ -252,6 +263,17 @@ class FleetServer:
         self._trace = (trace_recorder.make_trace_state(pool,
                                                        self.cfg.trace_cap)
                        if self.trace_enabled else None)
+        # streaming trace pipeline: generations dispatch in <= trace_cap
+        # step sub-spans with a half-flip + overlapped cold-half drain
+        # between them, so rings never wrap and results publish from the
+        # host-side stream instead of the on-device ring
+        self._stream = (trace_stream.TraceStream(
+            [trace_stream.make_writer(self.cfg.trace_sink)])
+            if self.stream_enabled else None)
+        # per-syscall x per-verdict totals of published requests, summed
+        # from the on-device hist planes (no ring decode)
+        self._hist_total = np.zeros((F.N_POLICY_SLOTS, F.N_VERDICTS),
+                                    np.int64)
         # one dummy per unused admission slot: admissions are padded to the
         # current bucket width so the donated scatter compiles once per rung
         self._pad_state = M.make_state(0, fuel=0)
@@ -657,7 +679,7 @@ class FleetServer:
         if self._trace is None:
             self._states = F.concat_lanes(self._states, pad_s)
         else:
-            pad_t = F.make_empty_trace(add, self._trace.buf.shape[1])
+            pad_t = F.make_empty_trace(add, self._trace.buf.shape[2])
             self._states, self._trace = F.concat_lanes(
                 (self._states, self._trace), (pad_s, pad_t))
         self._order = np.concatenate([self._order, np.asarray(new_slots)])
@@ -840,8 +862,13 @@ class FleetServer:
         if done.any():  # one transfer per field, only when publishing
             enosys = np.asarray(self._states.enosys_count)
             if self._trace is not None:
-                trace_buf = np.asarray(self._trace.buf)
+                if self._stream is None:
+                    # classic mode decodes rings from the carry; streamed
+                    # lanes publish from the TraceStream, so the (large)
+                    # double-buffer transfer is skipped entirely
+                    trace_buf = np.asarray(self._trace.buf)
                 trace_cnt = np.asarray(self._trace.count)
+                trace_hist = np.asarray(self._trace.hist)
                 trace_deny = np.asarray(self._trace.deny_count)
                 trace_emul = np.asarray(self._trace.emul_count)
                 trace_kill = np.asarray(self._trace.kill_count)
@@ -896,6 +923,11 @@ class FleetServer:
                     self.discarded_steps += int(icount[i])
                     self._readmit.append(req)
                     self._readmit_rids.add(req.rid)
+                    if self._stream is not None:
+                        # the published trace must hold only the final
+                        # attempt's records; the epoch bump keeps sink
+                        # dedup correct across attempts
+                        self._stream.reset(req.rid)
                     # a C3 recycle restarts the attempt from scratch and
                     # its ring counters reset with it: roll any usage the
                     # discarded attempt already charged (at a preemption /
@@ -907,19 +939,31 @@ class FleetServer:
             lane = F.unstack_state(self._states, i)
             if patched[i] != halted[i]:  # ran out of fuel mid-generation
                 lane = lane._replace(halted=jnp.int64(int(patched[i])))
-            recs, dropped = ([], 0) if self._trace is None else \
-                trace_recorder.harvest_lane(trace_buf[i], trace_cnt[i])
+            if self._trace is None:
+                recs, dropped = [], 0
+                hist = {}
+            else:
+                if self._stream is not None:
+                    # streamed dispatch ends every generation with a flip,
+                    # so the lane's full record stream already sits in the
+                    # sink — publish is a pop, not a device decode
+                    recs, dropped = self._stream.pop(req.rid)
+                else:
+                    recs, dropped = trace_recorder.harvest_lane(
+                        trace_buf[i], trace_cnt[i])
+                hist = trace_recorder.lane_histogram(trace_hist[i])
+                self._hist_total += trace_hist[i]
             results.append(FleetResult(
                 rid=req.rid, state=lane, events=req.events,
                 attempts=req.attempts, submitted_gen=req.submitted_gen,
                 admitted_gen=req.admitted_gen, completed_gen=self.generation,
                 admission_wait_gens=req.admitted_gen - req.submitted_gen,
                 admission_wait_s=req.admitted_s - req.submitted_s,
-                trace=recs, trace_dropped=dropped, tenant=req.tenant,
-                preemptions=req.preemptions))
+                trace=recs, trace_dropped=dropped, histogram=hist,
+                tenant=req.tenant, preemptions=req.preemptions))
             self.harvested_steps += int(icount[i])
             self.enosys_total += int(enosys[i])
-            self.trace_records += len(recs) + dropped
+            self.trace_records += len(recs)
             self.trace_dropped += dropped
             self.completed += 1
             if self._trace is not None:
@@ -950,16 +994,48 @@ class FleetServer:
             self._states = F.run_fleet_span(
                 self.table.images, self._states, ids,
                 steps=self.gen_steps, chunk=self.chunk)
-        else:
+        elif self._stream is None:
             self._states, self._trace = F.run_fleet_span(
                 self.table.images, self._states, ids,
                 steps=self.gen_steps, chunk=self.chunk, trace=self._trace)
+        else:
+            self._dispatch_streamed(ids)
+
+    def _dispatch_streamed(self, ids: np.ndarray) -> None:
+        """The generation as sub-spans of at most ``trace_cap`` steps with
+        a ring half-flip between them: a half can never wrap inside a
+        sub-span (worst case one record per step), so every record reaches
+        the stream — zero drops at fixed ring capacity.  Each cold half's
+        host conversion is deferred until after the NEXT sub-span's
+        dispatch, so the device->host copy overlaps device compute."""
+        interval = F.stream_interval(self.cfg.trace_cap, self.chunk)
+        keys = [self._slots[self._order[p]].rid
+                if self._slots[self._order[p]] is not None else None
+                for p in range(self._W)]
+        left = self.gen_steps
+        pending = None
+        while left > 0:
+            steps = min(interval, left)
+            self._states, self._trace = F.run_fleet_span(
+                self.table.images, self._states, ids,
+                steps=steps, chunk=self.chunk, trace=self._trace)
+            if pending is not None:
+                self._stream.push_block(keys, *pending)
+            self._trace, cold, counts, bases = F.flip_trace(self._trace)
+            pending = (cold, counts, bases)
+            left -= steps
+        self._stream.push_block(keys, *pending)
+        # writers land before durability journals the emission watermarks,
+        # so a recovered server never re-emits what a sink already holds
+        self._stream.flush()
 
     def _drop_request(self, req: FleetRequest, reason: str) -> None:
         """Load-shed one queued request: reject-with-reason, releasing any
         image-table row its frozen checkpoint still holds."""
         if req.checkpoint is not None and req.row >= 0:
             self.table.release(req.row)
+        if self._stream is not None:
+            self._stream.pop(req.rid)  # release any buffered records
         self.shed.append({"rid": req.rid, "tenant": req.tenant,
                           "reason": reason, "generation": self.generation})
         self.shed_requests += 1
@@ -1109,6 +1185,34 @@ class FleetServer:
             raise err
         return out
 
+    def follow(self, max_generations: int = 1_000_000):
+        """Serve like :meth:`run` but yield strace-style lines live, in
+        emission order across the whole fleet — the ``strace -f`` view of
+        a streamed server.  Each generation's flipped halves drain into
+        the stream sink and are rendered as ``[rid <key>] <record>``
+        between steps, so lines appear while other requests are still
+        executing.  Requires streaming (``trace_stream`` / ``stream=``).
+
+        Published results accumulate on ``self.follow_results`` (completion
+        order, same :class:`FleetResult` objects :meth:`run` would return),
+        since the generator's yields are spoken for by the trace lines."""
+        if self._stream is None:
+            raise ValueError("follow() needs the streaming pipeline: "
+                             "construct with stream=True (or set "
+                             "cfg.trace_stream)")
+        self._stream.enable_follow()
+        self.follow_results: List[FleetResult] = []
+        for _ in range(max_generations):
+            if (not self._queue and not self._readmit
+                    and all(r is None for r in self._slots)):
+                break
+            self.follow_results.extend(self.step())
+            for key, seq, rec in self._stream.drain_follow():
+                yield f"[rid {key}] " + trace_recorder.format_record(rec)
+        else:
+            raise RuntimeError(f"max_generations ({max_generations}) "
+                               f"exceeded in follow()")
+
     # -- telemetry ------------------------------------------------------------
 
     def stats(self) -> dict:
@@ -1130,6 +1234,11 @@ class FleetServer:
             "trace_enabled": self.trace_enabled,
             "trace_records": self.trace_records,
             "trace_dropped": self.trace_dropped,
+            "trace_stream": self.stream_enabled,
+            "stream": (self._stream.stats()
+                       if self._stream is not None else {}),
+            "trace_histogram": trace_recorder.lane_histogram(
+                self._hist_total),
             "compact_enabled": self.compact_enabled,
             "ladder": list(self._ladder),
             "bucket_width": self._W,

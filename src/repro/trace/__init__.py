@@ -4,35 +4,48 @@ The paper motivates hooks with tools that "modify or monitor application
 behavior"; this package is both canonical consumers, running *inside* the
 one-dispatch batched fleet path:
 
-* :mod:`repro.trace.recorder` — strace's role: per-lane fixed-capacity
+* :mod:`repro.trace.recorder` — strace's role: per-lane double-buffered
   on-device ring buffers of executed syscalls, appended in the batched
-  step with no host syncs, decoded host-side into strace-like text.
+  step with no host syncs, decoded host-side into strace-like text, plus
+  per-syscall x per-verdict histogram counters maintained on device.
 * :mod:`repro.trace.policy` — seccomp's role: per-lane ALLOW / DENY /
   EMULATE / KILL tables compiled from :class:`repro.core.hookcfg.PolicyRule`
   lines and enforced by select masks in the step.
+* :mod:`repro.trace.stream` — the zero-drop streaming pipeline: ring
+  halves flipped at span boundaries (:func:`repro.core.fleet.flip_trace`)
+  drain into a host-side :class:`TraceStream` with pluggable writers, so
+  no record is ever overwritten at fixed ring capacity.
 
 Entry points: ``run_fleet(..., trace=...)`` / ``run_fleet_span`` /
-``FleetServer(trace=True)`` + ``submit(policy=[...])``; build the carry
-with :func:`recorder.make_trace_state` or ``runtime.pack_fleet(trace=True)``.
+``run_fleet_stream`` / ``FleetServer(trace=True, stream=True)`` +
+``submit(policy=[...])``; build the carry with
+:func:`recorder.make_trace_state` or ``runtime.pack_fleet(trace=True)``.
 Tracing is architecturally invisible — machine states under the default
 all-ALLOW policy are bit-identical to untraced runs (tests/test_trace.py).
 """
-from repro.core.fleet import (DEFAULT_TRACE_CAP, N_POLICY_SLOTS, POL_ALLOW,
-                              POL_DENY, POL_EMULATE, POL_KILL, REC_WORDS,
-                              SLOT_UNKNOWN, TRACE_SYS, TraceState,
-                              VERDICT_UNKNOWN)
+from repro.core.fleet import (DEFAULT_TRACE_CAP, N_POLICY_SLOTS, N_VERDICTS,
+                              POL_ALLOW, POL_DENY, POL_EMULATE, POL_KILL,
+                              REC_WORDS, SLOT_UNKNOWN, TRACE_SYS, TraceState,
+                              VERDICT_UNKNOWN, flip_trace, run_fleet_stream,
+                              stream_interval)
 from repro.core.hookcfg import PolicyRule
 from repro.trace.policy import (ALLOW_ALL, Action, allow, compile_policy,
                                 deny, emulate, kill, policy_rows)
-from repro.trace.recorder import (VERDICT_NAMES, TraceRecord, format_record,
-                                  format_strace, harvest, harvest_lane,
+from repro.trace.recorder import (VERDICT_NAMES, TraceRecord, decode_rows,
+                                  format_record, format_strace, harvest,
+                                  harvest_lane, lane_histogram,
                                   make_trace_state)
+from repro.trace.stream import (CallbackWriter, JSONLWriter, MemoryWriter,
+                                TraceStream, make_writer)
 
 __all__ = [
-    "ALLOW_ALL", "Action", "DEFAULT_TRACE_CAP", "N_POLICY_SLOTS",
+    "ALLOW_ALL", "Action", "CallbackWriter", "DEFAULT_TRACE_CAP",
+    "JSONLWriter", "MemoryWriter", "N_POLICY_SLOTS", "N_VERDICTS",
     "POL_ALLOW", "POL_DENY", "POL_EMULATE", "POL_KILL", "PolicyRule",
     "REC_WORDS", "SLOT_UNKNOWN", "TRACE_SYS", "TraceRecord", "TraceState",
-    "VERDICT_NAMES", "VERDICT_UNKNOWN", "allow", "compile_policy", "deny",
-    "emulate", "format_record", "format_strace", "harvest", "harvest_lane",
-    "kill", "make_trace_state", "policy_rows",
+    "TraceStream", "VERDICT_NAMES", "VERDICT_UNKNOWN", "allow",
+    "compile_policy", "decode_rows", "deny", "emulate", "flip_trace",
+    "format_record", "format_strace", "harvest", "harvest_lane", "kill",
+    "lane_histogram", "make_trace_state", "make_writer", "policy_rows",
+    "run_fleet_stream", "stream_interval",
 ]

@@ -23,15 +23,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import layout as L
-from repro.core.fleet import (DEFAULT_TRACE_CAP, POL_ALLOW, POL_DENY,
-                              POL_EMULATE, POL_KILL, REC_WORDS, TraceState,
-                              VERDICT_UNKNOWN)
+from repro.core.fleet import (DEFAULT_TRACE_CAP, N_POLICY_SLOTS, N_VERDICTS,
+                              POL_ALLOW, POL_DENY, POL_EMULATE, POL_KILL,
+                              REC_WORDS, TraceState, VERDICT_UNKNOWN)
 from repro.trace.policy import ALLOW_ALL, policy_rows
 
 VERDICT_NAMES = {POL_ALLOW: "ALLOW", POL_DENY: "DENY", POL_EMULATE: "EMULATE",
                  POL_KILL: "KILL", VERDICT_UNKNOWN: "UNKNOWN"}
 
-# (name, number of x0.. arguments shown) per modelled syscall
+# (name, number of x0.. arguments shown) per syscall.  The first block is
+# the modelled surface (repro.core.fleet.TRACE_SYS); the rest are common
+# AArch64 numbers an unmodelled guest may still issue (they execute as the
+# -ENOSYS fall-through but should render under their real name and arity
+# rather than the generic 3-arg "syscall_NNN" form).
 _SYS_SIG = {
     L.SYS_READ: ("read", 3),
     L.SYS_WRITE: ("write", 3),
@@ -40,9 +44,48 @@ _SYS_SIG = {
     L.SYS_RT_SIGRETURN: ("rt_sigreturn", 0),
     L.SYS_OPENAT: ("openat", 3),
     L.SYS_CLOSE: ("close", 1),
+    # unmodelled-but-named AArch64 numbers (arity per the syscall table)
+    17: ("getcwd", 2),
+    23: ("dup", 1),
+    25: ("fcntl", 3),
+    29: ("ioctl", 3),
+    35: ("unlinkat", 3),
+    48: ("faccessat", 3),
+    62: ("lseek", 3),
+    66: ("writev", 3),
+    78: ("readlinkat", 3),
+    79: ("fstatat", 3),
+    80: ("fstat", 2),
+    94: ("exit_group", 1),
+    96: ("set_tid_address", 1),
+    98: ("futex", 3),
+    101: ("nanosleep", 2),
+    113: ("clock_gettime", 2),
+    129: ("kill", 2),
+    134: ("rt_sigaction", 3),
+    135: ("rt_sigprocmask", 3),
+    160: ("uname", 1),
+    169: ("gettimeofday", 2),
+    174: ("getuid", 0),
+    175: ("geteuid", 0),
+    178: ("gettid", 0),
+    214: ("brk", 1),
+    215: ("munmap", 2),
+    220: ("clone", 3),
+    221: ("execve", 3),
+    222: ("mmap", 3),
+    226: ("mprotect", 3),
+    260: ("wait4", 3),
+    278: ("getrandom", 3),
+    291: ("statx", 3),
 }
 
-_ERRNO_NAMES = {1: "EPERM", 13: "EACCES", 14: "EFAULT", 38: "ENOSYS"}
+_ERRNO_NAMES = {
+    1: "EPERM", 2: "ENOENT", 4: "EINTR", 5: "EIO", 9: "EBADF", 11: "EAGAIN",
+    12: "ENOMEM", 13: "EACCES", 14: "EFAULT", 16: "EBUSY", 17: "EEXIST",
+    20: "ENOTDIR", 21: "EISDIR", 22: "EINVAL", 28: "ENOSPC", 32: "EPIPE",
+    34: "ERANGE", 38: "ENOSYS", 110: "ETIMEDOUT",
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,8 +120,11 @@ def make_trace_state(n_lanes: int, cap: int = DEFAULT_TRACE_CAP, *,
         assert len(policies) == n_lanes
         pa, pg = policy_rows(policies)
     return TraceState(
-        buf=jnp.zeros((n_lanes, cap, REC_WORDS), jnp.int64),
+        buf=jnp.zeros((n_lanes, 2, cap, REC_WORDS), jnp.int64),
         count=jnp.zeros((n_lanes,), jnp.int64),
+        hot=jnp.zeros((n_lanes,), jnp.int64),
+        base=jnp.zeros((n_lanes,), jnp.int64),
+        hist=jnp.zeros((n_lanes, N_POLICY_SLOTS, N_VERDICTS), jnp.int64),
         pol_action=jnp.asarray(pa, jnp.int32),
         pol_arg=jnp.asarray(pg, jnp.int64),
         deny_count=jnp.zeros((n_lanes,), jnp.int64),
@@ -87,21 +133,34 @@ def make_trace_state(n_lanes: int, cap: int = DEFAULT_TRACE_CAP, *,
     )
 
 
+def decode_rows(rows: np.ndarray) -> List[TraceRecord]:
+    """int64[N, REC_WORDS] -> records, via ONE bulk ``tolist`` conversion
+    instead of N x REC_WORDS scalar ``int()`` round-trips (the serving
+    harvest hot path)."""
+    return [TraceRecord(*r) for r in np.asarray(rows).tolist()]
+
+
 def harvest_lane(buf: np.ndarray, count: int) -> Tuple[List[TraceRecord], int]:
-    """Decode one lane's ring (``buf`` = int64[CAP, REC_WORDS], ``count`` =
-    lifetime records) into oldest-first records plus the dropped count.
+    """Decode one lane's ring (``buf`` = int64[CAP, REC_WORDS] — one half —
+    or the full int64[2, CAP, REC_WORDS] double buffer of a never-flipped
+    lane, whose hot half is half 0; ``count`` = lifetime records) into
+    oldest-first records plus the dropped count.
 
     When the ring wrapped, the oldest surviving record sits at
-    ``count % cap`` — the slot the next append would overwrite.
+    ``count % cap`` — the slot the next append would overwrite.  Flipped
+    (streamed) lanes are not decodable from the carry alone; their records
+    live in the :class:`repro.trace.stream.TraceStream` sink.
     """
+    buf = np.asarray(buf)
+    if buf.ndim == 3:          # [2, CAP, REC_WORDS]: the un-flipped hot half
+        buf = buf[0]
     cap = buf.shape[0]
     count = int(count)
     dropped = max(0, count - cap)
     n = min(count, cap)
     start = count % cap if count > cap else 0
-    order = [(start + i) % cap for i in range(n)]
-    recs = [TraceRecord(*(int(v) for v in buf[i])) for i in order]
-    return recs, dropped
+    order = (start + np.arange(n)) % cap
+    return decode_rows(buf[order]), dropped
 
 
 def harvest(trace: TraceState) -> List[Tuple[List[TraceRecord], int]]:
@@ -109,6 +168,23 @@ def harvest(trace: TraceState) -> List[Tuple[List[TraceRecord], int]]:
     buf = np.asarray(trace.buf)
     count = np.asarray(trace.count)
     return [harvest_lane(buf[i], count[i]) for i in range(buf.shape[0])]
+
+
+def lane_histogram(hist: np.ndarray) -> dict:
+    """One lane's on-device ``hist`` plane (int64[N_POLICY_SLOTS,
+    N_VERDICTS]) as ``{syscall name: {verdict name: n}}``, zero rows
+    elided — the analytics view that never touches a ring."""
+    from repro.core.fleet import SLOT_UNKNOWN, TRACE_SYS
+    h = np.asarray(hist)
+    out = {}
+    for slot in range(h.shape[0]):
+        if not h[slot].any():
+            continue
+        name = (_SYS_SIG[TRACE_SYS[slot]][0] if slot < SLOT_UNKNOWN
+                else "unknown")
+        out[name] = {VERDICT_NAMES[v]: int(h[slot, v])
+                     for v in range(h.shape[1]) if h[slot, v]}
+    return out
 
 
 def _fmt_ret(r: TraceRecord) -> str:
@@ -123,9 +199,14 @@ def _fmt_ret(r: TraceRecord) -> str:
 def format_record(r: TraceRecord) -> str:
     """One strace-like line, annotated with the non-ALLOW verdict."""
     sig = _SYS_SIG.get(r.nr)
-    nargs = sig[1] if sig else 3
-    args = ", ".join(f"{v:#x}" if i == 1 and nargs >= 3 else str(v)
-                     for i, v in enumerate((r.x0, r.x1, r.x2)[:nargs]))
+    if sig:
+        nargs = sig[1]
+        args = ", ".join(f"{v:#x}" if i == 1 and nargs >= 3 else str(v)
+                         for i, v in enumerate((r.x0, r.x1, r.x2)[:nargs]))
+    else:
+        # unknown number: the arity is unknown, so render every captured
+        # register defensively in hex rather than guessing types
+        args = ", ".join(f"{v:#x}" for v in (r.x0, r.x1, r.x2))
     line = f"{r.name}({args}) = {_fmt_ret(r)}"
     if r.verdict == POL_DENY:
         line += "  <denied by policy>"

@@ -27,6 +27,12 @@ def pytest_configure(config):
         "scale up via ASC_TEST_EXAMPLES)")
     config.addinivalue_line(
         "markers",
+        "stream: streaming trace pipeline suites (zero-drop property across "
+        "mechanism x workload x chunk x compaction, flip-boundary "
+        "bit-identity, TraceStream reassembly/writers/follow ordering, "
+        "on-device histogram correctness; scale up via ASC_TEST_EXAMPLES)")
+    config.addinivalue_line(
+        "markers",
         "durability: durable-serving suites (write-ahead journal torn-tail "
         "semantics, kill-at-any-generation recovery bit-identity across "
         "sched+trace+compact, chaos fault injection answered by "

@@ -528,3 +528,90 @@ def test_stats_durability_counters(tmp_path):
     plain = FleetServer(2, gen_steps=48, fuel=FUEL)
     ps = plain.stats()
     assert not ps["durability_enabled"] and ps["snapshots"] == 0
+
+
+# -- streaming trace pipeline x durability ------------------------------------
+
+def _mk_stream_server(directory, *, interval=3, sink=""):
+    cfg = HookConfig(trace_enabled=True, trace_stream=True, trace_sink=sink,
+                     compact_enabled=True, snapshot_interval=interval,
+                     journal_fsync=False)
+    dur = DurabilityManager(directory) if directory is not None else None
+    return FleetServer(4, cfg=cfg, gen_steps=48, fuel=FUEL, durability=dur)
+
+
+def _stream_feed(srv):
+    for _ in range(2):
+        srv.submit(programs.getpid_loop, mechanism=Mechanism.ASC,
+                   virtualize=True, fuel=FUEL)
+        srv.submit(BUILDERS["dur-mixed"], mechanism=Mechanism.SIGNAL,
+                   virtualize=True, fuel=FUEL)
+        srv.submit(programs.read_loop, mechanism=Mechanism.PTRACE,
+                   virtualize=True, fuel=FUEL)
+
+
+def _rec_tuple(t):
+    return (t.step, t.pc, t.nr, t.x0, t.x1, t.x2, t.ret, t.verdict)
+
+
+def _sink_streams(path):
+    """Per-key record streams a crash-tolerant JSONL reader reconstructs:
+    dedup by (key, epoch, seq), keep the highest epoch per key."""
+    per_key = {}
+    for line in pathlib.Path(path).read_text().splitlines():
+        o = json.loads(line)
+        per_key.setdefault(o["key"], {})[(o["epoch"], o["seq"])] = \
+            (o["step"], o["pc"], o["nr"], o["x0"], o["x1"], o["x2"],
+             o["ret"], o["verdict"])
+    out = {}
+    for key, m in per_key.items():
+        top = max(e for e, _ in m)
+        seqs = sorted(q for e, q in m if e == top)
+        # exactly-once: the surviving epoch's sequence space is contiguous
+        # from 0 — no duplicate entry, no hole
+        assert seqs == list(range(len(seqs))), (key, seqs)
+        out[key] = [m[(top, q)] for q in seqs]
+    return out
+
+
+@settings(**_SETTINGS)
+@given(kill_gen=st.integers(min_value=1, max_value=30))
+def test_stream_kill_anywhere_replays_exact_record_stream(kill_gen):
+    """Kill a STREAMING durable server between a generation's cold-half
+    drain and the next snapshot (every non-boundary kill_gen lands
+    there): recovery must republish the exact per-request record streams
+    — zero drops, no duplicate, no hole — and the JSONL sink must dedup
+    to the uninterrupted run's streams by (key, epoch, seq)."""
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix="asc-streamkill-"))
+    try:
+        ref = _mk_stream_server(tmp / "ref", sink=str(tmp / "ref.jsonl"))
+        _stream_feed(ref)
+        ref_out = {r.rid: r for r in _drain(ref)}
+
+        vic = _mk_stream_server(tmp / "vic", sink=str(tmp / "vic.jsonl"))
+        _stream_feed(vic)
+        pre = []
+        for _ in range(kill_gen):
+            if (not vic._queue and not vic._readmit
+                    and all(r is None for r in vic._slots)):
+                break                    # drained before the kill point
+            pre.extend(vic.step())
+        del vic                          # the crash
+
+        srv, replayed = FleetServer.recover(tmp / "vic")
+        post = _drain(srv)
+        union = {}
+        for r in pre + replayed + post:  # at-least-once: last wins by rid
+            union[r.rid] = r
+        assert set(union) == set(ref_out), f"kill={kill_gen}"
+        for rid, r in ref_out.items():
+            got = union[rid]
+            assert [_rec_tuple(t) for t in got.trace] == \
+                [_rec_tuple(t) for t in r.trace], f"kill={kill_gen} rid={rid}"
+            assert got.trace_dropped == r.trace_dropped == 0
+            assert got.histogram == r.histogram
+        assert srv.stats()["stream"]["records_dropped"] == 0
+        assert _sink_streams(tmp / "vic.jsonl") == \
+            _sink_streams(tmp / "ref.jsonl"), f"kill={kill_gen}"
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)

@@ -1,0 +1,460 @@
+"""Streaming trace pipeline (marked ``stream``).
+
+The tentpole property: at FIXED ring capacity, the streamed pipeline
+(double-buffered rings flipped at span boundaries, cold halves drained
+into a host-side :class:`repro.trace.stream.TraceStream`) captures EVERY
+record — zero drops — for any mechanism, workload, chunk size and
+compaction setting, while the machine states stay bit-identical to the
+untraced fleet (flips are pure bookkeeping).  Around it: TraceStream
+reassembly order and exact drop accounting when a half does wrap, writer
+plumbing (memory / JSONL / callback) with the ``(key, epoch, seq)``
+exactly-once contract, C3 epoch bumps, ``FleetServer.follow()`` live
+ordering, on-device histogram correctness, and the ``trace_records``
+captured-only accounting fix.
+"""
+import collections
+import json
+import os
+
+import numpy as np
+import pytest
+from _hyp_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import (HookConfig, Mechanism, fleet, layout as L,
+                        pack_fleet, prepare, programs, run_fleet_prepared,
+                        unstack_state)
+from repro.serve.fleet_server import FleetServer
+from repro.trace import (VERDICT_NAMES, CallbackWriter, JSONLWriter,
+                         MemoryWriter, TraceStream, deny, emulate,
+                         format_record, harvest_lane, make_trace_state,
+                         make_writer, stream_interval)
+
+pytestmark = pytest.mark.stream
+
+FUEL = 150_000
+MAX_EXAMPLES = int(os.environ.get("ASC_TEST_EXAMPLES", "5"))
+
+_SETTINGS = dict(max_examples=MAX_EXAMPLES, deadline=None, derandomize=True)
+if HAVE_HYPOTHESIS:
+    from hypothesis import HealthCheck
+    _SETTINGS["suppress_health_check"] = list(HealthCheck)
+
+MECHS = [Mechanism.NONE, Mechanism.LD_PRELOAD, Mechanism.ASC,
+         Mechanism.SIGNAL, Mechanism.PTRACE]
+
+_WORKLOADS = {
+    "getpid": programs.getpid_loop_param,
+    "read": lambda: programs.read_loop_param(256),
+}
+
+_pp_cache = {}
+
+
+def _pp(wname, mech):
+    key = (wname, mech)
+    if key not in _pp_cache:
+        virt = mech is not Mechanism.NONE
+        _pp_cache[key] = prepare(_WORKLOADS[wname](), mech, virtualize=virt)
+    return _pp_cache[key]
+
+
+def _assert_state_equal(ref, got, ctx):
+    for field in ref._fields:
+        a, b = np.asarray(getattr(ref, field)), np.asarray(getattr(got, field))
+        assert np.array_equal(a, b), f"{ctx}: field {field!r} diverged"
+
+
+def _rec_key(t):
+    return (t.step, t.pc, t.nr, t.x0, t.x1, t.x2, t.ret, t.verdict)
+
+
+def _row(step, nr=172, ret=0):
+    """One synthetic 8-word ring row."""
+    return [step, 0x1000, nr, 0, 0, 0, ret, 0]
+
+
+# -- TraceStream unit behaviour (pure host) -----------------------------------
+
+def test_push_lane_reassembles_in_lifetime_order():
+    s = TraceStream()
+    cap = 4
+    half = np.zeros((cap, 8), np.int64)
+    for i in range(3):
+        half[i] = _row(step=i)
+    s.push_lane("k", half, count=3, base=0)
+    half2 = np.zeros((cap, 8), np.int64)
+    for i in range(2):
+        half2[i] = _row(step=3 + i)
+    s.push_lane("k", half2, count=5, base=3)
+    recs, dropped = s.pop("k")
+    assert dropped == 0
+    assert [r.step for r in recs] == [0, 1, 2, 3, 4]
+    assert s.keys() == []            # pop releases the key
+
+
+def test_push_lane_wrap_counts_drops_exactly():
+    """A half that wrapped between flips (only possible when the flip
+    interval exceeds cap) keeps the NEWEST cap records, oldest-first,
+    and reports the exact drop count — never silent."""
+    cap = 4
+    half = np.zeros((cap, 8), np.int64)
+    # 6 records through a cap-4 ring: slots hold steps [4, 5, 2, 3]
+    for step in range(6):
+        half[step % cap] = _row(step=step)
+    s = TraceStream()
+    s.push_lane("k", half, count=6, base=0)
+    recs, dropped = s.pop("k")
+    assert dropped == 2
+    assert [r.step for r in recs] == [2, 3, 4, 5]
+    assert s.records_dropped == 2
+
+
+def test_push_block_skips_empty_and_none_key_lanes():
+    s = TraceStream()
+    bufs = np.zeros((3, 4, 8), np.int64)
+    bufs[0, 0] = _row(step=0)
+    bufs[2, 0] = _row(step=9)
+    s.push_block(["a", None, None], bufs,
+                 counts=np.array([1, 0, 1]), bases=np.array([0, 0, 0]))
+    assert s.keys() == ["a"]          # lane 1 empty, lane 2 unkeyed
+    assert s.flips == 1
+
+
+def test_reset_bumps_epoch_and_clears_buffered_records():
+    s = TraceStream()
+    half = np.zeros((4, 8), np.int64)
+    half[0] = _row(step=0)
+    s.push_lane("k", half, count=1, base=0)
+    s.reset("k")
+    assert s.records("k") == []
+    half[0] = _row(step=7)
+    s.push_lane("k", half, count=1, base=0)
+    recs, dropped = s.pop("k")
+    assert [r.step for r in recs] == [7] and dropped == 0
+
+
+def test_writers_see_every_record_exactly_once_with_epochs(tmp_path):
+    seen = []
+    mem = MemoryWriter()
+    jpath = tmp_path / "sink.jsonl"
+    s = TraceStream([mem, JSONLWriter(jpath),
+                     CallbackWriter(lambda *a: seen.append(a))])
+    half = np.zeros((4, 8), np.int64)
+    half[0] = _row(step=0)
+    half[1] = _row(step=1)
+    s.push_lane("k", half, count=2, base=0)
+    s.reset("k")                      # epoch 0 -> 1
+    half[0] = _row(step=5)
+    s.push_lane("k", half, count=1, base=0)
+    s.flush()
+    assert [(k, e, q, r.step) for k, e, q, r in mem.records] == \
+        [("k", 0, 0, 0), ("k", 0, 1, 1), ("k", 1, 0, 5)]
+    assert [(k, e, q, r.step) for k, e, q, r in seen] == \
+        [(k, e, q, r.step) for k, e, q, r in mem.records]
+    lines = [json.loads(x) for x in jpath.read_text().splitlines()]
+    assert [(o["key"], o["epoch"], o["seq"], o["step"]) for o in lines] == \
+        [("k", 0, 0, 0), ("k", 0, 1, 1), ("k", 1, 0, 5)]
+    s.close()
+
+
+def test_make_writer_maps_the_trace_sink_knob(tmp_path):
+    assert make_writer("") is None
+    assert isinstance(make_writer("memory"), MemoryWriter)
+    w = make_writer(str(tmp_path / "t.jsonl"))
+    assert isinstance(w, JSONLWriter)
+    w.close()
+
+
+def test_retain_false_emits_without_buffering():
+    mem = MemoryWriter()
+    s = TraceStream([mem], retain=False)
+    half = np.zeros((4, 8), np.int64)
+    half[0] = _row(step=0)
+    s.push_lane("k", half, count=1, base=0)
+    assert s.stats()["buffered_records"] == 0
+    assert len(mem.records) == 1
+    recs, _ = s.pop("k")              # nothing retained to publish
+    assert recs == []
+
+
+def test_segment_lists_compact_past_max_segments():
+    s = TraceStream(max_segments=3)
+    half = np.zeros((4, 8), np.int64)
+    for i in range(10):
+        half[0] = _row(step=i)
+        s.push_lane("k", half, count=i + 1, base=i)
+    st = s._keys["k"]
+    assert len(st.segs) <= 4          # compacted in place, nothing lost
+    recs, _ = s.pop("k")
+    assert [r.step for r in recs] == list(range(10))
+
+
+def test_stream_interval_is_widest_zero_drop_multiple():
+    assert stream_interval(64, 8) == 64
+    assert stream_interval(64, 10) == 60
+    assert stream_interval(64, 64) == 64
+    assert stream_interval(64, 128) == 128   # degrades to one chunk
+    assert stream_interval(8, 3) == 6
+
+
+# -- zero-drop + flip-boundary bit-identity on the raw fleet ------------------
+
+def test_streamed_states_and_records_exhaustive():
+    """Every mechanism x workload in ONE fleet: streamed machine states ==
+    untraced states, and the stream holds exactly the records a
+    big-enough classic ring captures — with zero drops at cap=8 where
+    the classic cap-8 ring demonstrably drops."""
+    pps, keys = [], []
+    for mech in MECHS:
+        for wname in _WORKLOADS:
+            pps.append(_pp(wname, mech))
+            keys.append((wname, mech.value))
+    regs = [{19: 7}] * len(pps)
+    ref = run_fleet_prepared(pps, fuel=FUEL, chunk=8, regs=regs)
+
+    # ground truth records: classic ring with a cap no lane can fill
+    imgs, ids, states, _ = pack_fleet(pps, fuel=FUEL, regs=regs, trace=True)
+    big = make_trace_state(len(pps), 512)
+    _, big_tr = fleet.run_fleet(imgs, states, ids, chunk=8, trace=big)
+    truth = [harvest_lane(np.asarray(big_tr.buf)[i],
+                          int(np.asarray(big_tr.count)[i]))
+             for i in range(len(pps))]
+    assert all(d == 0 for _, d in truth)
+
+    imgs, ids, states, _ = pack_fleet(pps, fuel=FUEL, regs=regs, trace=True)
+    small = make_trace_state(len(pps), 8)
+    sink = TraceStream()
+    out, tr = fleet.run_fleet_stream(imgs, states, ids, chunk=8,
+                                     trace=small, stream=sink)
+    for i, key in enumerate(keys):
+        _assert_state_equal(unstack_state(ref, i), unstack_state(out, i),
+                            f"streamed lane {key}")
+        recs, dropped = sink.pop(i)
+        assert dropped == 0, f"lane {key} dropped {dropped}"
+        assert [_rec_key(r) for r in recs] == \
+            [_rec_key(r) for r in truth[i][0]], f"lane {key} records"
+    # the classic ring at the same cap=8 would have dropped
+    assert any(c > 8 for c in np.asarray(big_tr.count).tolist())
+    assert sink.records_dropped == 0
+
+
+@settings(**_SETTINGS)
+@given(data=st.data())
+def test_streamed_zero_drop_any_mech_workload_chunk_cap(data):
+    """Sampled mechanism x workload x chunk x cap: zero drops whenever
+    the flip interval fits the cap, streamed records == big-ring truth,
+    states bit-identical to untraced."""
+    chunk = data.draw(st.sampled_from([1, 4, 8]), label="chunk")
+    cap = data.draw(st.sampled_from([8, 16]), label="cap")
+    n_lanes = data.draw(st.integers(1, 3), label="lanes")
+    reqs = [(data.draw(st.sampled_from(sorted(_WORKLOADS)), label="w"),
+             data.draw(st.sampled_from(MECHS), label="m"),
+             data.draw(st.integers(1, 12), label="n"))
+            for _ in range(n_lanes)]
+    pps = [_pp(w, m) for w, m, _ in reqs]
+    regs = [{19: n} for _, _, n in reqs]
+    ref = run_fleet_prepared(pps, fuel=FUEL, chunk=chunk, regs=regs)
+
+    imgs, ids, states, _ = pack_fleet(pps, fuel=FUEL, regs=regs, trace=True)
+    big = make_trace_state(len(pps), 1024)
+    _, big_tr = fleet.run_fleet(imgs, states, ids, chunk=chunk, trace=big)
+
+    imgs, ids, states, _ = pack_fleet(pps, fuel=FUEL, regs=regs, trace=True)
+    sink = TraceStream()
+    out, _ = fleet.run_fleet_stream(imgs, states, ids, chunk=chunk,
+                                    trace=make_trace_state(len(pps), cap),
+                                    stream=sink)
+    assert sink.records_dropped == 0
+    for i, (w, m, n) in enumerate(reqs):
+        _assert_state_equal(unstack_state(ref, i), unstack_state(out, i),
+                            f"chunk={chunk} cap={cap} lane=({w},{m},{n})")
+        truth, d = harvest_lane(np.asarray(big_tr.buf)[i],
+                                int(np.asarray(big_tr.count)[i]))
+        assert d == 0
+        recs, dropped = sink.pop(i)
+        assert dropped == 0
+        assert [_rec_key(r) for r in recs] == [_rec_key(r) for r in truth]
+
+
+# -- the streamed server ------------------------------------------------------
+
+def _submit_mix(srv):
+    rids = []
+    for n in (3, 9, 14):
+        rids.append(srv.submit(_pp("getpid", Mechanism.ASC), regs={19: n}))
+    rids.append(srv.submit(_pp("read", Mechanism.SIGNAL), regs={19: 6}))
+    rids.append(srv.submit(_pp("read", Mechanism.PTRACE), regs={19: 11}))
+    return rids
+
+
+def test_streamed_server_matches_classic_traced_server():
+    """Same submissions, trace_cap=8: the classic server drops ring
+    records, the streamed server publishes the COMPLETE trace — and both
+    publish bit-identical machine states."""
+    cfg = HookConfig(trace_enabled=True, trace_cap=8)
+    srv0 = FleetServer(pool=3, cfg=cfg, gen_steps=48, chunk=8, fuel=FUEL)
+    _submit_mix(srv0)
+    res0 = {r.rid: r for r in srv0.run()}
+
+    srv1 = FleetServer(pool=3, cfg=cfg, gen_steps=48, chunk=8, fuel=FUEL,
+                       stream=True)
+    _submit_mix(srv1)
+    res1 = {r.rid: r for r in srv1.run()}
+
+    assert set(res0) == set(res1)
+    classic_dropped = sum(r.trace_dropped for r in res0.values())
+    assert classic_dropped > 0        # cap=8 genuinely too small
+    for rid in res0:
+        _assert_state_equal(res0[rid].state, res1[rid].state, f"rid {rid}")
+        assert res1[rid].trace_dropped == 0
+        # the streamed trace is a superset ending with the classic ring's
+        # surviving (newest) records
+        tail = [_rec_key(t) for t in res0[rid].trace]
+        assert [_rec_key(t) for t in res1[rid].trace][-len(tail):] == tail
+        assert len(res1[rid].trace) == len(res0[rid].trace) + \
+            res0[rid].trace_dropped
+    assert srv1.stats()["stream"]["records_dropped"] == 0
+    assert srv1.stats()["trace_stream"] is True
+
+
+def test_trace_records_counts_captured_only():
+    """Regression: ``stats()["trace_records"]`` once summed captured +
+    dropped, double-counting overflow; it must equal the records actually
+    published (and ``trace_dropped`` the drops)."""
+    cfg = HookConfig(trace_enabled=True, trace_cap=4)
+    srv = FleetServer(pool=2, cfg=cfg, gen_steps=64, chunk=8, fuel=FUEL)
+    _submit_mix(srv)
+    res = srv.run()
+    stats = srv.stats()
+    assert stats["trace_records"] == sum(len(r.trace) for r in res)
+    assert stats["trace_dropped"] == sum(r.trace_dropped for r in res)
+    assert stats["trace_dropped"] > 0
+
+
+def test_streamed_server_survives_compaction():
+    cfg = HookConfig(trace_enabled=True, trace_cap=8, compact_enabled=True,
+                     compact_min_bucket=2)
+    srv = FleetServer(pool=4, cfg=cfg, gen_steps=48, chunk=8, fuel=FUEL,
+                      stream=True)
+    _submit_mix(srv)
+    res = {r.rid: r for r in srv.run()}
+
+    ref = FleetServer(pool=4, cfg=HookConfig(trace_enabled=True,
+                                             trace_cap=512),
+                      gen_steps=48, chunk=8, fuel=FUEL)
+    _submit_mix(ref)
+    refs = {r.rid: r for r in ref.run()}
+    assert srv.stats()["min_bucket_seen"] < 4     # compaction actually ran
+    for rid in refs:
+        _assert_state_equal(refs[rid].state, res[rid].state, f"rid {rid}")
+        assert res[rid].trace_dropped == 0
+        assert [_rec_key(t) for t in res[rid].trace] == \
+            [_rec_key(t) for t in refs[rid].trace]
+
+
+def test_streamed_server_c3_readmission_resets_the_key():
+    """A C3 recycle restarts the attempt: the published streamed trace
+    holds only the final attempt's records (epoch-bumped in the sink)."""
+    cfg = HookConfig(trace_enabled=True, trace_cap=8)
+    srv = FleetServer(pool=2, cfg=cfg, gen_steps=64, chunk=8, fuel=FUEL,
+                      stream=True)
+    rid = srv.submit(lambda: programs.indirect_svc(2), virtualize=True)
+    res = {r.rid: r for r in srv.run()}
+    assert srv.stats()["c3_readmissions"] == 1
+    ref = FleetServer(pool=2, cfg=cfg, gen_steps=64, chunk=8, fuel=FUEL)
+    rid2 = ref.submit(lambda: programs.indirect_svc(2), virtualize=True)
+    ref_res = {r.rid: r for r in ref.run()}
+    assert [_rec_key(t) for t in res[rid].trace] == \
+        [_rec_key(t) for t in ref_res[rid2].trace]
+    assert res[rid].trace_dropped == 0
+
+
+def test_histogram_matches_published_trace():
+    """The on-device per-syscall x per-verdict counters agree with a host
+    Counter over the (complete, streamed) published records — including
+    non-ALLOW verdicts."""
+    cfg = HookConfig(trace_enabled=True, trace_cap=16)
+    srv = FleetServer(pool=2, cfg=cfg, gen_steps=48, chunk=8, fuel=FUEL,
+                      stream=True)
+    rids = [srv.submit(_pp("read", Mechanism.SIGNAL), regs={19: 5},
+                       policy=[deny(L.SYS_READ)]),
+            srv.submit(_pp("read", Mechanism.PTRACE), regs={19: 4},
+                       policy=[emulate(L.SYS_WRITE, 7)])]
+    res = {r.rid: r for r in srv.run()}
+    for rid in rids:
+        want = collections.Counter((t.name, VERDICT_NAMES[t.verdict])
+                                   for t in res[rid].trace)
+        got = {(s, v): n for s, vs in res[rid].histogram.items()
+               for v, n in vs.items()}
+        assert got == dict(want), rid
+    # the server-lifetime aggregate is the sum over published requests
+    total = collections.Counter()
+    for rid in rids:
+        total.update((t.name, VERDICT_NAMES[t.verdict])
+                     for t in res[rid].trace)
+    agg = {(s, v): n
+           for s, vs in srv.stats()["trace_histogram"].items()
+           for v, n in vs.items()}
+    assert agg == dict(total)
+
+
+def test_follow_yields_live_lines_in_per_request_order():
+    cfg = HookConfig(trace_enabled=True, trace_cap=8)
+    srv = FleetServer(pool=2, cfg=cfg, gen_steps=24, chunk=8, fuel=FUEL,
+                      stream=True)
+    rids = [srv.submit(_pp("getpid", Mechanism.ASC), regs={19: 9}),
+            srv.submit(_pp("read", Mechanism.SIGNAL), regs={19: 4})]
+    lines = list(srv.follow())
+    # the generator yields lines; published results land on follow_results
+    results = {r.rid: r for r in srv.follow_results}
+    assert sorted(results) == sorted(rids)
+    # line ordering reference from a twin server
+    ref = FleetServer(pool=2, cfg=cfg, gen_steps=24, chunk=8, fuel=FUEL,
+                      stream=True)
+    rids2 = [ref.submit(_pp("getpid", Mechanism.ASC), regs={19: 9}),
+             ref.submit(_pp("read", Mechanism.SIGNAL), regs={19: 4})]
+    refs = {r.rid: r for r in ref.run()}
+    for rid, rid2 in zip(rids, rids2):
+        want = [f"[rid {rid}] " + format_record(t)
+                for t in refs[rid2].trace]
+        got = [ln for ln in lines if ln.startswith(f"[rid {rid}] ")]
+        assert got == want, rid
+        _assert_state_equal(refs[rid2].state, results[rid].state,
+                            f"follow rid {rid}")
+        assert list(map(_rec_key, results[rid].trace)) == \
+            list(map(_rec_key, refs[rid2].trace))
+    assert len(lines) == sum(len(r.trace) for r in refs.values())
+
+
+def test_follow_requires_streaming():
+    srv = FleetServer(pool=1, gen_steps=64, fuel=FUEL, trace=True)
+    with pytest.raises(ValueError):
+        next(srv.follow())
+
+
+def test_stream_requires_trace():
+    with pytest.raises(ValueError):
+        FleetServer(pool=1, gen_steps=64, fuel=FUEL, stream=True)
+
+
+def test_jsonl_sink_through_the_server(tmp_path):
+    """cfg.trace_sink wires a JSONL file writer: its per-key max-epoch
+    streams decode to exactly the published traces."""
+    path = tmp_path / "sink.jsonl"
+    cfg = HookConfig(trace_enabled=True, trace_stream=True, trace_cap=8,
+                     trace_sink=str(path))
+    srv = FleetServer(pool=2, cfg=cfg, gen_steps=48, chunk=8, fuel=FUEL)
+    assert srv.stream_enabled          # knob turns streaming on
+    rids = _submit_mix(srv)
+    res = {r.rid: r for r in srv.run()}
+    per_key = {}
+    for line in path.read_text().splitlines():
+        o = json.loads(line)
+        per_key.setdefault(o["key"], {})[(o["epoch"], o["seq"])] = \
+            (o["step"], o["pc"], o["nr"], o["x0"], o["x1"], o["x2"],
+             o["ret"], o["verdict"])
+    for rid in rids:
+        m = per_key[rid]
+        top = max(e for e, _ in m)
+        got = [v for (e, q), v in sorted(m.items()) if e == top]
+        assert got == [_rec_key(t) for t in res[rid].trace], rid
