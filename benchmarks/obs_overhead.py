@@ -1,0 +1,204 @@
+"""Observability overhead census + phase-coverage audit.
+
+The telemetry layer (``repro.obs``) claims to observe without steering:
+counters, phase timers and lifecycle spans on every generation, with
+published guest states bit-identical to an unobserved run.  This census
+prices that claim on the same 400-lane mechanism x workload x
+iteration-count grid as ``collective_hook_overhead``, pushed through the
+continuous-batching server twice — obs off, then obs on — in
+interleaved pairs with the median-ratio pair reported (the
+trace_overhead methodology: back-to-back pairs see the same box
+conditions, the median tolerates outlier pairs).  The acceptance bars,
+enforced on the full run only:
+
+* steps/sec overhead < 5%,
+* phase coverage >= 90% — the profiler's per-phase totals must explain
+  at least that share of total generation wall-clock, or the breakdown
+  is lying by omission,
+* bit-identical published states (asserted on every run, including
+  ``--quick``).
+
+Writes ``benchmarks/results/BENCH_obs.json`` (schema ``BENCH_obs/v1``);
+``--quick`` runs a seconds-long sanity pass on a scaled-down grid (no
+JSON write, no timing bars).  ``--devices N`` forces N host platform
+devices and implies ``--shard``; repro imports are deferred so the
+device-count flag lands before jax initialises its backends.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+
+RESULT_PATH = pathlib.Path(__file__).parent / "results" / "BENCH_obs.json"
+
+FUEL = 10_000_000
+OVERHEAD_BAR_PCT = 5.0
+COVERAGE_BAR = 0.90
+
+
+def build_requests(scale: float = 1.0):
+    """The 400-lane census as an arrival stream: (prepared process,
+    regs) pairs — 12 distinct images, bimodal-ish iteration counts."""
+    from benchmarks.collective_hook_overhead import census_grid, _prepare_cells
+    grid = census_grid()
+    cells = _prepare_cells()
+    return [(cells[(g[0], g[3])], {19: max(2, int(g[4] * scale))})
+            for g in grid]
+
+
+def _result_key(r):
+    return (r.rid, tuple(int(x) for x in np.asarray(r.state.regs)),
+            int(r.state.halted), int(r.state.icount))
+
+
+def run_server(reqs, pool: int, chunk: int, gen_steps: int,
+               obs: bool = False, shard: bool = False):
+    """One full drain through the server; returns (wall_s, server,
+    result keys) — the server is returned so the observed pass can be
+    audited for phase coverage."""
+    from repro.core import HookConfig
+    from repro.serve.fleet_server import FleetServer
+    cfg = HookConfig(obs_enabled=obs)
+    srv = FleetServer(pool=pool, gen_steps=gen_steps, chunk=chunk,
+                      fuel=FUEL, shard=shard, cfg=cfg)
+    t0 = time.perf_counter()
+    for pp, rg in reqs:
+        srv.submit(pp, regs=rg)
+    results = srv.run()
+    wall = time.perf_counter() - t0
+    assert len(results) == len(reqs)
+    return wall, srv, sorted(_result_key(r) for r in results)
+
+
+def run_bench(pool: int = 400, chunk: int = 128, gen_steps: int = 512,
+              passes: int = 5, scale: float = 1.0,
+              shard: bool = False) -> dict:
+    reqs = build_requests(scale)
+    if pool > len(reqs):
+        pool = len(reqs)
+
+    # warm both compilation caches; the warm pair also supplies the
+    # bit-identity proof — observation must not steer the guests
+    _, _, ref_keys = run_server(reqs, pool, chunk, gen_steps, shard=shard)
+    _, osrv, obs_keys = run_server(reqs, pool, chunk, gen_steps,
+                                   obs=True, shard=shard)
+    assert obs_keys == ref_keys, "observed results diverged from plain"
+    steps = osrv.stats()["harvested_steps"]
+    metrics = osrv.metrics()
+
+    pairs = []
+    for _ in range(passes):
+        t0 = time.perf_counter()
+        run_server(reqs, pool, chunk, gen_steps, shard=shard)
+        t1 = time.perf_counter()
+        run_server(reqs, pool, chunk, gen_steps, obs=True, shard=shard)
+        pairs.append((t1 - t0, time.perf_counter() - t1))
+    pairs.sort(key=lambda p: p[1] / p[0])
+    t_plain, t_obs = pairs[len(pairs) // 2]
+
+    plain_sps = steps / t_plain
+    obs_sps = steps / t_obs
+    import jax
+    return {
+        "schema": "BENCH_obs/v1",
+        "config": {"lanes": len(reqs), "pool": pool, "chunk": chunk,
+                   "gen_steps": gen_steps, "fuel": FUEL, "shard": shard,
+                   "passes": passes, "devices": jax.device_count()},
+        "plain": {"wall_s": round(t_plain, 3),
+                  "steps_per_sec": round(plain_sps, 1)},
+        "observed": {"wall_s": round(t_obs, 3),
+                     "steps_per_sec": round(obs_sps, 1)},
+        "total_steps": steps,
+        "overhead_pct": round(100.0 * (plain_sps - obs_sps) / plain_sps, 2),
+        "bit_identical": True,
+        "phase_coverage": round(metrics["phase_coverage"], 4),
+        "phases": {name: {"count": p["count"],
+                          "total_s": round(p["total_s"], 4),
+                          "mean_ms": round(p["mean_ms"], 4),
+                          "p50_ms": round(p["p50_ms"], 4),
+                          "p95_ms": round(p["p95_ms"], 4),
+                          "share": round(p["share"], 4)}
+                   for name, p in metrics["phases"].items()},
+        "generation": {"count": metrics["generation"]["count"],
+                       "total_s": round(metrics["generation"]["total_s"], 3),
+                       "p50_ms": round(metrics["generation"]["p50_ms"], 4),
+                       "p95_ms": round(metrics["generation"]["p95_ms"], 4)},
+        "spans": {"completed": metrics["spans"]["completed"],
+                  "open": metrics["spans"]["open"]},
+    }
+
+
+def write_result(payload: dict, path: pathlib.Path = RESULT_PATH) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(payload, indent=1, sort_keys=True))
+
+
+def run() -> list:
+    c = run_bench()
+    write_result(c)
+    return [{
+        "variant": "obs_overhead",
+        "plain_steps_per_sec": c["plain"]["steps_per_sec"],
+        "observed_steps_per_sec": c["observed"]["steps_per_sec"],
+        "overhead_pct": c["overhead_pct"],
+        "phase_coverage": c["phase_coverage"],
+        "bit_identical": c["bit_identical"],
+    }]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="seconds-long sanity pass, no JSON write, no bars")
+    ap.add_argument("--shard", action="store_true",
+                    help="lane-partition the pool across local devices")
+    ap.add_argument("--devices", type=int, default=None, metavar="N",
+                    help="force N host platform devices (implies --shard)")
+    args = ap.parse_args(argv)
+    if args.devices:
+        # must land before jax touches a backend — repro imports in this
+        # module are deferred for exactly this line
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+        args.shard = True
+
+    if args.quick:
+        kw = dict(pool=64, chunk=16, gen_steps=48, passes=1, scale=0.05)
+    else:
+        kw = {}
+    c = run_bench(shard=args.shard, **kw)
+    if not args.quick:  # sanity passes must not clobber the tracked record
+        write_result(c)
+    print("name,us_per_call,derived")
+    print(f"obs/census,0,"
+          f"lanes={c['config']['lanes']} pool={c['config']['pool']} "
+          f"devices={c['config']['devices']} "
+          f"plain={c['plain']['steps_per_sec']:.0f}sps "
+          f"observed={c['observed']['steps_per_sec']:.0f}sps "
+          f"overhead={c['overhead_pct']}% "
+          f"coverage={c['phase_coverage']} "
+          f"bit_identical={c['bit_identical']}")
+    top = sorted(c["phases"].items(), key=lambda kv: -kv[1]["share"])[:4]
+    print("obs/phases,0," + " ".join(
+        f"{name}={p['share']:.1%}" for name, p in top))
+    # Acceptance bars, enforced on the full (median interleaved-pair)
+    # run only — the --quick grid is too small to time meaningfully.
+    if not args.quick:
+        if c["overhead_pct"] > OVERHEAD_BAR_PCT:
+            raise RuntimeError(
+                f"obs overhead {c['overhead_pct']}% exceeds the "
+                f"{OVERHEAD_BAR_PCT}% acceptance bar")
+        if c["phase_coverage"] < COVERAGE_BAR:
+            raise RuntimeError(
+                f"phase coverage {c['phase_coverage']} below the "
+                f"{COVERAGE_BAR} acceptance bar")
+
+
+if __name__ == "__main__":
+    main()

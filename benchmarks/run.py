@@ -27,6 +27,10 @@
                                400-lane census (<10% bar) and a
                                kill-and-recover wall-clock; writes
                                BENCH_durability.json itself
+  * obs_overhead             — telemetry layer (registry + phase profiler
+                               + spans) cost on the 400-lane census (<5%
+                               bar, >=90% phase coverage, bit-identical
+                               states); writes BENCH_obs.json itself
   * roofline                 — dry-run roofline table (§Roofline)
 
 Besides the CSV stream, writes ``benchmarks/results/BENCH_fleet.json`` with
@@ -46,7 +50,7 @@ import traceback
 SUITES = ["hook_overhead", "svc_census", "app_bandwidth", "collective_census",
           "collective_hook_overhead", "serving_throughput", "trace_overhead",
           "compaction_speedup", "policy_scheduler", "durability_overhead",
-          "roofline"]
+          "obs_overhead", "roofline"]
 
 # suites feeding the BENCH_fleet.json record (collect_fleet_bench)
 _FLEET_BENCH_INPUTS = {"hook_overhead", "collective_hook_overhead"}

@@ -1,10 +1,11 @@
 #!/usr/bin/env bash
 # CI-style gate: tier-1, the smoke + serving + trace + compaction +
-# sched + stream + durability tiers, and seconds-long sanity passes — several on
-# 2 forced host devices (the sharded serving pool, the lane-partitioned
-# census, a compaction rung, and the durability kill-recover pass) plus
-# the trace-overhead, compaction, scheduler, and durability benchmarks
-# (--quick).  See tests/README.md for the tiers.
+# sched + stream + durability + obs tiers, and seconds-long sanity passes —
+# several on 2 forced host devices (the sharded serving pool, the
+# lane-partitioned census, a compaction rung, and the durability
+# kill-recover pass) plus the trace-overhead, compaction, scheduler,
+# durability, and obs benchmarks (--quick).  See tests/README.md for the
+# tiers.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -34,6 +35,9 @@ ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m stream
 echo "== durability tier (heavier example counts) =="
 ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m durability
 
+echo "== obs tier (heavier example counts) =="
+ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m obs
+
 echo "== serving throughput sanity (sharded, 2 host devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
     python -m benchmarks.serving_throughput --quick --shard
@@ -58,5 +62,8 @@ python -m benchmarks.durability_overhead --quick
 
 echo "== durability kill-recover sanity (sharded, 2 host devices) =="
 python -m benchmarks.durability_overhead --quick --devices 2
+
+echo "== obs overhead sanity (single device) =="
+python -m benchmarks.obs_overhead --quick
 
 echo "check.sh: all green"

@@ -158,6 +158,21 @@ class HookConfig:
     chaos_snapshot_corrupt_rate: float = 0.0
     chaos_max_retries: int = 3
     chaos_backoff_base_ms: int = 1
+    # Host-side observability (repro.obs / FleetServer.metrics()).  When
+    # obs_enabled a server carries an ObsHub: a metrics registry with
+    # counters/gauges/log-bucketed histograms, a generation-loop phase
+    # profiler, and per-request lifecycle spans — all on the monotonic
+    # obs.now() clock, never steering results (obs-on states are
+    # bit-identical to obs-off; benchmarks/obs_overhead.py prices the
+    # layer).  obs_sink selects a push target ("" = pull-only via
+    # metrics(); "memory"; "jsonl:<path>" or a *.jsonl path; or
+    # "prom:<path>" for a Prometheus textfile) — anything else raises
+    # ValueError naming the value.  obs_snapshot_interval_s throttles
+    # sink writes to at most one per interval at generation boundaries
+    # (0 = only explicit/final writes).
+    obs_enabled: bool = False
+    obs_sink: str = ""
+    obs_snapshot_interval_s: float = 0.0
     policy: List[PolicyRule] = dataclasses.field(default_factory=list)
     pinned: List[PinnedSite] = dataclasses.field(default_factory=list)
 

@@ -22,12 +22,13 @@ import argparse
 import dataclasses
 import json
 import pathlib
-import time
 import traceback
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs import now as obs_now
 
 from repro.configs import ARCHS, applicable_shapes, get_config, get_smoke, shape_by_name
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
@@ -88,7 +89,9 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              run: Optional[RunConfig] = None, smoke: bool = False,
              label: str = "") -> Dict[str, Any]:
-    t0 = time.time()
+    # monotonic clock (obs.now): compile_s is a duration, and time.time()
+    # can jump backwards under NTP slew mid-compile
+    t0 = obs_now()
     chips = 512 if multi_pod else 256
     cell: Dict[str, Any] = {
         "arch": arch, "shape": shape_name,
@@ -116,7 +119,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     peak_bytes = int(getattr(mem, "peak_memory_in_bytes", 0) or live_bytes)
     cell.update(
         status="OK",
-        compile_s=round(time.time() - t0, 1),
+        compile_s=round(obs_now() - t0, 1),
         bytes_per_device=live_bytes,
         peak_bytes_per_device=peak_bytes,
         fits_hbm=bool(max(live_bytes, peak_bytes) <= HBM_PER_CHIP),

@@ -38,6 +38,10 @@ class Quarantine:
     def blocked(self, tenant: str, generation: int) -> bool:
         return generation < self._until.get(tenant, 0)
 
+    def depth(self, generation: int) -> int:
+        """How many tenants are still waiting out a backoff."""
+        return sum(1 for until in self._until.values() if generation < until)
+
     def clear(self, tenant: str) -> None:
         """A clean completion resets the offence streak (the next offence
         starts from the base backoff again)."""

@@ -43,17 +43,30 @@ class PolicyScheduler:
         self.quarantine = quarantine
         self.preempt = bool(preempt)
         self._cfg = None
+        self._metrics = None
 
-    def attach(self, cfg) -> None:
+    def attach(self, cfg, metrics=None) -> None:
         """Bind server-level defaults (called by ``FleetServer``): the
         default tenant budget and the quarantine backoff curve come from
-        the server's :class:`HookConfig` unless given explicitly."""
+        the server's :class:`HookConfig` unless given explicitly.
+
+        ``metrics`` (a :class:`repro.obs.MetricsRegistry` or None) makes
+        every decision this scheduler takes observable as typed counters
+        (``sched_decisions_total{decision=...}``) without the server
+        interpreting them — None keeps the scheduler metrics-free."""
         self._cfg = cfg
+        self._metrics = metrics
         self.ledger.default = TenantBudget(max_svc=cfg.budget_svc,
                                            max_deny=cfg.budget_deny)
         if self.quarantine is None:
             self.quarantine = Quarantine(base=cfg.sched_backoff_base,
                                          cap=cfg.sched_backoff_cap)
+
+    def _note(self, decision: str, tenant: str = "") -> None:
+        if self._metrics is not None:
+            self._metrics.counter(
+                "sched_decisions_total",
+                "scheduler decisions by type").inc(1, decision=decision)
 
     # -- deadlines ------------------------------------------------------------
 
@@ -80,6 +93,8 @@ class PolicyScheduler:
         stable, so all-default requests come out exactly FIFO."""
         viable = [r for r in queue
                   if not self.quarantine.blocked(r.tenant, generation)]
+        if len(viable) < len(queue):
+            self._note("quarantine_gated")
         return sorted(viable, key=lambda r: (
             0 if self.at_risk(r, generation, gen_steps) else 1,
             -r.priority))
@@ -97,6 +112,7 @@ class PolicyScheduler:
         victims = [r for r in running if r.priority < candidate.priority]
         if not victims:
             return None
+        self._note("preempt")
         return min(victims, key=lambda r: (r.priority, -r.rid))
 
     # -- in-flight enforcement ------------------------------------------------
@@ -108,19 +124,24 @@ class PolicyScheduler:
         if rate <= 0.0 or svc < max(1, req.cfg.sched_deny_min_svc):
             return None
         if deny / svc > rate:
+            self._note("evict_deny_rate")
             return f"deny_rate {deny}/{svc} > {rate}"
         return None
 
     def exhausted(self, tenant: str, inflight_svc: int,
                   inflight_deny: int) -> Optional[str]:
         """Budget check for one tenant given uncharged in-flight deltas."""
-        return self.ledger.exhausted(tenant, inflight_svc=inflight_svc,
-                                     inflight_deny=inflight_deny)
+        reason = self.ledger.exhausted(tenant, inflight_svc=inflight_svc,
+                                       inflight_deny=inflight_deny)
+        if reason is not None:
+            self._note("budget_exhausted")
+        return reason
 
     def note_corruption(self, tenant: str, generation: int) -> int:
         """Escalate a detected carry corruption (durable serving's
         replay-verify caught a digest mismatch on this tenant's lanes)
         into the same exponential quarantine backoff as a kill/eviction.
         Returns the generation the tenant is blocked until."""
+        self._note("quarantine_corruption")
         return self.quarantine.punish(tenant, generation,
                                       reason="carry_corruption")

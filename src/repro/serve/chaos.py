@@ -90,6 +90,7 @@ class ChaosMonkey:
                                      f"(kinds: {KINDS})")
         self.rng: Optional[np.random.Generator] = None
         self.injections: List[dict] = []
+        self._metrics = None   # the attached server's obs registry, if any
         # sticky: plan entries are consumed when they fire, but the verify
         # pass that CATCHES a planned bitflip runs at the next snapshot
         # boundary, after consumption
@@ -99,6 +100,8 @@ class ChaosMonkey:
 
     def attach(self, srv) -> None:
         cfg = srv.cfg
+        obs = getattr(srv, "_obs", None)
+        self._metrics = obs.registry if obs is not None else None
         if self._seed is None:
             self._seed = cfg.chaos_seed
         if self.dispatch_fault_rate is None:
@@ -130,8 +133,18 @@ class ChaosMonkey:
         iid = len(self.injections)
         self.injections.append({"id": iid, "kind": kind, "gen": gen,
                                 "resolution": None, **detail})
+        if self._metrics is not None:
+            self._metrics.counter(
+                "chaos_injections_total",
+                "injected faults by kind").inc(1, kind=kind)
         log.info("chaos inject [%d] %s at gen %d %s", iid, kind, gen, detail)
         return iid
+
+    def _count_resolution(self, outcome: str) -> None:
+        if self._metrics is not None:
+            self._metrics.counter(
+                "chaos_resolutions_total",
+                "resolved injections by outcome").inc(1, outcome=outcome)
 
     def resolve(self, ids, outcome: str) -> None:
         if isinstance(ids, int):
@@ -139,11 +152,13 @@ class ChaosMonkey:
         for iid in ids:
             if self.injections[iid]["resolution"] is None:
                 self.injections[iid]["resolution"] = outcome
+                self._count_resolution(outcome)
 
     def resolve_kind(self, kind: str, outcome: str) -> None:
         for inj in self.injections:
             if inj["kind"] == kind and inj["resolution"] is None:
                 inj["resolution"] = outcome
+                self._count_resolution(outcome)
 
     def unresolved(self) -> List[dict]:
         return [i for i in self.injections if i["resolution"] is None]

@@ -70,6 +70,8 @@ from repro.core.completeness import C3Event
 from repro.core.hookcfg import HookConfig, PolicyRule
 from repro.core.runtime import (Mechanism, PreparedProcess, _image_digest,
                                 prepare)
+from repro.obs import now as obs_now
+from repro.obs import phase as obs_phase
 from repro.sched.budgets import TenantBudget
 from repro.sched.quarantine import Quarantine
 from repro.sched.scheduler import PolicyScheduler
@@ -107,6 +109,7 @@ class Journal:
         self.seq = next_seq          # seq of the NEXT record
         self.last_seq = next_seq - 1
         self.records = 0             # records appended by this handle
+        self.bytes_written = self.path.stat().st_size   # incl. prior life
         self._dirty = False
 
     def append(self, kind: str, **fields) -> int:
@@ -118,6 +121,7 @@ class Journal:
         self.last_seq = self.seq
         self.seq += 1
         self.records += 1
+        self.bytes_written += len(line)
         self._dirty = True
         return self.last_seq
 
@@ -336,6 +340,9 @@ def request_meta(req, digest_memo: Optional[Dict[int, str]] = None) -> dict:
         "tenant": req.tenant, "priority": req.priority,
         "deadline_steps": req.deadline_steps,
         "preemptions": req.preemptions,
+        "parked_gen": req.parked_gen,
+        "parked_wait_s": (obs_now() - req.parked_s
+                          if req.parked_gen >= 0 else 0.0),
         "has_checkpoint": req.checkpoint is not None,
         "charged": [req.charged_svc, req.charged_deny, req.charged_emul,
                     req.charged_kill],
@@ -375,7 +382,7 @@ def request_from_meta(meta: dict, *, store: ImageStore,
         cache[key] = pp
     if digest_pp is not None:
         digest_pp[meta["digest"]] = pp
-    now = time.perf_counter()
+    now = obs_now()
     req = FleetRequest(
         rid=meta["rid"], pp=pp, builder=fn, cfg=cfg, mechanism=mech,
         virtualize=virt, fuel=int(meta["fuel"]),
@@ -393,6 +400,9 @@ def request_from_meta(meta: dict, *, store: ImageStore,
         tenant=meta["tenant"], priority=meta["priority"],
         deadline_steps=meta["deadline_steps"])
     req.preemptions = meta["preemptions"]
+    if meta.get("parked_gen", -1) >= 0:   # re-base like submitted_s above
+        req.parked_gen = int(meta["parked_gen"])
+        req.parked_s = now - meta.get("parked_wait_s", 0.0)
     (req.charged_svc, req.charged_deny,
      req.charged_emul, req.charged_kill) = meta["charged"]
     return req
@@ -463,6 +473,7 @@ def _server_meta(srv) -> dict:
         "shard": srv._shard, "trace_enabled": srv.trace_enabled,
         "stream_enabled": srv.stream_enabled,
         "compact_enabled": srv.compact_enabled,
+        "obs_enabled": srv._obs is not None,
         "sched": _sched_meta(srv.sched),
     }
 
@@ -515,8 +526,14 @@ def snapshot_server(srv, *, journal_seq: int) -> Tuple[Dict[str, np.ndarray],
         "readmit_rids": sorted(srv._readmit_rids),
         "tenants": {t: dict(v) for t, v in srv._tenants.items()},
         "wait_gens": list(srv._wait_gens), "wait_s": list(srv._wait_s),
+        "resume_wait_gens": list(srv._resume_wait_gens),
+        "resume_wait_s": list(srv._resume_wait_s),
         "shed": list(srv.shed),
         "stream": stream_meta,
+        # the obs hub's full state (registry buckets, open spans, phase
+        # totals): recovery restores it so counters are monotone and
+        # request lifecycles span-complete across the crash
+        "obs": (srv._obs.export() if srv._obs is not None else None),
         "table": {
             "capacity": srv.table.capacity,
             "row_digest": [d.hex() if d is not None else None
@@ -563,7 +580,11 @@ def _apply_snapshot(srv, arrays: Dict[str, np.ndarray], meta: dict, *,
     srv._tenants = {t: dict(v) for t, v in meta["tenants"].items()}
     srv._wait_gens = list(meta["wait_gens"])
     srv._wait_s = list(meta["wait_s"])
+    srv._resume_wait_gens = list(meta.get("resume_wait_gens", []))
+    srv._resume_wait_s = list(meta.get("resume_wait_s", []))
     srv.shed = list(meta["shed"])
+    if meta.get("obs") is not None and srv._obs is not None:
+        srv._obs.restore(meta["obs"])
     if srv.sched is not None:
         _restore_sched_state(srv.sched, meta["sched"])
 
@@ -730,14 +751,25 @@ class DurabilityManager:
             # result assembly without re-emitting them to the sink
             fields["stream_hwm"] = {str(k): v for k, v in
                                     srv._stream.hwm_map().items()}
-        self.journal.append("gen", **fields)
-        self.journal.commit()
+        with obs_phase(srv._obs, "journal_append"):
+            if srv._obs is not None:
+                # watermarks ride every gen record so recover() can raise
+                # replayed counters/timings to at least their pre-crash
+                # values — replay re-counts the tail deterministically,
+                # but work done between the last commit and the crash
+                # would otherwise vanish.  Taken inside the phase so the
+                # in-flight credit counts this very append.
+                fields["obs_wm"] = srv._obs.watermark()
+            self.journal.append("gen", **fields)
+            self.journal.commit()
         if (self._interval and
                 srv.generation - self._last_snapshot_gen >= self._interval):
             extra: list = []
             if srv._chaos is not None and srv._chaos.wants_verify():
-                extra = self._verify_and_rollback(srv)
-            self.take_snapshot(srv)
+                with obs_phase(srv._obs, "rollback_verify"):
+                    extra = self._verify_and_rollback(srv)
+            with obs_phase(srv._obs, "snapshot_write"):
+                self.take_snapshot(srv)
             results = results + extra
         return results
 
@@ -853,6 +885,7 @@ def recover(directory: str | pathlib.Path, *,
             trace=meta["trace_enabled"],
             stream=meta.get("stream_enabled", False),
             compact=meta["compact_enabled"],
+            obs=meta.get("obs_enabled", False),
             scheduler=_scheduler_from_meta(meta["sched"]))
         _apply_snapshot(srv, arrays, meta, store=store, builders=builders)
         start_seq = int(meta["journal_seq"])
@@ -869,6 +902,7 @@ def recover(directory: str | pathlib.Path, *,
             shard=om["shard"], trace=om["trace_enabled"],
             stream=om.get("stream_enabled", False),
             compact=om["compact_enabled"],
+            obs=om.get("obs_enabled", False),
             scheduler=_scheduler_from_meta(om["sched"]))
         if om["sched"] is not None:
             _restore_sched_state(srv.sched, om["sched"])
@@ -925,6 +959,18 @@ def recover(directory: str | pathlib.Path, *,
                 replayed_results.extend(out)
             replayed_gens += 1
         # open / snapshot / rollback / recover records carry no replay action
+
+    if srv._obs is not None:
+        # counters monotone across the crash: replay re-counted the tail
+        # deterministically, but anything the dead server counted between
+        # its last committed gen record and the crash is floored back in
+        # from the newest journaled watermark (idempotent elementwise max)
+        wm = None
+        for rec in records:
+            if rec["kind"] == "gen" and rec.get("obs_wm") is not None:
+                wm = rec["obs_wm"]
+        if wm:
+            srv._obs.apply_watermark(wm)
 
     srv.recovery_generations += replayed_gens
     if attach:

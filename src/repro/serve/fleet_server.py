@@ -68,6 +68,7 @@ import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -78,6 +79,9 @@ from repro.core.hookcfg import HookConfig, PolicyRule
 from repro.core.isa import Asm
 from repro.core.runtime import (FleetImageTable, Mechanism, PreparedProcess,
                                 initial_state, prepare)
+from repro.obs import ObsHub
+from repro.obs import now as obs_now
+from repro.obs import phase as obs_phase
 from repro.sched.scheduler import PolicyScheduler
 from repro.trace import policy as trace_policy
 from repro.trace import recorder as trace_recorder
@@ -116,6 +120,10 @@ class FleetRequest:
     # or None) captured at preemption/eviction time; restored verbatim by
     # fleet.restore_lanes on re-admission
     checkpoint: Optional[tuple] = None
+    # last park point (preemption/eviction checkpoint or C3 recycle):
+    # re-admission records generation + wall-clock resume waits from here
+    parked_gen: int = -1
+    parked_s: float = 0.0
     charged_svc: int = 0               # counters already charged to the
     charged_deny: int = 0              # ledger (delta bookkeeping across
     charged_emul: int = 0              # preempt/resume cycles)
@@ -165,7 +173,8 @@ class FleetServer:
                  stream: Optional[bool] = None,
                  compact: Optional[bool] = None,
                  scheduler: Optional[PolicyScheduler] = None,
-                 durability=None, chaos=None):
+                 durability=None, chaos=None,
+                 obs: Optional["ObsHub | bool"] = None):
         assert pool >= 1
         self.pool = pool
         self.cfg = cfg or HookConfig()
@@ -204,11 +213,21 @@ class FleetServer:
         self.enosys_total = 0                    # -ENOSYS fall-throughs seen
         self.trace_records = 0                   # ring records published
         self.trace_dropped = 0                   # ring overflow drops
+        # host-side observability (repro.obs): None/False keeps the server
+        # entirely unobserved — no registry, no spans, a shared null phase
+        # timer — so the disabled path allocates nothing
+        if isinstance(obs, ObsHub):
+            self._obs: Optional[ObsHub] = obs
+        else:
+            enabled = bool(self.cfg.obs_enabled if obs is None else obs)
+            self._obs = ObsHub(self.cfg) if enabled else None
         # policy scheduler (repro.sched): None keeps every decision point
         # on the pre-scheduler code path, bit-identically
         self.sched = scheduler
         if self.sched is not None:
-            self.sched.attach(self.cfg)
+            self.sched.attach(self.cfg,
+                              metrics=(self._obs.registry
+                                       if self._obs is not None else None))
             if not self.trace_enabled and (
                     self.sched.ledger.budgets or self.cfg.budget_svc
                     or self.cfg.budget_deny or self.cfg.sched_deny_rate > 0):
@@ -229,6 +248,11 @@ class FleetServer:
         self.pool_shrinks = 0
         self._wait_gens: List[int] = []
         self._wait_s: List[float] = []
+        # resume-wait ledger: re-admission latency of parked lanes
+        # (preempted / budget-evicted / C3-recycled), kept separate from
+        # the first-admission waits above — a request can appear in both
+        self._resume_wait_gens: List[int] = []
+        self._resume_wait_s: List[float] = []
         # durable serving (repro.serve.durability) + chaos injection
         self.retries = 0                         # dispatch attempts re-run
         self.rollbacks = 0                       # carry rollbacks to snapshot
@@ -418,7 +442,7 @@ class FleetServer:
             rid=self._next_rid, pp=pp, builder=builder, cfg=rcfg,
             mechanism=mechanism, virtualize=virtualize,
             fuel=int(self.default_fuel if fuel is None else fuel), regs=regs,
-            submitted_gen=self.generation, submitted_s=time.perf_counter(),
+            submitted_gen=self.generation, submitted_s=obs_now(),
             policy=(trace_policy.compile_policy(policy)
                     if policy is not None else None),
             tenant=str(rcfg.tenant if tenant is None else tenant),
@@ -430,6 +454,9 @@ class FleetServer:
         req.attempts = 1
         self._tstat(req.tenant)["submitted"] += 1
         self._queue.append(req)
+        if self._obs is not None:
+            self._obs.spans.submit(str(req.rid), req.tenant or "default",
+                                   req.submitted_s)
         if self._dur is not None:
             self._dur.on_submit(self, req)       # write-ahead: durable
             # before any generation can observe the request
@@ -441,6 +468,11 @@ class FleetServer:
         self._next_rid = max(self._next_rid, req.rid + 1)
         self._tstat(req.tenant)["submitted"] += 1
         self._queue.append(req)
+        if self._obs is not None:
+            # span dedup makes this idempotent: a rid whose lifecycle the
+            # snapshot already closed records nothing on replay
+            self._obs.spans.submit(str(req.rid), req.tenant or "default",
+                                   req.submitted_s)
 
     def update_policy(self, tenant: str,
                       rules: Sequence[PolicyRule]) -> int:
@@ -538,8 +570,31 @@ class FleetServer:
               if self._trace is not None else None)
         req.checkpoint = (state, tr)
         req.preemptions += 1
+        req.parked_gen = self.generation
+        req.parked_s = obs_now()
+        if self._obs is not None:
+            self._obs.spans.event(str(req.rid), "preempt",
+                                  req.tenant or "default", req.parked_s)
         self._slots[self._order[p]] = None
         return req
+
+    def _record_resume(self, req: FleetRequest, event: str) -> None:
+        """Close a park interval on re-admission: generation + wall-clock
+        resume waits into their own ledger (and, observed, the resume-wait
+        histogram + a lifecycle span event)."""
+        if req.parked_gen < 0:
+            return
+        t = obs_now()
+        self._resume_wait_gens.append(self.generation - req.parked_gen)
+        self._resume_wait_s.append(t - req.parked_s)
+        if self._obs is not None:
+            self._obs.registry.histogram(
+                "server_resume_wait_seconds",
+                "park (preempt/evict/C3) -> re-admission").observe(
+                    max(0.0, t - req.parked_s))
+            self._obs.spans.event(str(req.rid), event,
+                                  req.tenant or "default", t)
+        req.parked_gen, req.parked_s = -1, 0.0
 
     def _sched_pass(self) -> None:
         """Pre-generation scheduling: deny-rate evictions, budget
@@ -760,6 +815,7 @@ class FleetServer:
             pols.append(req.policy)
             self._ids[req.slot] = req.row
             self._fuel[req.slot] = req.fuel
+            self._record_resume(req, "c3_readmit")
         self._readmit.clear()
         self._readmit_rids.clear()
         if self.sched is None:
@@ -805,9 +861,18 @@ class FleetServer:
             req.slot = slot
             if req.admitted_gen < 0:     # first admission: latency metrics
                 req.admitted_gen = self.generation
-                req.admitted_s = time.perf_counter()
+                req.admitted_s = obs_now()
                 self._wait_gens.append(req.admitted_gen - req.submitted_gen)
                 self._wait_s.append(req.admitted_s - req.submitted_s)
+                if self._obs is not None:
+                    self._obs.spans.event(str(req.rid), "admit",
+                                          req.tenant or "default",
+                                          req.admitted_s)
+            else:
+                # re-admission of a parked (preempted / evicted) lane:
+                # its wait belongs to the resume histogram, not the
+                # first-admission one above
+                self._record_resume(req, "resume")
             self._slots[slot] = req
             self._ids[slot] = req.row
             self._fuel[slot] = req.fuel
@@ -921,6 +986,8 @@ class FleetServer:
                     req.pp, req.row = new_pp, new_row
                     req.attempts += 1
                     self.discarded_steps += int(icount[i])
+                    req.parked_gen = self.generation
+                    req.parked_s = obs_now()
                     self._readmit.append(req)
                     self._readmit_rids.add(req.rid)
                     if self._stream is not None:
@@ -966,6 +1033,9 @@ class FleetServer:
             self.trace_records += len(recs)
             self.trace_dropped += dropped
             self.completed += 1
+            if self._obs is not None:
+                self._obs.spans.event(str(req.rid), "complete",
+                                      req.tenant or "default")
             if self._trace is not None:
                 self._charge(req, int(trace_cnt[i]), int(trace_deny[i]),
                              int(trace_emul[i]), int(trace_kill[i]),
@@ -989,15 +1059,22 @@ class FleetServer:
             self._slots[self._order[i]] = None
         return results
 
+    def _phase(self, name: str):
+        """Phase timer against this server's hub (a shared no-op when
+        observation is off)."""
+        return obs_phase(self._obs, name)
+
     def _dispatch(self, ids: np.ndarray) -> None:
         if self._trace is None:
-            self._states = F.run_fleet_span(
-                self.table.images, self._states, ids,
-                steps=self.gen_steps, chunk=self.chunk)
+            with self._phase("dispatch"):
+                self._states = F.run_fleet_span(
+                    self.table.images, self._states, ids,
+                    steps=self.gen_steps, chunk=self.chunk)
         elif self._stream is None:
-            self._states, self._trace = F.run_fleet_span(
-                self.table.images, self._states, ids,
-                steps=self.gen_steps, chunk=self.chunk, trace=self._trace)
+            with self._phase("dispatch"):
+                self._states, self._trace = F.run_fleet_span(
+                    self.table.images, self._states, ids,
+                    steps=self.gen_steps, chunk=self.chunk, trace=self._trace)
         else:
             self._dispatch_streamed(ids)
 
@@ -1016,18 +1093,23 @@ class FleetServer:
         pending = None
         while left > 0:
             steps = min(interval, left)
-            self._states, self._trace = F.run_fleet_span(
-                self.table.images, self._states, ids,
-                steps=steps, chunk=self.chunk, trace=self._trace)
+            with self._phase("dispatch"):
+                self._states, self._trace = F.run_fleet_span(
+                    self.table.images, self._states, ids,
+                    steps=steps, chunk=self.chunk, trace=self._trace)
             if pending is not None:
-                self._stream.push_block(keys, *pending)
-            self._trace, cold, counts, bases = F.flip_trace(self._trace)
+                with self._phase("stream_flush"):
+                    self._stream.push_block(keys, *pending)
+            with self._phase("dispatch"):
+                self._trace, cold, counts, bases = F.flip_trace(self._trace)
             pending = (cold, counts, bases)
             left -= steps
-        self._stream.push_block(keys, *pending)
-        # writers land before durability journals the emission watermarks,
-        # so a recovered server never re-emits what a sink already holds
-        self._stream.flush()
+        with self._phase("stream_flush"):
+            self._stream.push_block(keys, *pending)
+            # writers land before durability journals the emission
+            # watermarks, so a recovered server never re-emits what a
+            # sink already holds
+            self._stream.flush()
 
     def _drop_request(self, req: FleetRequest, reason: str) -> None:
         """Load-shed one queued request: reject-with-reason, releasing any
@@ -1038,6 +1120,9 @@ class FleetServer:
             self._stream.pop(req.rid)  # release any buffered records
         self.shed.append({"rid": req.rid, "tenant": req.tenant,
                           "reason": reason, "generation": self.generation})
+        if self._obs is not None:
+            self._obs.spans.event(str(req.rid), "shed",
+                                  req.tenant or "default")
         self.shed_requests += 1
         self._tstat(req.tenant)["shed"] += 1
         if self._dur is not None:
@@ -1084,7 +1169,11 @@ class FleetServer:
         carry, slots, queue, table, scheduler, tenant stats — is taken
         wholesale."""
         keep = {"_dur", "_chaos", "retries", "rollbacks", "shed_requests",
-                "recovery_generations", "watchdog_trips"}
+                "recovery_generations", "watchdog_trips",
+                # the live hub's counters/spans are cumulative (and
+                # monotone); the replica's replay-era copy would regress
+                # the phase timings the corrupted window already recorded
+                "_obs"}
         for k, v in other.__dict__.items():
             if k not in keep:
                 self.__dict__[k] = v
@@ -1100,11 +1189,31 @@ class FleetServer:
         ``cfg.chaos_max_retries`` extra attempts, then the queue is
         load-shed with a reason and the generation skipped.  With
         durability attached every generation (dispatched, idle or
-        skipped) is journaled so replay re-walks the same sequence."""
+        skipped) is journaled so replay re-walks the same sequence.
+
+        An observed server (``repro.obs``) times the whole generation and
+        each stage of it through the phase profiler, refreshes the ledger
+        gauges, and gives the snapshot sink a chance to write — all
+        host-side bookkeeping; published states stay bit-identical."""
+        if self._obs is None:
+            return self._step()
+        t0 = obs_now()
+        self._obs.gen_begin(t0)
+        try:
+            return self._step()
+        finally:
+            self._obs.maybe_snapshot()
+            self._refresh_gauges()
+            self._obs.gen_end(t0)
+
+    def _step(self) -> List[FleetResult]:
         if self.sched is not None:
-            self._sched_pass()
-        self._rebucket()
-        self._admit_pending()
+            with self._phase("sched_pass"):
+                self._sched_pass()
+        with self._phase("rebucket"):
+            self._rebucket()
+        with self._phase("admission"):
+            self._admit_pending()
         if all(r is None for r in self._slots):
             if self.sched is not None and (self._queue or self._readmit):
                 # every queued tenant is waiting out quarantine: tick the
@@ -1116,7 +1225,8 @@ class FleetServer:
             return []
         ids = self._ids[self._order]
         if self._dur is not None:
-            self._dur.before_dispatch(self)
+            with self._phase("journal_append"):
+                self._dur.before_dispatch(self)
         skipped = False
         if self._chaos is None:
             self._dispatch(ids)
@@ -1143,15 +1253,25 @@ class FleetServer:
                         self._shed_queue(f"retries_exhausted:{kind}")
                         skipped = True
                         break
-                    time.sleep(self.cfg.chaos_backoff_base_ms
-                               * (1 << (tries - 1)) / 1000.0)
+                    with self._phase("retry_backoff"):
+                        time.sleep(self.cfg.chaos_backoff_base_ms
+                                   * (1 << (tries - 1)) / 1000.0)
         if skipped:
             self._skip_generation("retries_exhausted")
             results: List[FleetResult] = []
         else:
             self.dispatches += 1
             self.generation += 1
-            results = self._harvest()
+            if self._obs is not None:
+                # split device wait out of the harvest readbacks so the
+                # breakdown separates "XLA still computing" from
+                # "host-side publish work" (harvest would block on its
+                # first np.asarray anyway: this moves the wait, it does
+                # not add one)
+                with self._phase("device_sync"):
+                    jax.block_until_ready(self._states)
+            with self._phase("harvest"):
+                results = self._harvest()
         if self._dur is not None:
             results = self._dur.after_generation(self, results,
                                                  skipped=skipped)
@@ -1218,6 +1338,8 @@ class FleetServer:
     def stats(self) -> dict:
         waits_g = self._wait_gens or [0]
         waits_s = self._wait_s or [0.0]
+        r_gens = self._resume_wait_gens or [0]
+        r_s = self._resume_wait_s or [0.0]
         return {
             "pool": self.pool,
             "gen_steps": self.gen_steps,
@@ -1250,10 +1372,18 @@ class FleetServer:
             "wasted_steps": self.dispatched_steps - self.executed_steps,
             "occupancy": round(self.executed_steps / self.dispatched_steps, 4)
             if self.dispatched_steps else 1.0,
+            "admission_waits": len(self._wait_gens),
             "admission_wait_gens_mean": float(np.mean(waits_g)),
             "admission_wait_gens_max": int(np.max(waits_g)),
             "admission_wait_ms_mean": 1e3 * float(np.mean(waits_s)),
             "admission_wait_ms_max": 1e3 * float(np.max(waits_s)),
+            # re-admission latency of parked lanes (preempt/evict/C3),
+            # recorded separately from the first-admission waits above
+            "resume_waits": len(self._resume_wait_gens),
+            "resume_wait_gens_mean": float(np.mean(r_gens)),
+            "resume_wait_gens_max": int(np.max(r_gens)),
+            "resume_wait_ms_mean": 1e3 * float(np.mean(r_s)),
+            "resume_wait_ms_max": 1e3 * float(np.max(r_s)),
             # policy scheduler (repro.sched) + per-tenant accounting
             "scheduler_enabled": self.sched is not None,
             "preemptions": self.preemptions,
@@ -1284,4 +1414,66 @@ class FleetServer:
             "journal_records": (self._dur.journal.records
                                 if self._dur and self._dur.journal else 0),
             "chaos": (self._chaos.summary() if self._chaos else None),
+            "obs_enabled": self._obs is not None,
         }
+
+    def _refresh_gauges(self) -> None:
+        """Mirror the serving ledgers (PR 4-6 state) into the registry so
+        one scrape covers occupancy, step accounting, pool geometry,
+        quarantine pressure and journal growth."""
+        ob = self._obs
+        if ob is None:
+            return
+        g = ob.registry.gauge
+        g("server_occupancy",
+          "executed / dispatched lane-steps").set(
+            self.executed_steps / self.dispatched_steps
+            if self.dispatched_steps else 1.0)
+        g("server_dispatched_steps", "lane-steps paid for").set(
+            self.dispatched_steps)
+        g("server_executed_steps", "lane-steps actually run").set(
+            self.executed_steps)
+        g("server_bucket_width", "current compaction rung").set(self._W)
+        g("server_pool_lanes", "configured pool width").set(self.pool)
+        g("server_queue_depth", "requests waiting for a lane").set(
+            len(self._queue))
+        g("server_occupied_lanes", "lanes running a request").set(
+            self._occupied_lanes())
+        g("server_generation", "generation clock").set(self.generation)
+        g("server_completed", "requests published").set(self.completed)
+        if self.sched is not None:
+            g("sched_quarantine_depth",
+              "tenants waiting out backoff").set(
+                self.sched.quarantine.depth(self.generation))
+        if self._dur is not None and self._dur.journal is not None:
+            g("journal_bytes", "write-ahead journal size").set(
+                self._dur.journal.bytes_written)
+            g("journal_records", "write-ahead journal records").set(
+                self._dur.journal.records)
+
+    def metrics(self, fmt: str = "dict"):
+        """The observability surface (``repro.obs``): the registry view
+        plus the phase breakdown and span summary.
+
+        ``fmt="dict"`` returns a JSON-able snapshot — counters, gauges,
+        histogram summaries, per-phase wall-clock breakdown with its
+        coverage ratio (the share of generation time the phases explain),
+        and the request-span summary with per-tenant latency percentiles.
+        ``fmt="prometheus"`` returns the text exposition format instead.
+        An unobserved server returns ``{}`` / ``""``."""
+        if self._obs is None:
+            return "" if fmt == "prometheus" else {}
+        self._refresh_gauges()
+        if fmt == "prometheus":
+            return self._obs.registry.render_prometheus()
+        if fmt != "dict":
+            raise ValueError(
+                f"metrics fmt must be 'dict' or 'prometheus', got {fmt!r}")
+        snap = self._obs.registry.snapshot()
+        b = self._obs.profiler.breakdown()
+        snap["phases"] = b["phases"]
+        snap["generation"] = b["generation"]
+        snap["phase_coverage"] = b["coverage"]
+        snap["spans"] = self._obs.spans.summary()
+        snap["sink_writes"] = self._obs.sink_writes
+        return snap

@@ -38,3 +38,10 @@ def pytest_configure(config):
         "sched+trace+compact, chaos fault injection answered by "
         "retry/rollback/quarantine/shed, snapshot corruption fallback; "
         "scale up via ASC_TEST_EXAMPLES)")
+    config.addinivalue_line(
+        "markers",
+        "obs: serving telemetry suites (registry/profiler/span units, "
+        "observed-vs-unobserved bit-identity, zero-allocation disabled "
+        "path, obs knob round-trip + sink validation, resume-wait ledger, "
+        "ledger gauges, counters monotone + spans complete across "
+        "kill-and-recover; scale up via ASC_TEST_EXAMPLES)")
