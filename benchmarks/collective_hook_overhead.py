@@ -29,6 +29,7 @@ run.py records into BENCH_fleet.json.
 """
 from __future__ import annotations
 
+import statistics
 import time
 
 import numpy as np
@@ -161,6 +162,96 @@ def run_census(chunk: int = 128, refresh: bool = False) -> dict:
     return _CACHE[chunk]
 
 
+def run_engine_race(chunk: int = 128, pairs: int = 3, quick: bool = False,
+                    refresh: bool = False) -> dict:
+    """Race the two chunk dispatchers (``engine="xla"`` vs ``"pallas"``, the
+    fused megastep kernel) on the census fleet.
+
+    Timing is **interleaved pairs** (xla, pallas, xla, pallas, ...) so drift
+    hits both arms equally; the reported speedup is the median of the
+    per-pair ratios.  Before any timing, the race asserts the engines are
+    bit-identical — final machine states field by field, decoded syscall
+    trace records, and per-lane policy histograms — so a perf win can never
+    hide a semantic fork.
+
+    ``quick`` shrinks the grid (every 5th scale point -> 80 lanes) and runs
+    one pair: the CI sanity shape, not a publishable number.
+
+    Honesty note: both arms lower to the same XLA ops on hosts without a
+    Pallas backend (interpret mode), so the CPU ratio sits near 1.0 by
+    construction; the >= 1.3x acceptance bar applies to accelerator
+    backends where the fused kernel actually changes the dispatch.
+    """
+    import jax
+
+    from repro.kernels.megastep.kernel import default_interpret
+    from repro.trace import recorder
+
+    key = ("race", chunk, pairs, quick)
+    if not refresh and key in _CACHE:
+        return _CACHE[key]
+    grid = census_grid()
+    if quick:
+        keep = set(SCALES[::5])
+        grid = [g for i, g in enumerate(grid) if SCALES[i % len(SCALES)] in keep]
+        pairs = 1
+    cells = _prepare_cells()
+    pps = [cells[(g[0], g[3])] for g in grid]
+    lane_regs = [{19: g[4]} for g in grid]
+
+    def go(engine, trace=False):
+        return run_fleet_prepared(pps, fuel=FUEL, chunk=chunk, regs=lane_regs,
+                                  trace=trace or None, engine=engine)
+
+    # -- bit-identity gate (also warms both compile caches) ----------------
+    out_x, out_p = go("xla"), go("pallas")
+    for field in out_x._fields:
+        assert np.array_equal(np.asarray(getattr(out_x, field)),
+                              np.asarray(getattr(out_p, field))), \
+            f"engine race: states diverged on {field!r}"
+    (sx, tx), (sp, tp) = go("xla", trace=True), go("pallas", trace=True)
+    for field in sx._fields:
+        assert np.array_equal(np.asarray(getattr(sx, field)),
+                              np.asarray(getattr(sp, field))), \
+            f"engine race: traced states diverged on {field!r}"
+    assert recorder.harvest(tx) == recorder.harvest(tp), \
+        "engine race: decoded traces diverged"
+    hx, hp = np.asarray(tx.hist), np.asarray(tp.hist)
+    assert np.array_equal(hx, hp), "engine race: histograms diverged"
+
+    # -- interleaved timing pairs ------------------------------------------
+    steps = int(np.asarray(out_x.icount).sum())
+    t_x, t_p = [], []
+    for _ in range(pairs):
+        t0 = time.perf_counter()
+        go("xla")
+        t_x.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        go("pallas")
+        t_p.append(time.perf_counter() - t0)
+    ratios = [x / p for x, p in zip(t_x, t_p)]
+    wall_x, wall_p = statistics.median(t_x), statistics.median(t_p)
+    _CACHE[key] = {
+        "lanes": len(grid),
+        "chunk": chunk,
+        "pairs": pairs,
+        "quick": quick,
+        "platform": jax.default_backend(),
+        "interpret": bool(default_interpret()),
+        "total_steps": steps,
+        "xla_wall_s": round(wall_x, 3),
+        "pallas_wall_s": round(wall_p, 3),
+        "xla_steps_per_sec": round(steps / wall_x, 1),
+        "pallas_steps_per_sec": round(steps / wall_p, 1),
+        "pallas_speedup_vs_xla": round(statistics.median(ratios), 3),
+        "target_speedup": 1.3,
+        "target_applies": "accelerator backends (interpret=False)",
+        "bit_identical": {"states": True, "decoded_traces": True,
+                          "histograms": True},
+    }
+    return _CACHE[key]
+
+
 def run() -> list:
     c = run_census()
     rows = [{
@@ -175,19 +266,35 @@ def run() -> list:
     return rows
 
 
-def main() -> None:
-    c = run_census()
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="engine-race sanity only: 80-lane grid, one "
+                         "interleaved pair (the CI shape)")
+    args = ap.parse_args(argv)
     print("name,us_per_call,derived")
-    print(f"collective_hook/census,0,"
-          f"lanes={c['lanes']} images={c['distinct_images']} "
-          f"scalar={c['scalar_steps_per_sec']:.0f}sps "
-          f"fleet={c['fleet_steps_per_sec']:.0f}sps "
-          f"speedup={c['speedup']}x dispatches={c['scalar_dispatches']}->1")
-    from repro.core import costmodel as cm
-    for mech, by_w in c["per_call_cycles"].items():
-        gp = by_w["getpid"]
-        print(f"collective_hook/{mech},{cm.cycles_to_ns(gp)/1000:.5f},"
-              + " ".join(f"{w}={v}" for w, v in by_w.items()))
+    if not args.quick:
+        c = run_census()
+        print(f"collective_hook/census,0,"
+              f"lanes={c['lanes']} images={c['distinct_images']} "
+              f"scalar={c['scalar_steps_per_sec']:.0f}sps "
+              f"fleet={c['fleet_steps_per_sec']:.0f}sps "
+              f"speedup={c['speedup']}x dispatches={c['scalar_dispatches']}->1")
+        from repro.core import costmodel as cm
+        for mech, by_w in c["per_call_cycles"].items():
+            gp = by_w["getpid"]
+            print(f"collective_hook/{mech},{cm.cycles_to_ns(gp)/1000:.5f},"
+                  + " ".join(f"{w}={v}" for w, v in by_w.items()))
+    r = run_engine_race(quick=args.quick)
+    print(f"collective_hook/engine_race,0,"
+          f"lanes={r['lanes']} platform={r['platform']} "
+          f"interpret={r['interpret']} "
+          f"xla={r['xla_steps_per_sec']:.0f}sps "
+          f"pallas={r['pallas_steps_per_sec']:.0f}sps "
+          f"pallas_vs_xla={r['pallas_speedup_vs_xla']}x "
+          f"bit_identical=states+traces+hist")
 
 
 if __name__ == "__main__":

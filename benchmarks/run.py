@@ -37,7 +37,9 @@ Besides the CSV stream, writes ``benchmarks/results/BENCH_fleet.json`` with
 machine-readable per-mechanism per-call cycles and the scalar-vs-fleet
 throughput numbers — one ``python -m benchmarks.run`` refreshes every
 ``BENCH_*.json``.  ``--only <name>`` runs a single suite (substring match
-allowed), e.g. ``--only trace`` to refresh just BENCH_trace.json.
+allowed), e.g. ``--only trace`` to refresh just BENCH_trace.json;
+``--only fleet`` refreshes just BENCH_fleet.json (census + xla-vs-pallas
+engine race + Table 3) without the per-suite CSV passes.
 """
 import argparse
 import importlib
@@ -64,12 +66,22 @@ def write_bench_json(payload: dict, path: pathlib.Path = BENCH_PATH) -> None:
 
 
 def collect_fleet_bench() -> dict:
-    """The machine-readable fleet benchmark record (BENCH_fleet.json)."""
+    """The machine-readable fleet benchmark record (BENCH_fleet.json).
+
+    Schema v2 adds the ``engines`` block: the xla-vs-pallas (megastep
+    kernel) race on the 400-lane census — interleaved median-ratio pairs,
+    with final states, decoded traces and histograms asserted bit-identical
+    inside the benchmark before anything is timed.  ``platform`` /
+    ``interpret`` qualify the ratio: on hosts without a Pallas backend both
+    arms lower to the same XLA ops, so the >= 1.3x target applies to
+    accelerator backends.
+    """
     from benchmarks import collective_hook_overhead, hook_overhead
     census = collective_hook_overhead.run_census()
+    race = collective_hook_overhead.run_engine_race()
     table3 = hook_overhead.run(engine="fleet")
     return {
-        "schema": "BENCH_fleet/v1",
+        "schema": "BENCH_fleet/v2",
         "table3_per_mechanism": {
             r["mechanism"]: {
                 "cycles_per_call": r["cycles_per_call"],
@@ -79,6 +91,7 @@ def collect_fleet_bench() -> dict:
             } for r in table3
         },
         "census": census,
+        "engines": race,
     }
 
 
@@ -88,11 +101,18 @@ def main(argv=None) -> None:
                     help="run a single suite (exact or substring match)")
     args = ap.parse_args(argv)
     suites = SUITES
+    fleet_only = False
     if args.only:
         suites = [s for s in SUITES if args.only == s] or \
                  [s for s in SUITES if args.only in s]
         if not suites:
-            ap.error(f"--only {args.only!r} matches none of {SUITES}")
+            # "--only fleet" refreshes just BENCH_fleet.json (census +
+            # engine race + table 3) without running every suite's CSV pass
+            if args.only in ("fleet", "bench_fleet", "BENCH_fleet"):
+                suites, fleet_only = [], True
+            else:
+                ap.error(f"--only {args.only!r} matches none of {SUITES} "
+                         f"(or 'fleet' for BENCH_fleet.json)")
 
     failures = 0
     for name in suites:
@@ -106,15 +126,18 @@ def main(argv=None) -> None:
         except Exception:
             failures += 1
             print(f"{name}/ERROR,0,{traceback.format_exc(limit=2)!r}")
-    if not args.only or _FLEET_BENCH_INPUTS.intersection(suites):
+    if not args.only or fleet_only or _FLEET_BENCH_INPUTS.intersection(suites):
         print("# === BENCH_fleet.json ===", flush=True)
         try:
             payload = collect_fleet_bench()
             write_bench_json(payload)
             c = payload["census"]
+            e = payload["engines"]
             print(f"bench_fleet/written,0,path={BENCH_PATH} "
                   f"speedup={c['speedup']}x "
-                  f"fleet={c['fleet_steps_per_sec']:.0f}sps")
+                  f"fleet={c['fleet_steps_per_sec']:.0f}sps "
+                  f"pallas_vs_xla={e['pallas_speedup_vs_xla']}x "
+                  f"({e['platform']}, interpret={e['interpret']})")
         except Exception:
             failures += 1
             print(f"bench_fleet/ERROR,0,{traceback.format_exc(limit=2)!r}")

@@ -1,11 +1,11 @@
 #!/usr/bin/env bash
 # CI-style gate: tier-1, the smoke + serving + trace + compaction +
-# sched + stream + durability + obs tiers, and seconds-long sanity passes —
-# several on 2 forced host devices (the sharded serving pool, the
-# lane-partitioned census, a compaction rung, and the durability
+# sched + stream + durability + obs + megastep tiers, and seconds-long
+# sanity passes — several on 2 forced host devices (the sharded serving
+# pool, the lane-partitioned census, a compaction rung, and the durability
 # kill-recover pass) plus the trace-overhead, compaction, scheduler,
-# durability, and obs benchmarks (--quick).  See tests/README.md for the
-# tiers.
+# durability, obs, and two-engine (xla vs pallas megastep) benchmarks
+# (--quick).  See tests/README.md for the tiers.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -38,6 +38,9 @@ ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m durability
 echo "== obs tier (heavier example counts) =="
 ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m obs
 
+echo "== megastep tier (heavier example counts) =="
+ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m megastep
+
 echo "== serving throughput sanity (sharded, 2 host devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
     python -m benchmarks.serving_throughput --quick --shard
@@ -65,5 +68,8 @@ python -m benchmarks.durability_overhead --quick --devices 2
 
 echo "== obs overhead sanity (single device) =="
 python -m benchmarks.obs_overhead --quick
+
+echo "== two-engine sanity (xla vs pallas megastep, bit-identity gate) =="
+python -m benchmarks.collective_hook_overhead --quick
 
 echo "check.sh: all green"

@@ -43,6 +43,7 @@ from jax import lax
 
 from . import costmodel as cm
 from . import layout as L
+from . import opspec
 from .isa import Op
 from .machine import (COST_TABLE, HALT_BADMEM, HALT_EXIT, HALT_FUEL,
                       HALT_KILL, HALT_SEGV, HALT_TRAP, RUNNING,
@@ -75,17 +76,20 @@ REC_STEP, REC_PC, REC_NR, REC_X0, REC_X1, REC_X2, REC_RET, REC_VERDICT = \
     range(REC_WORDS)
 
 # Policy table slots: one per modelled syscall, plus the catch-all UNKNOWN
-# slot every other number (the sys_enosys fall-through) resolves to.
-TRACE_SYS = (L.SYS_READ, L.SYS_WRITE, L.SYS_GETPID, L.SYS_EXIT,
-             L.SYS_RT_SIGRETURN, L.SYS_OPENAT, L.SYS_CLOSE)
-SLOT_UNKNOWN = len(TRACE_SYS)
-N_POLICY_SLOTS = len(TRACE_SYS) + 1
+# slot every other number (the sys_enosys fall-through) resolves to.  The
+# slot numbering, verdict codes and syscall rows all live in the op-spec
+# table (repro.core.opspec.SYSCALLS) — re-exported here for the long list
+# of existing importers.
+TRACE_SYS = opspec.TRACE_SYS
+SLOT_UNKNOWN = opspec.SLOT_UNKNOWN
+N_POLICY_SLOTS = opspec.N_POLICY_SLOTS
 
 # Per-slot actions (seccomp-style); also the recorded verdict codes, with
 # UNKNOWN marking an ALLOWed syscall that fell through to -ENOSYS.
-POL_ALLOW, POL_DENY, POL_EMULATE, POL_KILL = 0, 1, 2, 3
-VERDICT_UNKNOWN = 4
-N_VERDICTS = 5
+POL_ALLOW, POL_DENY = opspec.POL_ALLOW, opspec.POL_DENY
+POL_EMULATE, POL_KILL = opspec.POL_EMULATE, opspec.POL_KILL
+VERDICT_UNKNOWN = opspec.VERDICT_UNKNOWN
+N_VERDICTS = opspec.N_VERDICTS
 
 DEFAULT_TRACE_CAP = 64
 
@@ -184,42 +188,19 @@ def _widx_v(addr):
 
 
 def _cond_holds_v(nzcv, cond):
-    # The 16-way NZCV predicate pick as a chain of [B] selects rather than a
-    # [B, 16] stack + take_along_axis: like the policy lookup in _step_core,
-    # the gather gets wrapped in CPU parallel-task calls (and the stack
-    # materialises 16 [B] predicates every step) while the select chain
-    # fuses straight into the step — measured 457k -> 686k census
-    # steps/sec (~1.5x) on the 400-lane grid.  Conds 14/15 (AL/NV-as-AL)
-    # are the fall-through.
-    n = (nzcv & 8) != 0
-    z = (nzcv & 4) != 0
-    c = (nzcv & 2) != 0
-    v = (nzcv & 1) != 0
-    preds = (z, ~z, c, ~c, n, ~n, v, ~v,
-             c & ~z, ~(c & ~z), n == v, n != v,
-             ~z & (n == v), ~(~z & (n == v)))
-    sel = jnp.clip(cond, 0, 15).astype(I32)
-    out = jnp.ones_like(n)
-    for i, p in enumerate(preds):
-        out = jnp.where(sel == I32(i), p, out)
-    return out
+    # One 16-word bitmask pick (opspec.COND_MASK) instead of materialising
+    # 14 predicate trees: a tiny-constant gather exactly like COST_TABLE[op]
+    # (NOT a [B, 16] take_along_axis, which CPU XLA wraps in parallel-task
+    # calls — the reason the previous select-chain existed).  The mask LUT
+    # is the op-spec table's single copy of the cond constants, shared by
+    # the scalar, XLA and Pallas executors.
+    return opspec.cond_holds(nzcv, cond)
 
 
-def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
-               tr: Optional[TraceState]):
-    """One masked step for every lane; the shared body of
-    :func:`fleet_step` (``tr is None`` — graph unchanged from the untraced
-    engine) and :func:`fleet_step_traced` (``tr`` carries the syscall ring
-    + policy tables; machine-state results stay bit-identical under the
-    default all-ALLOW policy)."""
-    traced = tr is not None
-    B = s.pc.shape[0]
-    lanes = jnp.arange(B)
-    regs0, sp0, pc0, nzcv0, mem0 = s.regs, s.sp, s.pc, s.nzcv, s.mem
-
-    act = (s.halted == RUNNING) & (s.icount < s.fuel)
-
-    # -- fetch: two gathers (packed fields + imm), then bit-unpack -----------
+def _fetch(img: FleetImages, ids: jnp.ndarray, pc0: jnp.ndarray):
+    """Fetch + decode for every lane: two gathers (packed fields + imm),
+    then bit-unpack.  Returns the per-lane field tuple ``(op, rd, rn, rm,
+    sh, cond, sf, imm)`` that :func:`exec_lanes` consumes."""
     ok_fetch = (pc0 >= 0) & (pc0 < L.CODE_LIMIT) & ((pc0 & 3) == 0)
     idx = jnp.clip(pc0 >> 2, 0, L.CODE_WORDS - 1)
     w = img.packed[ids, idx]
@@ -231,27 +212,66 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
     sh = ((w >> 22) & 63).astype(I32)
     cond = ((w >> 28) & 15).astype(I32)
     sf = ((w >> 32) & 1).astype(I32)
+    return op, rd, rn, rm, sh, cond, sf, imm
+
+
+def exec_lanes(fields, s: MachineState, tr: Optional[TraceState],
+               act: Optional[jnp.ndarray] = None,
+               tbl: Optional["opspec.SpecTables"] = None):
+    """Execute one decoded instruction per lane — the one executor body
+    every engine shares, generated from the op-spec table
+    (:mod:`repro.core.opspec`): per-op masks, ALU value rows, memory
+    effects, halt transitions and the syscall branches are all derived
+    from the spec columns, never hand-listed here.
+
+    ``fields`` is :func:`_fetch`'s tuple (any decode source works: the
+    packed fleet tables, or the scalar SoA tables in
+    :func:`repro.core.machine.step`).  ``act`` overrides the live-lane
+    mask — the scalar engine forces all-true to reproduce the legacy
+    unconditional step; fleet drivers leave the default halted/fuel gate.
+
+    ``tr is None`` keeps the graph unchanged from the untraced engine;
+    with a trace carry the syscall ring + policy tables ride along and
+    machine-state results stay bit-identical under all-ALLOW policy.
+
+    ``tbl`` overrides the spec-column bundle (default: the module-level
+    :data:`opspec.TABLES` constants) — the Pallas kernel passes the
+    columns it received as operands, since kernels cannot capture array
+    constants.
+    """
+    traced = tr is not None
+    if tbl is None:
+        tbl = opspec.TABLES
+    op, rd, rn, rm, sh, cond, sf, imm = fields
+    B = s.pc.shape[0]
+    lanes = jnp.arange(B)
+    regs0, sp0, pc0, nzcv0, mem0 = s.regs, s.sp, s.pc, s.nzcv, s.mem
+
+    if act is None:
+        act = (s.halted == RUNNING) & (s.icount < s.fuel)
     sh64 = sh.astype(I64)
 
-    def m(*ops):
-        acc = op == I32(int(ops[0]))
-        for o in ops[1:]:
-            acc = acc | (op == I32(int(o)))
-        return acc & act
+    # -- spec-column gathers: the per-lane op classes ------------------------
+    # Tiny-constant gathers (like COST_TABLE[op]) followed by equality
+    # masks; every mask below is one class compare, not a hand-written
+    # per-op union, so a new opcode is a table row away.
+    aluc = tbl.ALU[op]
+    flagc = tbl.FLAGS[op]
+    memc = tbl.MEM[op]
+    pcc = tbl.PC[op]
 
-    m_illegal, m_null = m(Op.ILLEGAL), m(Op.NULLPAGE)
-    m_movz, m_movk, m_movn = m(Op.MOVZ), m(Op.MOVK), m(Op.MOVN)
-    m_adrp, m_adr = m(Op.ADRP), m(Op.ADR)
-    m_addi, m_subi, m_subsi = m(Op.ADDI), m(Op.SUBI), m(Op.SUBSI)
-    m_addr, m_subr, m_subsr = m(Op.ADDR), m(Op.SUBR), m(Op.SUBSR)
-    m_orrr, m_andr, m_eorr, m_madd = m(Op.ORRR), m(Op.ANDR), m(Op.EORR), m(Op.MADD)
-    m_ldri, m_stri = m(Op.LDRI), m(Op.STRI)
-    m_ldrpost, m_strpre = m(Op.LDRPOST), m(Op.STRPRE)
-    m_stp, m_ldp, m_stppre, m_ldppost = m(Op.STP), m(Op.LDP), m(Op.STPPRE), m(Op.LDPPOST)
-    m_b, m_bl, m_br, m_blr, m_ret = m(Op.B), m(Op.BL), m(Op.BR), m(Op.BLR), m(Op.RET)
-    m_cbz, m_cbnz, m_bcond = m(Op.CBZ), m(Op.CBNZ), m(Op.BCOND)
-    m_svc, m_brk, m_nop = m(Op.SVC), m(Op.BRK), m(Op.NOP)
-    m_ldrb, m_strb, m_hlt, m_lsli = m(Op.LDRB), m(Op.STRB), m(Op.HLT), m(Op.LSLI)
+    def c(tbl, v):
+        return (tbl == v) & act
+
+    m_svc = c(pcc, opspec.P_SVC)
+    m_null = tbl.SEGV[op] & act
+    m_hlt = tbl.EXIT[op] & act
+    dlv = c(pcc, opspec.P_TRAP)
+    ld_single = c(memc, opspec.M_LOAD)
+    st_single = c(memc, opspec.M_STORE)
+    ld_pair = c(memc, opspec.M_LOAD_P)
+    st_pair = c(memc, opspec.M_STORE_P)
+    byte_op = c(memc, opspec.M_LOAD_BYTE) | c(memc, opspec.M_STORE_BYTE)
 
     # -- register reads (reg 31 is XZR for _rr, SP for _rsp) -----------------
     zero = jnp.zeros((B,), I64)
@@ -270,9 +290,8 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
     x0, x1, x2, x8 = regs0[:, 0], regs0[:, 1], regs0[:, 2], regs0[:, 8]
 
     # -- memory addressing: <=2 word gathers, <=2 word scatters per step -----
-    post_index = m_ldrpost | m_ldppost
+    post_index = tbl.ADDR_POST[op] & act
     addr_a = jnp.where(post_index, rn_rsp, rn_rsp + imm)
-    byte_op = m_ldrb | m_strb
     eff1 = jnp.where(byte_op, addr_a & ~jnp.int64(7), addr_a)
     ok1 = jnp.where(byte_op,
                     (addr_a >= L.DATA_BASE) & (addr_a < L.MEM_LIMIT),
@@ -304,27 +323,32 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
     ld2 = jnp.where(ok2, v2, zero)   # ldp/ldppost second word
 
     # -- ALU / mov / load value for the primary register write --------------
+    # One select row per ALU class column (opspec.ALU); class masks are
+    # disjoint by construction, so row order cannot change results.
     piece = imm << sh64
     movk_v = (rd_rr & ~(jnp.int64(0xFFFF) << sh64)) | piece
-    mov_v = jnp.select([m_movz, m_movn, m_movk], [piece, ~piece, movk_v], zero)
+    mov_v = jnp.select([c(aluc, opspec.A_MOVZ), c(aluc, opspec.A_MOVN),
+                        c(aluc, opspec.A_MOVK)],
+                       [piece, ~piece, movk_v], zero)
     mov_v = jnp.where(sf == 1, mov_v, mov_v & jnp.int64(0xFFFFFFFF))
 
     slotA_val = jnp.select(
-        [m_movz | m_movk | m_movn,
-         m_adrp,
-         m_adr,
-         m_addi,
-         m_subi | m_subsi,
-         m_addr,
-         m_subr | m_subsr,
-         m_orrr,
-         m_andr,
-         m_eorr,
-         m_madd,
-         m_lsli,
-         m_ldri | m_ldrpost | m_ldp | m_ldppost,
-         m_ldrb,
-         m_bl | m_blr],
+        [c(aluc, opspec.A_MOVZ) | c(aluc, opspec.A_MOVN)
+         | c(aluc, opspec.A_MOVK),
+         c(aluc, opspec.A_ADRP),
+         c(aluc, opspec.A_ADR),
+         c(aluc, opspec.A_ADD_I),
+         c(aluc, opspec.A_SUB_I),
+         c(aluc, opspec.A_ADD_R),
+         c(aluc, opspec.A_SUB_R),
+         c(aluc, opspec.A_ORR),
+         c(aluc, opspec.A_AND),
+         c(aluc, opspec.A_EOR),
+         c(aluc, opspec.A_MADD),
+         c(aluc, opspec.A_LSL),
+         c(aluc, opspec.A_LOAD),
+         c(aluc, opspec.A_LOAD_B),
+         c(aluc, opspec.A_LINK)],
         [mov_v,
          (pc0 & ~jnp.int64(0xFFF)) + imm,
          pc0 + imm,
@@ -341,17 +365,15 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
          byte_val,
          pc0 + 4],
         zero)
-    slotA_en = (m_movz | m_movk | m_movn | m_adrp | m_adr | m_addi | m_subi
-                | m_subsi | m_addr | m_subr | m_subsr | m_orrr | m_andr
-                | m_eorr | m_madd | m_lsli | m_ldri | m_ldrpost | m_ldp
-                | m_ldppost | m_ldrb | m_bl | m_blr)
-    slotA_idx = jnp.where(m_bl | m_blr, I32(30), rd)
-    slotA_sp = m_addi | m_subi  # _wsp ops: rd == 31 targets SP
+    slotA_en = (aluc != opspec.A_NONE) & act
+    slotA_idx = jnp.where(tbl.WB_LR[op], I32(30), rd)
+    slotA_sp = tbl.WB_SP[op] & act  # _wsp ops: rd == 31 targets SP
 
     # -- flags ---------------------------------------------------------------
-    subs = m_subsi | m_subsr
-    fa = jnp.where(m_subsi, rn_rsp, rn_rr)
-    fb = jnp.where(m_subsi, imm, rm_rr)
+    f_imm = flagc == opspec.F_SUBS_I
+    subs = (flagc != opspec.F_NONE) & act
+    fa = jnp.where(f_imm, rn_rsp, rn_rr)
+    fb = jnp.where(f_imm, imm, rm_rr)
     res = fa - fb
     flag_n = (res < 0).astype(I64) * 8
     flag_z = (res == 0).astype(I64) * 4
@@ -373,8 +395,8 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
         action = tr.pol_action[:, SLOT_UNKNOWN]
         pol_arg = tr.pol_arg[:, SLOT_UNKNOWN]
         pol_slot = jnp.full((B,), SLOT_UNKNOWN, I64)
-        for i, sysnr in enumerate(TRACE_SYS):
-            hit = nr == sysnr
+        for i, spec in enumerate(opspec.SYSCALLS):
+            hit = nr == spec.nr
             action = jnp.where(hit, tr.pol_action[:, i], action)
             pol_arg = jnp.where(hit, tr.pol_arg[:, i], pol_arg)
             pol_slot = jnp.where(hit, jnp.int64(i), pol_slot)
@@ -384,15 +406,31 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
         svc_exec = m_svc & (action == POL_ALLOW)
     else:
         svc_exec = m_svc
-    sys_read = svc_exec & (nr == L.SYS_READ)
-    sys_write = svc_exec & (nr == L.SYS_WRITE)
-    sys_getpid = svc_exec & (nr == L.SYS_GETPID)
-    sys_exit = svc_exec & (nr == L.SYS_EXIT)
-    sys_sigret = svc_exec & (nr == L.SYS_RT_SIGRETURN)
-    sys_openat = svc_exec & (nr == L.SYS_OPENAT)
-    sys_close = svc_exec & (nr == L.SYS_CLOSE)
-    sys_enosys = svc_exec & ~(sys_read | sys_write | sys_getpid | sys_exit
-                              | sys_sigret | sys_openat | sys_close)
+
+    # Per-kind syscall masks generated from the spec's syscall rows; a new
+    # constant-returning syscall (K_CONST) is one table row, not a mask +
+    # a select row + a scalar branch.
+    false_b = jnp.zeros((B,), bool)
+    sys_read = sys_write = sys_getpid = sys_exit = sys_sigret = false_b
+    sys_const, known = false_b, false_b
+    const_val = zero
+    for spec in opspec.SYSCALLS:
+        hit = svc_exec & (nr == spec.nr)
+        known = known | hit
+        if spec.kind == opspec.K_IO_READ:
+            sys_read = sys_read | hit
+        elif spec.kind == opspec.K_IO_WRITE:
+            sys_write = sys_write | hit
+        elif spec.kind == opspec.K_GETPID:
+            sys_getpid = sys_getpid | hit
+        elif spec.kind == opspec.K_EXIT:
+            sys_exit = sys_exit | hit
+        elif spec.kind == opspec.K_SIGRETURN:
+            sys_sigret = sys_sigret | hit
+        else:  # K_CONST
+            sys_const = sys_const | hit
+            const_val = jnp.where(hit, jnp.int64(spec.const), const_val)
+    sys_enosys = svc_exec & ~known
 
     io_buf, io_n = x1, x2
     io_k = jnp.clip(io_n >> 3, 0, _MAX_IO_WORDS)
@@ -405,13 +443,11 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
     svc_x0 = jnp.select(
         [sys_read | sys_write,
          sys_getpid,
-         sys_openat,
-         sys_close,
+         sys_const,
          sys_enosys],
         [jnp.where(io_ok, io_n, jnp.int64(-14)),
          jnp.where(virt, jnp.int64(L.VIRT_PID), s.pid),
-         jnp.full((B,), 3, I64),
-         zero,
+         const_val,
          jnp.full((B,), -38, I64)],
         zero)
     svc_x0_en = svc_exec & ~(sys_exit | sys_sigret)
@@ -422,10 +458,12 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
         svc_x0_en = svc_x0_en | pol_deny | pol_emul
 
     # -- signal delivery / sigreturn (static 34-word frame window) -----------
-    dlv = m_illegal | m_brk
+    # ``dlv`` is the P_TRAP pc-class mask from the spec gathers above; the
+    # signal number rides the SIGNO column (garbage on non-trap lanes, but
+    # only consumed under can_sig).
     can_sig = dlv & (s.sig_handler != 0) & (s.in_signal == 0)
     trap_fail = dlv & ~can_sig
-    signo = jnp.where(m_brk, jnp.int64(L.SIGTRAP), jnp.int64(L.SIGILL))
+    signo = tbl.SIGNO[op]
     frame_out = jnp.concatenate(
         [regs0, sp0[:, None], pc0[:, None], nzcv0[:, None]], axis=1)
 
@@ -438,8 +476,9 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
     # both slots land, their indices are distinct by construction.
     oob = jnp.int64(L.MEM_WORDS * B)
     park = oob + jnp.arange(2 * B, dtype=I64)  # distinct OOB slots per entry
-    st1_en = (m_stri | m_strpre | m_stp | m_stppre | m_strb) & ok1
-    st2_en = (m_stp | m_stppre) & ok2
+    st_byte = c(memc, opspec.M_STORE_BYTE)
+    st1_en = (st_single | st_pair | st_byte) & ok1
+    st2_en = st_pair & ok2
     st_idx = jnp.concatenate([jnp.where(st1_en, lane_base + g1, park[:B]),
                               jnp.where(st2_en, lane_base + g2, park[B:])])
     st_val = jnp.concatenate([jnp.where(byte_op, strb_word, rd_rr), rm_rr])
@@ -529,10 +568,9 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
         return regs, sp
 
     regs, sp = apply_slot(regs0, slotA_en, slotA_idx, slotA_val, sp0, slotA_sp)
-    ldp_like = m_ldp | m_ldppost
-    regs, sp = apply_slot(regs, ldp_like, rm, ld2, sp,
+    regs, sp = apply_slot(regs, ld_pair, rm, ld2, sp,
                           jnp.zeros((B,), bool))
-    wb = m_ldrpost | m_strpre | m_stppre | m_ldppost
+    wb = tbl.WB_BASE[op] & act
     regs, sp = apply_slot(regs, wb, rn, rn_rsp + imm, sp,
                           jnp.ones((B,), bool))
 
@@ -549,18 +587,18 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
     # -- program counter -----------------------------------------------------
     br_target = pc0 + imm
     pc4 = pc0 + 4
-    taken_bc = _cond_holds_v(nzcv0, cond)
+    taken_bc = opspec.cond_holds(nzcv0, cond, tbl.COND_MASK)
     svc_pc = jnp.where(sys_exit, pc0,
                        jnp.where(sys_sigret, frame_in[:, 32] + 4, pc4))
     if traced:
         svc_pc = jnp.where(pol_kill, pc0, svc_pc)  # KILL parks like exit
     pc_new = jnp.select(
-        [m_b | m_bl,
-         m_br | m_blr | m_ret,
-         m_cbz,
-         m_cbnz,
-         m_bcond,
-         m_null | m_hlt,
+        [c(pcc, opspec.P_REL),
+         c(pcc, opspec.P_IND),
+         c(pcc, opspec.P_CBZ),
+         c(pcc, opspec.P_CBNZ),
+         c(pcc, opspec.P_BCOND),
+         c(pcc, opspec.P_STAY),
          dlv,
          m_svc],
         [br_target,
@@ -575,8 +613,8 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
     pc = jnp.where(act, pc_new, pc0)
 
     # -- faults / halts ------------------------------------------------------
-    bad_single = (m_ldri | m_stri | m_ldrpost | m_strpre) & ~ok1
-    bad_pair = (m_stp | m_ldp | m_stppre | m_ldppost) & ~(ok1 & ok2)
+    bad_single = (ld_single | st_single) & ~ok1
+    bad_pair = (ld_pair | st_pair) & ~(ok1 & ok2)
     bad_byte = byte_op & ~ok1
     mem_bad = bad_single | bad_pair | bad_byte
 
@@ -592,7 +630,7 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
         fault_pc = jnp.where(pol_kill, pc0, fault_pc)
 
     # -- bookkeeping ---------------------------------------------------------
-    cycles = s.cycles + jnp.where(act, COST_TABLE[op], zero)
+    cycles = s.cycles + jnp.where(act, tbl.COST_TABLE[op], zero)
     cycles = cycles + jnp.where(m_svc, jnp.int64(cm.KERNEL_CROSS), zero)
     cycles = cycles + jnp.where(m_svc & in_pt,
                                 jnp.int64(2 * cm.PTRACE_STOP), zero)
@@ -670,6 +708,14 @@ def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
         out_count=out_count, out_sum=out_sum, enosys_count=enosys_count), tr
 
 
+def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
+               tr: Optional[TraceState],
+               tbl: Optional["opspec.SpecTables"] = None):
+    """One masked step for every lane: fetch/decode, then the shared
+    spec-generated executor body (``tbl`` as in :func:`exec_lanes`)."""
+    return exec_lanes(_fetch(img, ids, s.pc), s, tr, tbl=tbl)
+
+
 def fleet_step(img: FleetImages, ids: jnp.ndarray,
                s: MachineState) -> MachineState:
     """One masked step for every lane.  ``img`` leaves are [G, CODE_WORDS],
@@ -744,6 +790,52 @@ def _jitted_run_traced(chunk: int):
 
 
 # ---------------------------------------------------------------------------
+# engine selection: the XLA chunk-scan vs the Pallas megastep kernel
+# ---------------------------------------------------------------------------
+#
+# Both engines run the same spec-generated executor body (exec_lanes), so
+# results are bit-identical by construction — the choice is purely how the
+# chunk loop is dispatched: "xla" scans _step_core with the full carry
+# re-materialised per step; "pallas" fuses the whole chunk into one
+# kernels.megastep dispatch with the carry resident in refs (interpret
+# mode on CPU, where it lowers back to the same XLA ops).
+
+ENGINES = ("xla", "pallas")
+
+
+def _check_engine(engine: str, *, shard: bool = False) -> str:
+    if engine not in ENGINES:
+        raise ValueError(
+            f"unknown fleet engine {engine!r}: expected one of {ENGINES}")
+    if engine == "pallas" and shard:
+        raise ValueError(
+            "engine='pallas' does not compose with shard=True "
+            "(the megastep kernel is single-device); use engine='xla' "
+            "for sharded fleets")
+    return engine
+
+
+def _engine_run(engine: str, chunk: int, traced: bool):
+    """The run-to-halt driver for ``engine`` — identical call shape,
+    donation and HALT_FUEL contract either way."""
+    if engine == "pallas":
+        from repro.kernels.megastep import ops as mops  # lazy: kernel layer
+        return (mops.jitted_run_traced(chunk) if traced
+                else mops.jitted_run(chunk))
+    return _jitted_run_traced(chunk) if traced else _jitted_run(chunk)
+
+
+def _engine_span(engine: str, chunk: int, span: int, traced: bool):
+    """The bounded-span driver for ``engine`` (no HALT_FUEL patch)."""
+    if engine == "pallas":
+        from repro.kernels.megastep import ops as mops  # lazy: kernel layer
+        return (mops.jitted_span_traced(chunk, span) if traced
+                else mops.jitted_span(chunk, span))
+    return (_jitted_span_traced(chunk, span) if traced
+            else _jitted_span(chunk, span))
+
+
+# ---------------------------------------------------------------------------
 # bounded-step generations (continuous-batching building block)
 # ---------------------------------------------------------------------------
 
@@ -805,7 +897,8 @@ def _jitted_span_traced(chunk: int, span: int):
 
 def run_fleet_span(imgs: FleetImages, states: MachineState, img_ids,
                    *, steps: int, chunk: int = DEFAULT_CHUNK,
-                   trace: Optional[TraceState] = None):
+                   trace: Optional[TraceState] = None,
+                   engine: str = "xla"):
     """One bounded generation: up to ``steps`` masked steps (rounded up to a
     whole number of ``chunk``-sized scans) in ONE device dispatch.
 
@@ -817,7 +910,11 @@ def run_fleet_span(imgs: FleetImages, states: MachineState, img_ids,
     With ``trace`` (a :class:`TraceState`, also donated) every executed svc
     appends a ring record and the per-lane policy tables gate the syscall
     branches; returns ``(states, trace)`` instead of just ``states``.
+
+    ``engine`` picks the chunk dispatcher — ``"xla"`` (the scan) or
+    ``"pallas"`` (the fused megastep kernel); results are bit-identical.
     """
+    _check_engine(engine)
     if chunk < 1:
         raise ValueError(f"chunk must be >= 1, got {chunk}")
     if steps < 1:
@@ -825,10 +922,10 @@ def run_fleet_span(imgs: FleetImages, states: MachineState, img_ids,
     span = -(-steps // chunk)
     imgs = pack_images(imgs)
     img_ids = jnp.asarray(img_ids, I32)
+    run_span = _engine_span(engine, int(chunk), int(span), trace is not None)
     if trace is None:
-        return _jitted_span(int(chunk), int(span))(imgs, img_ids, states)
-    return _jitted_span_traced(int(chunk), int(span))(imgs, img_ids, states,
-                                                      trace)
+        return run_span(imgs, img_ids, states)
+    return run_span(imgs, img_ids, states, trace)
 
 
 def finish_halt_codes(halted: np.ndarray, icount: np.ndarray,
@@ -1065,7 +1162,8 @@ def unstack_trace(trace: TraceState, lane: int) -> TraceState:
 
 
 def run_fleet(imgs, states, img_ids=None, *, chunk: int = DEFAULT_CHUNK,
-              shard: bool = False, trace: Optional[TraceState] = None):
+              shard: bool = False, trace: Optional[TraceState] = None,
+              engine: str = "xla"):
     """Run every lane to halt (or out of fuel) in one device dispatch.
 
     ``imgs``: a ``DecodedImage`` with leaves [G, CODE_WORDS] (or a list of
@@ -1082,7 +1180,13 @@ def run_fleet(imgs, states, img_ids=None, *, chunk: int = DEFAULT_CHUNK,
     records every executed svc into the per-lane rings and applies the
     per-lane policy tables; returns ``(states, trace)``.  Machine states
     under the default all-ALLOW policy are bit-identical to an untraced run.
+
+    ``engine="pallas"`` dispatches each chunk as one fused megastep kernel
+    (:mod:`repro.kernels.megastep`) instead of the XLA scan; results are
+    bit-identical (shared spec-generated executor body).  Pallas does not
+    compose with ``shard=True``.
     """
+    _check_engine(engine, shard=shard)
     imgs = pack_images(imgs)
     if not isinstance(states, MachineState):  # list/tuple of scalar states
         states = stack_states(states)
@@ -1105,9 +1209,10 @@ def run_fleet(imgs, states, img_ids=None, *, chunk: int = DEFAULT_CHUNK,
                 imgs, img_ids, states, trace=trace)
 
     if trace is None:
-        out = _jitted_run(int(chunk))(imgs, img_ids, states)
+        out = _engine_run(engine, int(chunk), False)(imgs, img_ids, states)
         return jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
-    out, tr = _jitted_run_traced(int(chunk))(imgs, img_ids, states, trace)
+    out, tr = _engine_run(engine, int(chunk), True)(imgs, img_ids, states,
+                                                    trace)
     out = jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
     tr = jax.tree_util.tree_map(lambda x: x.block_until_ready(), tr)
     return out, tr
@@ -1179,7 +1284,8 @@ def run_fleet_stream(imgs, states, img_ids=None, *,
                      trace: TraceState,
                      stream,
                      interval: Optional[int] = None,
-                     keys: Optional[Sequence] = None):
+                     keys: Optional[Sequence] = None,
+                     engine: str = "xla"):
     """:func:`run_fleet` with streaming trace harvest: run every lane to
     halt in bounded spans, flipping ring halves at each span boundary and
     pushing the cold halves into ``stream`` (a
@@ -1194,7 +1300,9 @@ def run_fleet_stream(imgs, states, img_ids=None, *,
 
     ``keys`` names each lane in the stream (default: the lane index).
     Returns ``(states, trace)``; harvested records live in ``stream``.
+    ``engine`` as in :func:`run_fleet` (bit-identical either way).
     """
+    _check_engine(engine)
     imgs = pack_images(imgs)
     if not isinstance(states, MachineState):
         states = stack_states(states)
@@ -1213,7 +1321,7 @@ def run_fleet_stream(imgs, states, img_ids=None, *,
     if interval < 1:
         raise ValueError(f"interval must be >= 1, got {interval}")
     span = -(-interval // chunk)
-    run_span = _jitted_span_traced(int(chunk), int(span))
+    run_span = _engine_span(engine, int(chunk), int(span), True)
     if keys is None:
         keys = list(range(n_lanes))
 
@@ -1378,7 +1486,8 @@ def precompile_ladder(imgs, ladder: Sequence[int], *,
                       chunk: int = DEFAULT_CHUNK,
                       interval: Optional[int] = None,
                       trace_cap: Optional[int] = None,
-                      shard: bool = False) -> None:
+                      shard: bool = False,
+                      engine: str = "xla") -> None:
     """Compile every executable a compacted run can hit, ahead of the run:
 
     * one dispatch per rung on an all-halted dummy fleet of that width —
@@ -1391,7 +1500,10 @@ def precompile_ladder(imgs, ladder: Sequence[int], *,
     A compacted run over the same (chunk, interval, trace) configuration
     then never pays a step-path XLA compile mid-run; only a serving
     pool's per-rung admission scatters still compile lazily on first use.
+    ``engine`` warms that engine's span drivers (:func:`run_fleet_span`'s
+    dispatch table), so a pallas-engined pool precompiles its kernels too.
     """
+    _check_engine(engine, shard=shard)
     imgs = pack_images(imgs)
     interval = chunk * 8 if interval is None else interval
     span = -(-interval // chunk)
@@ -1414,10 +1526,11 @@ def precompile_ladder(imgs, ladder: Sequence[int], *,
 
     for w in ladder:
         ids, s, tr = dummy(w)
+        run_span = _engine_span(engine, int(chunk), int(span), tr is not None)
         if tr is None:
-            _jitted_span(int(chunk), int(span))(imgs, ids, s)
+            run_span(imgs, ids, s)
         else:
-            _jitted_span_traced(int(chunk), int(span))(imgs, ids, s, tr)
+            run_span(imgs, ids, s, tr)
 
     for i, wfrom in enumerate(ladder):
         for wto in ladder[i + 1:]:
@@ -1461,7 +1574,8 @@ def run_fleet_compact(imgs, states, img_ids=None, *,
                       interval: Optional[int] = None,
                       shard: bool = False,
                       trace: Optional[TraceState] = None,
-                      stats: Optional[dict] = None):
+                      stats: Optional[dict] = None,
+                      engine: str = "xla"):
     """:func:`run_fleet` with live-lane compaction: results (states, and the
     trace carry when passed) are **bit-identical and lane-ordered** to the
     fixed-width run, but halted lanes stop costing step compute.
@@ -1481,7 +1595,10 @@ def run_fleet_compact(imgs, states, img_ids=None, *,
     dispatched vs useful lane-steps, the ladder, and each compaction.
     ``shard=True`` lane-partitions every rung across local devices; the
     ladder then only holds device-divisible rungs (per-shard ladders).
+    ``engine`` as in :func:`run_fleet` (bit-identical; pallas does not
+    compose with shard).
     """
+    _check_engine(engine, shard=shard)
     imgs = pack_images(imgs)
     if not isinstance(states, MachineState):
         states = stack_states(states)
@@ -1526,8 +1643,7 @@ def run_fleet_compact(imgs, states, img_ids=None, *,
     useful = 0
     compactions = []
     dispatches = 0
-    run_span = (_jitted_span_traced(int(chunk), int(span)) if traced
-                else _jitted_span(int(chunk), int(span)))
+    run_span = _engine_span(engine, int(chunk), int(span), traced)
 
     while True:
         if traced:

@@ -64,6 +64,12 @@ class HookConfig:
     # (and with them host round-trips) happen once per chunk; results are
     # invariant to this value, only dispatch count changes.
     fleet_chunk: int = 8
+    # Which chunk dispatcher the fleet entry points use: "xla" (the
+    # lax.scan select-chain) or "pallas" (the fused megastep kernel,
+    # repro.kernels.megastep; interpret-mode on CPU).  Both run the same
+    # spec-generated executor body, so results are bit-identical — this
+    # only changes how the inner loop is dispatched.
+    fleet_engine: str = "xla"
     # Continuous-batching server (serve.fleet_server): masked steps per
     # generation (harvest/admission happens between generations; results
     # are invariant, only scheduling granularity changes) and the C3

@@ -2,16 +2,19 @@
 
 Programs (application text + libraries + every trampoline level) are decoded
 once, host-side, into structure-of-arrays field tables covering the whole
-executable region ``[0, CODE_LIMIT)``.  The machine ``step`` is a
-``lax.switch`` over op classes; ``run`` is a ``lax.while_loop``.  Table and
-memory shapes are fixed by the layout, so *one* XLA compilation serves every
-program, every rewrite variant and every interception mechanism in the test
-suite and benchmarks.
+executable region ``[0, CODE_LIMIT)``.  The machine ``step`` is *generated*
+from the op-spec table (:mod:`repro.core.opspec`): it lifts the lane to a
+width-1 batch and runs the same spec-driven executor body as the fleet and
+Pallas engines (:func:`repro.core.fleet.exec_lanes`) — there is no separate
+hand-written scalar interpreter to keep in sync.  ``run`` is a
+``lax.while_loop``.  Table and memory shapes are fixed by the layout, so
+*one* XLA compilation serves every program, every rewrite variant and every
+interception mechanism in the test suite and benchmarks.
 
 The machine also embeds the modelled kernel: syscall dispatch on ``x8``
 (Linux arm64 numbers), signal delivery for ``brk``/illegal instructions, the
 ``rt_sigreturn`` path, and an optional ptrace mode.  OS-boundary costs come
-from :mod:`repro.core.costmodel`.
+from :mod:`repro.core.costmodel` via the spec table's cost column.
 """
 from __future__ import annotations
 
@@ -25,8 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from . import costmodel as cm
 from . import layout as L
+from . import opspec
 from .isa import Op, decode
 
 I64 = jnp.int64
@@ -106,18 +109,9 @@ def decode_image(code_words: np.ndarray) -> DecodedImage:
     return DecodedImage(*(jnp.asarray(a) for a in (op, rd, rn, rm, sh, cond, sf, imm)))
 
 
-# Per-op base cycle costs, indexed by Op value.
-_COSTS = np.ones(int(Op.N_OPS), np.int64) * cm.COST_ALU
-for _o in (Op.LDRI, Op.STRI, Op.LDRPOST, Op.STRPRE, Op.STP, Op.LDP,
-           Op.STPPRE, Op.LDPPOST, Op.LDRB, Op.STRB):
-    _COSTS[int(_o)] = cm.COST_MEM
-for _o in (Op.B, Op.BCOND, Op.CBZ, Op.CBNZ):
-    _COSTS[int(_o)] = cm.COST_BRANCH
-for _o in (Op.BL, Op.RET):
-    _COSTS[int(_o)] = cm.COST_CALL
-for _o in (Op.BR, Op.BLR):
-    _COSTS[int(_o)] = cm.COST_INDIRECT
-COST_TABLE = jnp.asarray(_COSTS)
+# Per-op base cycle costs, indexed by Op value — the spec table's cost
+# column (kept under the historical name for the many importers).
+COST_TABLE = opspec.COST_TABLE
 
 
 def make_state(entry_pc: int, fuel: int = 2_000_000) -> MachineState:
@@ -137,477 +131,36 @@ def make_state(entry_pc: int, fuel: int = 2_000_000) -> MachineState:
 
 
 # ---------------------------------------------------------------------------
-# register / memory helpers
+# the generated scalar step
 # ---------------------------------------------------------------------------
 
-def _rr(s: MachineState, i):
-    """Data-processing read: reg 31 is XZR."""
-    v = s.regs[jnp.minimum(i, 30)]
-    return jnp.where(i == 31, jnp.int64(0), v)
-
-
-def _rsp(s: MachineState, i):
-    """Base-register read: reg 31 is SP."""
-    v = s.regs[jnp.minimum(i, 30)]
-    return jnp.where(i == 31, s.sp, v)
-
-
-def _wr(s: MachineState, i, v) -> MachineState:
-    idx = jnp.minimum(i, 30)
-    cur = s.regs[idx]
-    return s._replace(regs=s.regs.at[idx].set(jnp.where(i == 31, cur, v)))
-
-
-def _wsp(s: MachineState, i, v) -> MachineState:
-    """Write where reg 31 means SP (add/sub imm)."""
-    sp = jnp.where(i == 31, v, s.sp)
-    idx = jnp.minimum(i, 30)
-    cur = s.regs[idx]
-    regs = s.regs.at[idx].set(jnp.where(i == 31, cur, v))
-    return s._replace(regs=regs, sp=sp)
-
-
-def _mem_ok(addr):
-    return ((addr >= L.DATA_BASE) & (addr < L.MEM_LIMIT) & ((addr & 7) == 0))
-
-
-def _widx(addr):
-    return jnp.clip((addr - L.DATA_BASE) >> 3, 0, L.MEM_WORDS - 1)
-
-
-def _load(s: MachineState, addr):
-    ok = _mem_ok(addr)
-    v = s.mem[_widx(addr)]
-    return jnp.where(ok, v, jnp.int64(0)), ok
-
-
-def _store(s: MachineState, addr, v):
-    ok = _mem_ok(addr)
-    idx = _widx(addr)
-    safe = jnp.where(ok, v, s.mem[idx])
-    return s._replace(mem=s.mem.at[idx].set(safe)), ok
-
-
-def _badmem(s: MachineState, ok) -> MachineState:
-    return s._replace(
-        halted=jnp.where(ok, s.halted, jnp.int64(HALT_BADMEM)),
-        fault_pc=jnp.where(ok, s.fault_pc, s.pc))
-
-
-def _adv(s: MachineState) -> MachineState:
-    return s._replace(pc=s.pc + 4)
-
-
-# ---------------------------------------------------------------------------
-# flags / conditions
-# ---------------------------------------------------------------------------
-
-def _set_flags_sub(s: MachineState, a, b) -> MachineState:
-    res = a - b
-    n = (res < 0).astype(jnp.int64) * 8
-    z = (res == 0).astype(jnp.int64) * 4
-    c = (a.astype(jnp.uint64) >= b.astype(jnp.uint64)).astype(jnp.int64) * 2
-    v = (((a ^ b) & (a ^ res)) < 0).astype(jnp.int64)
-    return s._replace(nzcv=n + z + c + v)
-
-
-def _cond_holds(nzcv, cond):
-    n = (nzcv & 8) != 0
-    z = (nzcv & 4) != 0
-    c = (nzcv & 2) != 0
-    v = (nzcv & 1) != 0
-    preds = jnp.stack([
-        z, ~z, c, ~c, n, ~n, v, ~v,
-        c & ~z, ~(c & ~z), n == v, n != v,
-        ~z & (n == v), ~(~z & (n == v)),
-        jnp.bool_(True), jnp.bool_(True),
-    ])
-    return preds[jnp.clip(cond, 0, 15)]
-
-
-# ---------------------------------------------------------------------------
-# the modelled kernel
-# ---------------------------------------------------------------------------
-
-_MAX_IO_WORDS = 4096
-
-
-def _sys_read(s: MachineState) -> MachineState:
-    buf, n = s.regs[1], s.regs[2]
-    k = jnp.clip(n >> 3, 0, _MAX_IO_WORDS)
-    ok = _mem_ok(buf) & (buf + n <= L.MEM_LIMIT) & (n >= 0) & ((n & 7) == 0)
-    start = _widx(buf)
-    off = s.in_off
-
-    def body(j, mem):
-        return mem.at[start + j].set(off + j * 8)
-
-    mem = lax.cond(ok, lambda m: lax.fori_loop(0, k, body, m), lambda m: m, s.mem)
-    s = s._replace(mem=mem, in_off=jnp.where(ok, off + n, off),
-                   cycles=s.cycles + n // cm.IO_BYTES_PER_CYCLE)
-    return _wr(s, 0, jnp.where(ok, n, jnp.int64(-14)))  # -EFAULT
-
-
-def _sys_write(s: MachineState) -> MachineState:
-    buf, n = s.regs[1], s.regs[2]
-    k = jnp.clip(n >> 3, 0, _MAX_IO_WORDS)
-    ok = _mem_ok(buf) & (buf + n <= L.MEM_LIMIT) & (n >= 0) & ((n & 7) == 0)
-    start = _widx(buf)
-
-    def body(j, acc):
-        return acc + s.mem[start + j]
-
-    tot = lax.cond(ok, lambda: lax.fori_loop(0, k, body, jnp.int64(0)), lambda: jnp.int64(0))
-    s = s._replace(out_count=jnp.where(ok, s.out_count + n, s.out_count),
-                   out_sum=jnp.where(ok, s.out_sum + tot, s.out_sum),
-                   cycles=s.cycles + n // cm.IO_BYTES_PER_CYCLE)
-    return _wr(s, 0, jnp.where(ok, n, jnp.int64(-14)))
-
-
-def _sys_sigreturn(s: MachineState) -> MachineState:
-    frame = lax.dynamic_slice(s.mem, (_SIGFRAME_IDX,), (SIGFRAME_WORDS,))
-    return s._replace(
-        regs=frame[:31], sp=frame[31],
-        pc=frame[32] + 4,  # resume after the replaced (brk/illegal) instruction
-        nzcv=frame[33], in_signal=jnp.int64(0))
-
-
-def _do_svc(s: MachineState) -> MachineState:
-    nr = s.regs[8]
-    s = s._replace(cycles=s.cycles + cm.KERNEL_CROSS)
-
-    # ptrace mode: two stops (syscall-entry + syscall-exit), tracer runs hook.
-    in_pt = s.ptrace != 0
-    s = s._replace(
-        cycles=s.cycles + jnp.where(in_pt, jnp.int64(2 * cm.PTRACE_STOP), jnp.int64(0)),
-        hook_count=s.hook_count + jnp.where(in_pt, jnp.int64(1), jnp.int64(0)))
-
-    branch = jnp.select(
-        [nr == L.SYS_READ, nr == L.SYS_WRITE, nr == L.SYS_GETPID,
-         nr == L.SYS_EXIT, nr == L.SYS_RT_SIGRETURN, nr == L.SYS_OPENAT,
-         nr == L.SYS_CLOSE],
-        [0, 1, 2, 3, 4, 5, 6], 7)
-
-    def k_getpid(s):
-        virt = (s.ptrace != 0) & (s.virt_getpid != 0)
-        return _adv(_wr(s, 0, jnp.where(virt, jnp.int64(L.VIRT_PID), s.pid)))
-
-    def k_exit(s):
-        return s._replace(halted=jnp.int64(HALT_EXIT), exit_code=s.regs[0])
-
-    def k_openat(s):
-        return _adv(_wr(s, 0, jnp.int64(3)))
-
-    def k_close(s):
-        return _adv(_wr(s, 0, jnp.int64(0)))
-
-    def k_enosys(s):
-        s = s._replace(enosys_count=s.enosys_count + 1)
-        return _adv(_wr(s, 0, jnp.int64(-38)))
-
-    return lax.switch(branch, [
-        lambda s: _adv(_sys_read(s)),
-        lambda s: _adv(_sys_write(s)),
-        k_getpid, k_exit, _sys_sigreturn, k_openat, k_close, k_enosys,
-    ], s)
-
-
-def _deliver_signal(s: MachineState, signo: int) -> MachineState:
-    """brk / illegal: push a sigframe and enter the registered handler."""
-    can = (s.sig_handler != 0) & (s.in_signal == 0)
-    frame = jnp.concatenate([
-        s.regs, s.sp[None], s.pc[None], s.nzcv[None]])
-    mem = jnp.where(can,
-                    lax.dynamic_update_slice(s.mem, frame, (_SIGFRAME_IDX,)),
-                    s.mem)
-    regs = jnp.where(can,
-                     s.regs.at[0].set(jnp.int64(signo)).at[1].set(jnp.int64(L.SIGFRAME)),
-                     s.regs)
-    return s._replace(
-        mem=mem, regs=regs,
-        sp=jnp.where(can, jnp.int64(L.SIGSTACK_TOP), s.sp),
-        pc=jnp.where(can, s.sig_handler, s.pc),
-        in_signal=jnp.where(can, jnp.int64(1), s.in_signal),
-        cycles=s.cycles + jnp.where(can, jnp.int64(cm.SIGNAL_DELIVERY), jnp.int64(0)),
-        halted=jnp.where(can, s.halted, jnp.int64(HALT_TRAP)),
-        fault_pc=jnp.where(can, s.fault_pc, s.pc))
-
-
-# ---------------------------------------------------------------------------
-# op handlers (index == Op value)
-# ---------------------------------------------------------------------------
-
-def _h_illegal(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    return _deliver_signal(s, L.SIGILL)
-
-
-def _h_nullpage(s, f):
-    return s._replace(halted=jnp.int64(HALT_SEGV), fault_pc=s.pc)
-
-
-def _mov_value(s, f, kind):
-    rd, rn, rm, imm, sh, cond, sf = f
-    piece = imm << sh
-    if kind == "z":
-        v = piece
-    elif kind == "n":
-        v = ~piece
-    else:  # k
-        old = _rr(s, rd)
-        v = (old & ~(jnp.int64(0xFFFF) << sh)) | piece
-    v = jnp.where(sf == 1, v, v & jnp.int64(0xFFFFFFFF))
-    return _adv(_wr(s, rd, v))
-
-
-def _h_movz(s, f):
-    return _mov_value(s, f, "z")
-
-
-def _h_movk(s, f):
-    return _mov_value(s, f, "k")
-
-
-def _h_movn(s, f):
-    return _mov_value(s, f, "n")
-
-
-def _h_adrp(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    return _adv(_wr(s, rd, (s.pc & ~jnp.int64(0xFFF)) + imm))
-
-
-def _h_adr(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    return _adv(_wr(s, rd, s.pc + imm))
-
-
-def _h_addi(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    return _adv(_wsp(s, rd, _rsp(s, rn) + imm))
-
-
-def _h_subi(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    return _adv(_wsp(s, rd, _rsp(s, rn) - imm))
-
-
-def _h_subsi(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    a = _rsp(s, rn)
-    s = _set_flags_sub(s, a, imm)
-    return _adv(_wr(s, rd, a - imm))
-
-
-def _h_addr(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    return _adv(_wr(s, rd, _rr(s, rn) + _rr(s, rm)))
-
-
-def _h_subr(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    return _adv(_wr(s, rd, _rr(s, rn) - _rr(s, rm)))
-
-
-def _h_subsr(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    a, bb = _rr(s, rn), _rr(s, rm)
-    s = _set_flags_sub(s, a, bb)
-    return _adv(_wr(s, rd, a - bb))
-
-
-def _h_orrr(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    return _adv(_wr(s, rd, _rr(s, rn) | _rr(s, rm)))
-
-
-def _h_andr(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    return _adv(_wr(s, rd, _rr(s, rn) & _rr(s, rm)))
-
-
-def _h_eorr(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    return _adv(_wr(s, rd, _rr(s, rn) ^ _rr(s, rm)))
-
-
-def _h_madd(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f  # imm carries ra
-    return _adv(_wr(s, rd, _rr(s, rn) * _rr(s, rm) + _rr(s, imm.astype(jnp.int32))))
-
-
-def _h_ldri(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    v, ok = _load(s, _rsp(s, rn) + imm)
-    return _adv(_badmem(_wr(s, rd, v), ok))
-
-
-def _h_stri(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    s2, ok = _store(s, _rsp(s, rn) + imm, _rr(s, rd))
-    return _adv(_badmem(s2, ok))
-
-
-def _h_ldrpost(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    base = _rsp(s, rn)
-    v, ok = _load(s, base)
-    s = _wr(s, rd, v)
-    s = _wsp(s, rn, base + imm)
-    return _adv(_badmem(s, ok))
-
-
-def _h_strpre(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    addr = _rsp(s, rn) + imm
-    s2, ok = _store(s, addr, _rr(s, rd))
-    s2 = _wsp(s2, rn, addr)
-    return _adv(_badmem(s2, ok))
-
-
-def _h_stp(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f  # rm carries rt2
-    base = _rsp(s, rn) + imm
-    s1, ok1 = _store(s, base, _rr(s, rd))
-    s2, ok2 = _store(s1, base + 8, _rr(s1, rm))
-    return _adv(_badmem(s2, ok1 & ok2))
-
-
-def _h_ldp(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    base = _rsp(s, rn) + imm
-    v1, ok1 = _load(s, base)
-    v2, ok2 = _load(s, base + 8)
-    s = _wr(_wr(s, rd, v1), rm, v2)
-    return _adv(_badmem(s, ok1 & ok2))
-
-
-def _h_stppre(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    base = _rsp(s, rn) + imm
-    s1, ok1 = _store(s, base, _rr(s, rd))
-    s2, ok2 = _store(s1, base + 8, _rr(s1, rm))
-    s2 = _wsp(s2, rn, base)
-    return _adv(_badmem(s2, ok1 & ok2))
-
-
-def _h_ldppost(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    base = _rsp(s, rn)
-    v1, ok1 = _load(s, base)
-    v2, ok2 = _load(s, base + 8)
-    s = _wr(_wr(s, rd, v1), rm, v2)
-    s = _wsp(s, rn, base + imm)
-    return _adv(_badmem(s, ok1 & ok2))
-
-
-def _h_b(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    return s._replace(pc=s.pc + imm)
-
-
-def _h_bl(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    s = _wr(s, 30, s.pc + 4)
-    return s._replace(pc=s.pc + imm)
-
-
-def _h_br(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    return s._replace(pc=_rr(s, rn))
-
-
-def _h_blr(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    tgt = _rr(s, rn)
-    s = _wr(s, 30, s.pc + 4)
-    return s._replace(pc=tgt)
-
-
-def _h_ret(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    return s._replace(pc=_rr(s, rn))
-
-
-def _h_cbz(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    taken = _rr(s, rd) == 0
-    return s._replace(pc=jnp.where(taken, s.pc + imm, s.pc + 4))
-
-
-def _h_cbnz(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    taken = _rr(s, rd) != 0
-    return s._replace(pc=jnp.where(taken, s.pc + imm, s.pc + 4))
-
-
-def _h_bcond(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    taken = _cond_holds(s.nzcv, cond)
-    return s._replace(pc=jnp.where(taken, s.pc + imm, s.pc + 4))
-
-
-def _h_svc(s, f):
-    return _do_svc(s)
-
-
-def _h_brk(s, f):
-    return _deliver_signal(s, L.SIGTRAP)
-
-
-def _h_nop(s, f):
-    return _adv(s)
-
-
-def _h_ldrb(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    addr = _rsp(s, rn) + imm
-    ok = (addr >= L.DATA_BASE) & (addr < L.MEM_LIMIT)
-    word = s.mem[_widx(addr & ~jnp.int64(7))]
-    byte = (word >> ((addr & 7) * 8)) & 0xFF
-    return _adv(_badmem(_wr(s, rd, byte), ok))
-
-
-def _h_strb(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    addr = _rsp(s, rn) + imm
-    ok = (addr >= L.DATA_BASE) & (addr < L.MEM_LIMIT)
-    idx = _widx(addr & ~jnp.int64(7))
-    shift = (addr & 7) * 8
-    word = s.mem[idx]
-    nw = (word & ~(jnp.int64(0xFF) << shift)) | ((_rr(s, rd) & 0xFF) << shift)
-    safe = jnp.where(ok, nw, word)
-    return _adv(_badmem(s._replace(mem=s.mem.at[idx].set(safe)), ok))
-
-
-def _h_hlt(s, f):
-    return s._replace(halted=jnp.int64(HALT_EXIT), exit_code=s.regs[0])
-
-
-def _h_lsli(s, f):
-    rd, rn, rm, imm, sh, cond, sf = f
-    return _adv(_wr(s, rd, _rr(s, rn) << sh))
-
-
-_HANDLERS = [
-    _h_illegal, _h_nullpage, _h_movz, _h_movk, _h_movn, _h_adrp, _h_adr,
-    _h_addi, _h_subi, _h_subsi, _h_addr, _h_subr, _h_subsr, _h_orrr,
-    _h_andr, _h_eorr, _h_madd, _h_ldri, _h_stri, _h_ldrpost, _h_strpre,
-    _h_stp, _h_ldp, _h_stppre, _h_ldppost, _h_b, _h_bl, _h_br, _h_blr,
-    _h_ret, _h_cbz, _h_cbnz, _h_bcond, _h_svc, _h_brk, _h_nop, _h_ldrb,
-    _h_strb, _h_hlt, _h_lsli,
-]
-assert len(_HANDLERS) == int(Op.N_OPS)
+def _lift(x):
+    return x[None]
 
 
 def step(img: DecodedImage, s: MachineState) -> MachineState:
+    """One instruction, unconditionally (``_run``'s while-cond is the only
+    halt gate, as it always was).
+
+    Generated from the op-spec table: the lane is lifted to a width-1
+    batch and executed by the same spec-driven body as the fleet and
+    Pallas engines (:func:`repro.core.fleet.exec_lanes`), with the
+    live-lane mask forced all-true to match the legacy unconditional
+    scalar semantics.  ``tests/test_opspec.py`` carries the
+    legacy-vs-generated bit-exactness sweep that retired the hand-written
+    per-op handlers.
+    """
+    from . import fleet as F  # deferred: fleet imports this module at load
+
     ok_fetch = (s.pc >= 0) & (s.pc < L.CODE_LIMIT) & ((s.pc & 3) == 0)
     idx = jnp.clip(s.pc >> 2, 0, L.CODE_WORDS - 1)
     op = jnp.where(ok_fetch, img.op[idx], jnp.int32(int(Op.NULLPAGE)))
-    f = (img.rd[idx], img.rn[idx], img.rm[idx], img.imm[idx],
-         img.sh[idx], img.cond[idx], img.sf[idx])
-    s = s._replace(cycles=s.cycles + COST_TABLE[op], icount=s.icount + 1)
-    return lax.switch(op, _HANDLERS, s, f)
+    fields = tuple(_lift(a) for a in
+                   (op, img.rd[idx], img.rn[idx], img.rm[idx], img.sh[idx],
+                    img.cond[idx], img.sf[idx], img.imm[idx]))
+    sb = jax.tree_util.tree_map(_lift, s)
+    out, _ = F.exec_lanes(fields, sb, None, act=jnp.ones((1,), bool))
+    return jax.tree_util.tree_map(lambda x: x[0], out)
 
 
 def _run(img: DecodedImage, s: MachineState) -> MachineState:

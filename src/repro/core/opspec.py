@@ -1,0 +1,290 @@
+"""The shared op-spec table: one declarative row per opcode.
+
+Every executor in the repo is *generated* from this module instead of
+hand-maintaining its own per-op branches:
+
+* the scalar interpreter (:func:`repro.core.machine.step`) lifts one lane
+  to a width-1 batch and runs :func:`repro.core.fleet.exec_lanes`;
+* the batched XLA select-chain (:func:`repro.core.fleet.exec_lanes`)
+  derives its masks, value rows, memory effects, halt transitions and
+  syscall branches from the class columns below;
+* the Pallas megastep kernel (:mod:`repro.kernels.megastep`) runs the very
+  same ``exec_lanes`` body on values held in kernel refs.
+
+So adding an instruction — or a syscall family (the :data:`SYSCALLS`
+table) — is one spec row here, not three hand-synced implementations.
+The columns are small numpy/jnp constants indexed per-lane by ``op``
+(exactly like the long-standing ``COST_TABLE[op]`` gather), which is what
+lets the XLA path and the Pallas body index the *same* arrays.
+
+This module is a pure table: it imports only the ISA enum, the layout and
+the cost model — never :mod:`machine` or :mod:`fleet` — so both of those
+can import it without a cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import costmodel as cm
+from . import layout as L
+from .isa import Op
+
+# ---------------------------------------------------------------------------
+# per-op class enums (the column value spaces)
+# ---------------------------------------------------------------------------
+
+# ALU / primary-write value classes: which expression feeds register slot A.
+(A_NONE, A_MOVZ, A_MOVN, A_MOVK, A_ADRP, A_ADR, A_ADD_I, A_SUB_I, A_ADD_R,
+ A_SUB_R, A_ORR, A_AND, A_EOR, A_MADD, A_LSL, A_LOAD, A_LOAD_B,
+ A_LINK) = range(18)
+
+# Flag-setting classes (NZCV from a subtract).
+F_NONE, F_SUBS_I, F_SUBS_R = range(3)
+
+# Memory-effect classes.
+(M_NONE, M_LOAD, M_STORE, M_LOAD_P, M_STORE_P, M_LOAD_BYTE,
+ M_STORE_BYTE) = range(7)
+
+# Program-counter classes (the halt transitions ride on these: P_STAY parks
+# the pc on a halting op, P_TRAP delivers a signal or HALT_TRAPs).
+(P_NEXT, P_REL, P_IND, P_CBZ, P_CBNZ, P_BCOND, P_STAY, P_TRAP,
+ P_SVC) = range(9)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """One opcode's complete semantics, declaratively.
+
+    ``alu`` selects the primary register-write expression (A_NONE = no
+    write); ``wb_sp``/``wb_lr`` steer where it lands (rd-as-SP for
+    add/sub-immediate, the link register for calls).  ``flags`` is the
+    NZCV update class, ``mem`` the memory effect, ``addr_post`` /
+    ``wb_base`` the addressing mode (post-index vs offset, base
+    write-back).  ``pc`` is the control-flow class; ``segv``/``exit_``
+    mark the direct halt transitions and ``signo`` the delivered signal
+    for trap-class ops.  ``cost`` is the base cycle cost.
+    """
+
+    alu: int = A_NONE
+    wb_sp: bool = False
+    wb_lr: bool = False
+    flags: int = F_NONE
+    mem: int = M_NONE
+    addr_post: bool = False
+    wb_base: bool = False
+    pc: int = P_NEXT
+    segv: bool = False
+    exit_: bool = False
+    signo: int = 0
+    cost: int = cm.COST_ALU
+
+
+SPECS = {
+    Op.ILLEGAL: OpSpec(pc=P_TRAP, signo=L.SIGILL),
+    Op.NULLPAGE: OpSpec(pc=P_STAY, segv=True),
+    Op.MOVZ: OpSpec(alu=A_MOVZ),
+    Op.MOVK: OpSpec(alu=A_MOVK),
+    Op.MOVN: OpSpec(alu=A_MOVN),
+    Op.ADRP: OpSpec(alu=A_ADRP),
+    Op.ADR: OpSpec(alu=A_ADR),
+    Op.ADDI: OpSpec(alu=A_ADD_I, wb_sp=True),
+    Op.SUBI: OpSpec(alu=A_SUB_I, wb_sp=True),
+    Op.SUBSI: OpSpec(alu=A_SUB_I, flags=F_SUBS_I),
+    Op.ADDR: OpSpec(alu=A_ADD_R),
+    Op.SUBR: OpSpec(alu=A_SUB_R),
+    Op.SUBSR: OpSpec(alu=A_SUB_R, flags=F_SUBS_R),
+    Op.ORRR: OpSpec(alu=A_ORR),
+    Op.ANDR: OpSpec(alu=A_AND),
+    Op.EORR: OpSpec(alu=A_EOR),
+    Op.MADD: OpSpec(alu=A_MADD),
+    Op.LDRI: OpSpec(alu=A_LOAD, mem=M_LOAD, cost=cm.COST_MEM),
+    Op.STRI: OpSpec(mem=M_STORE, cost=cm.COST_MEM),
+    Op.LDRPOST: OpSpec(alu=A_LOAD, mem=M_LOAD, addr_post=True,
+                       wb_base=True, cost=cm.COST_MEM),
+    Op.STRPRE: OpSpec(mem=M_STORE, wb_base=True, cost=cm.COST_MEM),
+    Op.STP: OpSpec(mem=M_STORE_P, cost=cm.COST_MEM),
+    Op.LDP: OpSpec(alu=A_LOAD, mem=M_LOAD_P, cost=cm.COST_MEM),
+    Op.STPPRE: OpSpec(mem=M_STORE_P, wb_base=True, cost=cm.COST_MEM),
+    Op.LDPPOST: OpSpec(alu=A_LOAD, mem=M_LOAD_P, addr_post=True,
+                       wb_base=True, cost=cm.COST_MEM),
+    Op.B: OpSpec(pc=P_REL, cost=cm.COST_BRANCH),
+    Op.BL: OpSpec(alu=A_LINK, wb_lr=True, pc=P_REL, cost=cm.COST_CALL),
+    Op.BR: OpSpec(pc=P_IND, cost=cm.COST_INDIRECT),
+    Op.BLR: OpSpec(alu=A_LINK, wb_lr=True, pc=P_IND, cost=cm.COST_INDIRECT),
+    Op.RET: OpSpec(pc=P_IND, cost=cm.COST_CALL),
+    Op.CBZ: OpSpec(pc=P_CBZ, cost=cm.COST_BRANCH),
+    Op.CBNZ: OpSpec(pc=P_CBNZ, cost=cm.COST_BRANCH),
+    Op.BCOND: OpSpec(pc=P_BCOND, cost=cm.COST_BRANCH),
+    Op.SVC: OpSpec(pc=P_SVC),
+    Op.BRK: OpSpec(pc=P_TRAP, signo=L.SIGTRAP),
+    Op.NOP: OpSpec(),
+    Op.LDRB: OpSpec(alu=A_LOAD_B, mem=M_LOAD_BYTE, cost=cm.COST_MEM),
+    Op.STRB: OpSpec(mem=M_STORE_BYTE, cost=cm.COST_MEM),
+    Op.HLT: OpSpec(pc=P_STAY, exit_=True),
+    Op.LSLI: OpSpec(alu=A_LSL),
+}
+assert len(SPECS) == int(Op.N_OPS), "every opcode needs a spec row"
+
+
+def _col(field, dtype):
+    return np.asarray([getattr(SPECS[Op(i)], field)
+                       for i in range(int(Op.N_OPS))], dtype)
+
+
+# Host-side (numpy) columns, indexed by Op value.
+ALU_NP = _col("alu", np.int32)
+WB_SP_NP = _col("wb_sp", bool)
+WB_LR_NP = _col("wb_lr", bool)
+FLAGS_NP = _col("flags", np.int32)
+MEM_NP = _col("mem", np.int32)
+ADDR_POST_NP = _col("addr_post", bool)
+WB_BASE_NP = _col("wb_base", bool)
+PC_NP = _col("pc", np.int32)
+SEGV_NP = _col("segv", bool)
+EXIT_NP = _col("exit_", bool)
+SIGNO_NP = _col("signo", np.int64)
+COST_TABLE_NP = _col("cost", np.int64)
+
+# Device-side (jnp) columns — tiny constants every executor gathers per
+# lane per step, exactly like COST_TABLE always has.
+ALU = jnp.asarray(ALU_NP)
+WB_SP = jnp.asarray(WB_SP_NP)
+WB_LR = jnp.asarray(WB_LR_NP)
+FLAGS = jnp.asarray(FLAGS_NP)
+MEM = jnp.asarray(MEM_NP)
+ADDR_POST = jnp.asarray(ADDR_POST_NP)
+WB_BASE = jnp.asarray(WB_BASE_NP)
+PC = jnp.asarray(PC_NP)
+SEGV = jnp.asarray(SEGV_NP)
+EXIT = jnp.asarray(EXIT_NP)
+SIGNO = jnp.asarray(SIGNO_NP)
+COST_TABLE = jnp.asarray(COST_TABLE_NP)
+
+
+# ---------------------------------------------------------------------------
+# condition codes: one bitmask word per cond instead of 14 predicate trees
+# ---------------------------------------------------------------------------
+
+def _cond_mask() -> np.ndarray:
+    """``COND_MASK[cond]`` has bit ``nzcv`` set iff the condition holds at
+    that flag state — the Arm ARM's 16 predicates folded into sixteen
+    16-bit constants (conds 14/15 are AL).  The pick is then one tiny
+    gather + shift, shared verbatim by the scalar, XLA and Pallas paths."""
+    masks = np.zeros(16, np.int64)
+    for nzcv in range(16):
+        n, z = bool(nzcv & 8), bool(nzcv & 4)
+        c, v = bool(nzcv & 2), bool(nzcv & 1)
+        preds = (z, not z, c, not c, n, not n, v, not v,
+                 c and not z, not (c and not z), n == v, n != v,
+                 (not z) and n == v, not ((not z) and n == v), True, True)
+        for i, p in enumerate(preds):
+            if p:
+                masks[i] |= np.int64(1) << nzcv
+    return masks
+
+
+COND_MASK_NP = _cond_mask()
+COND_MASK = jnp.asarray(COND_MASK_NP)
+
+
+def cond_holds(nzcv, cond, mask_lut=None):
+    """Batched B.cond predicate from :data:`COND_MASK` — works on scalars
+    or [B] arrays.  Only the low four bits of ``nzcv`` participate, like
+    the original predicate trees.  ``mask_lut`` lets an executor supply
+    the LUT from its own operand set (the Pallas kernel passes the one it
+    received as a ref — closure constants are not allowed in kernels)."""
+    mask_lut = COND_MASK if mask_lut is None else mask_lut
+    mask = mask_lut[jnp.clip(cond, 0, 15)]
+    return ((mask >> (nzcv & jnp.int64(15))) & 1) != 0
+
+
+# ---------------------------------------------------------------------------
+# the device-side column bundle
+# ---------------------------------------------------------------------------
+
+class SpecTables(NamedTuple):
+    """Every device-side spec column an executor gathers per step, as one
+    pytree.  :data:`TABLES` is the canonical module-level instance the XLA
+    and scalar engines close over; the Pallas megastep kernel instead
+    receives the same columns as ``pallas_call`` operands (kernels cannot
+    capture array constants) and rebuilds a ``SpecTables`` from its refs —
+    either way every engine indexes the *same* arrays.
+    """
+
+    ALU: jnp.ndarray
+    WB_SP: jnp.ndarray
+    WB_LR: jnp.ndarray
+    FLAGS: jnp.ndarray
+    MEM: jnp.ndarray
+    ADDR_POST: jnp.ndarray
+    WB_BASE: jnp.ndarray
+    PC: jnp.ndarray
+    SEGV: jnp.ndarray
+    EXIT: jnp.ndarray
+    SIGNO: jnp.ndarray
+    COST_TABLE: jnp.ndarray
+    COND_MASK: jnp.ndarray
+
+
+TABLES = SpecTables(
+    ALU=ALU, WB_SP=WB_SP, WB_LR=WB_LR, FLAGS=FLAGS, MEM=MEM,
+    ADDR_POST=ADDR_POST, WB_BASE=WB_BASE, PC=PC, SEGV=SEGV, EXIT=EXIT,
+    SIGNO=SIGNO, COST_TABLE=COST_TABLE, COND_MASK=COND_MASK)
+
+
+# ---------------------------------------------------------------------------
+# the syscall table: one row per modelled syscall family
+# ---------------------------------------------------------------------------
+
+# Kernel-branch kinds.  K_CONST returns ``const`` (the whole family of
+# "succeed with a fixed value" syscalls); everything not in the table falls
+# through to -ENOSYS and the UNKNOWN policy slot.
+K_IO_READ, K_IO_WRITE, K_GETPID, K_EXIT, K_SIGRETURN, K_CONST = range(6)
+
+
+@dataclasses.dataclass(frozen=True)
+class SyscallSpec:
+    """One modelled syscall: its arm64 number, kernel-branch kind and (for
+    K_CONST rows) the constant return value.  Row order fixes the policy /
+    histogram slot numbering, so append new families at the end."""
+
+    name: str
+    nr: int
+    kind: int
+    const: int = 0
+
+
+SYSCALLS = (
+    SyscallSpec("read", L.SYS_READ, K_IO_READ),
+    SyscallSpec("write", L.SYS_WRITE, K_IO_WRITE),
+    SyscallSpec("getpid", L.SYS_GETPID, K_GETPID),
+    SyscallSpec("exit", L.SYS_EXIT, K_EXIT),
+    SyscallSpec("rt_sigreturn", L.SYS_RT_SIGRETURN, K_SIGRETURN),
+    SyscallSpec("openat", L.SYS_OPENAT, K_CONST, const=3),
+    SyscallSpec("close", L.SYS_CLOSE, K_CONST, const=0),
+)
+
+# Policy table slots: one per table row, plus the catch-all UNKNOWN slot
+# every other number (the sys_enosys fall-through) resolves to.
+TRACE_SYS = tuple(s.nr for s in SYSCALLS)
+SLOT_UNKNOWN = len(SYSCALLS)
+N_POLICY_SLOTS = len(SYSCALLS) + 1
+
+# Per-slot actions (seccomp-style); also the recorded verdict codes, with
+# UNKNOWN marking an ALLOWed syscall that fell through to -ENOSYS.
+POL_ALLOW, POL_DENY, POL_EMULATE, POL_KILL = 0, 1, 2, 3
+VERDICT_UNKNOWN = 4
+N_VERDICTS = 5
+
+
+def slot_of(nr: int) -> int:
+    """Policy/histogram slot for a syscall number (UNKNOWN if unmodelled)."""
+    return TRACE_SYS.index(nr) if nr in TRACE_SYS else SLOT_UNKNOWN

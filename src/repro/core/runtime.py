@@ -274,7 +274,8 @@ def run_fleet_prepared(pps: Sequence[PreparedProcess], *,
                        trace: Optional[bool] = None,
                        compact: Optional[bool] = None,
                        compact_stats: Optional[dict] = None,
-                       policy_overrides: Optional[Dict[int, Sequence]] = None):
+                       policy_overrides: Optional[Dict[int, Sequence]] = None,
+                       engine: Optional[str] = None):
     """Run every prepared process to completion in ONE device dispatch.
 
     ``chunk`` defaults to the first process's ``HookConfig.fleet_chunk``.
@@ -302,6 +303,10 @@ def run_fleet_prepared(pps: Sequence[PreparedProcess], *,
     layer's mid-flight ``update_policy`` uses
     (:func:`repro.core.fleet.update_policy_rows`) — every other lane's
     carry is untouched, so overrides are bit-invisible to bystanders.
+
+    ``engine`` selects the chunk dispatcher (``"xla"`` or ``"pallas"``,
+    bit-identical results — see :func:`repro.core.fleet.run_fleet`);
+    ``None`` defers to the first process's ``HookConfig.fleet_engine``.
     """
     packed = pack_fleet(pps, fuel=fuel, regs=regs, trace=trace)
     if policy_overrides:
@@ -323,6 +328,8 @@ def run_fleet_prepared(pps: Sequence[PreparedProcess], *,
         chunk = cfg.fleet_chunk if cfg is not None else F.DEFAULT_CHUNK
     if compact is None:
         compact = cfg.compact_enabled if cfg is not None else False
+    if engine is None:
+        engine = cfg.fleet_engine if cfg is not None else "xla"
     ts = packed[3] if len(packed) == 4 else None
     imgs, ids, states = packed[:3]
     if compact:
@@ -330,11 +337,14 @@ def run_fleet_prepared(pps: Sequence[PreparedProcess], *,
         out = F.run_fleet_compact(
             imgs, states, ids, chunk=chunk, shard=shard, trace=ts,
             min_bucket=ccfg.compact_min_bucket,
-            hysteresis=ccfg.compact_hysteresis, stats=compact_stats)
+            hysteresis=ccfg.compact_hysteresis, stats=compact_stats,
+            engine=engine)
         return out
     if ts is None:
-        return F.run_fleet(imgs, states, ids, chunk=chunk, shard=shard)
-    return F.run_fleet(imgs, states, ids, chunk=chunk, shard=shard, trace=ts)
+        return F.run_fleet(imgs, states, ids, chunk=chunk, shard=shard,
+                           engine=engine)
+    return F.run_fleet(imgs, states, ids, chunk=chunk, shard=shard, trace=ts,
+                       engine=engine)
 
 
 def precompile_compact(pps: Sequence[PreparedProcess], *,

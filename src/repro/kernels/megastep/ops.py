@@ -1,0 +1,150 @@
+"""Jitted dispatch + whole-run drivers for the Pallas megastep engine.
+
+``megastep`` is the per-chunk entry (impl-dispatched between the Pallas
+kernel and the XLA reference, like the other kernel packages).  The
+``jitted_run`` / ``jitted_span`` families mirror the fleet engine's
+drivers one-for-one — same donation, same while_loop shapes, same
+HALT_FUEL contract (run patches it, span does not) — so
+:func:`repro.core.fleet.run_fleet` and friends can swap the engine by
+swapping the cached driver and nothing else.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import fleet as F
+from repro.core.machine import MachineState
+
+from .kernel import default_interpret, megastep_chunk
+from .ref import megastep_chunk_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "block", "interpret", "impl"))
+def megastep(imgs: F.FleetImages, ids, s: MachineState,
+             tr: Optional[F.TraceState] = None, *, chunk: int,
+             block: Optional[int] = None, interpret: Optional[bool] = None,
+             impl: str = "pallas"):
+    """One fused chunk of masked fleet steps (jitted).
+
+    ``impl="pallas"`` runs the megastep kernel, ``impl="ref"`` the XLA
+    scan oracle; both are bit-identical by construction (shared
+    spec-generated executor body).
+    """
+    if impl == "pallas":
+        return megastep_chunk(imgs, ids, s, tr, chunk=chunk, block=block,
+                              interpret=interpret)
+    if impl == "ref":
+        return megastep_chunk_ref(imgs, ids, s, tr, chunk=chunk)
+    raise ValueError(f"unknown impl {impl!r}: expected 'pallas' or 'ref'")
+
+
+def _norm(chunk: int, block: Optional[int],
+          interpret: Optional[bool]):
+    # resolve cache keys up front so None and its resolution share a
+    # compiled driver
+    return (int(chunk), None if block is None else int(block),
+            default_interpret() if interpret is None else bool(interpret))
+
+
+# -- run-to-halt drivers (fleet._jitted_run counterparts) ---------------------
+
+@functools.lru_cache(maxsize=None)
+def _run_driver(chunk: int, block, interpret: bool):
+    def run(img, ids, s):
+        def body(ss):
+            return megastep_chunk(img, ids, ss, None, chunk=chunk,
+                                  block=block, interpret=interpret)
+
+        s = lax.while_loop(lambda ss: jnp.any(F._alive(ss)), body, s)
+        return F._patch_fuel(s)
+
+    return jax.jit(run, donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=None)
+def _run_driver_traced(chunk: int, block, interpret: bool):
+    def run(img, ids, s, tr):
+        def body(c):
+            return megastep_chunk(img, ids, c[0], c[1], chunk=chunk,
+                                  block=block, interpret=interpret)
+
+        s, tr = lax.while_loop(lambda c: jnp.any(F._alive(c[0])), body,
+                               (s, tr))
+        return F._patch_fuel(s), tr
+
+    return jax.jit(run, donate_argnums=(2, 3))
+
+
+def jitted_run(chunk: int, block: Optional[int] = None,
+               interpret: Optional[bool] = None):
+    """The megastep engine's :func:`fleet._jitted_run`: run every lane to
+    halt (or out of fuel, patched to ``HALT_FUEL``), states donated."""
+    return _run_driver(*_norm(chunk, block, interpret))
+
+
+def jitted_run_traced(chunk: int, block: Optional[int] = None,
+                      interpret: Optional[bool] = None):
+    return _run_driver_traced(*_norm(chunk, block, interpret))
+
+
+# -- bounded-span drivers (fleet._jitted_span counterparts) -------------------
+
+@functools.lru_cache(maxsize=None)
+def _span_driver(chunk: int, span: int, block, interpret: bool):
+    def run(img, ids, s):
+        def body(c):
+            ss, k = c
+            ss = megastep_chunk(img, ids, ss, None, chunk=chunk,
+                                block=block, interpret=interpret)
+            return ss, k + 1
+
+        def cond(c):
+            ss, k = c
+            return jnp.any(F._alive(ss)) & (k < span)
+
+        s, _ = lax.while_loop(cond, body, (s, jnp.int32(0)))
+        return s  # no HALT_FUEL patch: the span contract (see fleet)
+
+    return jax.jit(run, donate_argnums=(2,))
+
+
+@functools.lru_cache(maxsize=None)
+def _span_driver_traced(chunk: int, span: int, block, interpret: bool):
+    def run(img, ids, s, tr):
+        def body(c):
+            (ss, tt), k = c
+            ss, tt = megastep_chunk(img, ids, ss, tt, chunk=chunk,
+                                    block=block, interpret=interpret)
+            return (ss, tt), k + 1
+
+        def cond(c):
+            (ss, _), k = c
+            return jnp.any(F._alive(ss)) & (k < span)
+
+        (s, tr), _ = lax.while_loop(cond, body, ((s, tr), jnp.int32(0)))
+        return s, tr
+
+    return jax.jit(run, donate_argnums=(2, 3))
+
+
+def jitted_span(chunk: int, span: int, block: Optional[int] = None,
+                interpret: Optional[bool] = None):
+    """The megastep engine's :func:`fleet._jitted_span`: at most ``span``
+    chunks, early exit when every lane halts, NO fuel patch."""
+    c, b, i = _norm(chunk, block, interpret)
+    return _span_driver(c, int(span), b, i)
+
+
+def jitted_span_traced(chunk: int, span: int, block: Optional[int] = None,
+                       interpret: Optional[bool] = None):
+    c, b, i = _norm(chunk, block, interpret)
+    return _span_driver_traced(c, int(span), b, i)

@@ -174,7 +174,8 @@ class FleetServer:
                  compact: Optional[bool] = None,
                  scheduler: Optional[PolicyScheduler] = None,
                  durability=None, chaos=None,
-                 obs: Optional["ObsHub | bool"] = None):
+                 obs: Optional["ObsHub | bool"] = None,
+                 engine: Optional[str] = None):
         assert pool >= 1
         self.pool = pool
         self.cfg = cfg or HookConfig()
@@ -184,6 +185,10 @@ class FleetServer:
         if self.gen_steps < 1 or self.chunk < 1:
             raise ValueError(
                 f"gen_steps/chunk must be >= 1, got {self.gen_steps}/{self.chunk}")
+        # chunk dispatcher for every generation span: "xla" or "pallas"
+        # (bit-identical results — repro.core.fleet.run_fleet_span)
+        self.engine = F._check_engine(
+            self.cfg.fleet_engine if engine is None else engine, shard=shard)
         self.default_fuel = fuel
         self.trace_enabled = bool(self.cfg.trace_enabled if trace is None
                                   else trace)
@@ -341,7 +346,7 @@ class FleetServer:
             self.table.images, self._ladder, chunk=self.chunk,
             interval=self.gen_steps,
             trace_cap=self.cfg.trace_cap if self.trace_enabled else None,
-            shard=self._shard)
+            shard=self._shard, engine=self.engine)
         return list(self._ladder)
 
     # -- request intake -------------------------------------------------------
@@ -1069,12 +1074,14 @@ class FleetServer:
             with self._phase("dispatch"):
                 self._states = F.run_fleet_span(
                     self.table.images, self._states, ids,
-                    steps=self.gen_steps, chunk=self.chunk)
+                    steps=self.gen_steps, chunk=self.chunk,
+                    engine=self.engine)
         elif self._stream is None:
             with self._phase("dispatch"):
                 self._states, self._trace = F.run_fleet_span(
                     self.table.images, self._states, ids,
-                    steps=self.gen_steps, chunk=self.chunk, trace=self._trace)
+                    steps=self.gen_steps, chunk=self.chunk, trace=self._trace,
+                    engine=self.engine)
         else:
             self._dispatch_streamed(ids)
 
@@ -1096,7 +1103,8 @@ class FleetServer:
             with self._phase("dispatch"):
                 self._states, self._trace = F.run_fleet_span(
                     self.table.images, self._states, ids,
-                    steps=steps, chunk=self.chunk, trace=self._trace)
+                    steps=steps, chunk=self.chunk, trace=self._trace,
+                    engine=self.engine)
             if pending is not None:
                 with self._phase("stream_flush"):
                     self._stream.push_block(keys, *pending)

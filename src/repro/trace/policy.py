@@ -28,8 +28,9 @@ from typing import Iterable, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.fleet import (N_POLICY_SLOTS, POL_ALLOW, POL_DENY,
-                              POL_EMULATE, POL_KILL, SLOT_UNKNOWN, TRACE_SYS)
+from repro.core.opspec import (N_POLICY_SLOTS, POL_ALLOW, POL_DENY,
+                               POL_EMULATE, POL_KILL, SLOT_UNKNOWN, TRACE_SYS,
+                               slot_of)
 from repro.core.hookcfg import PolicyRule
 
 
@@ -62,8 +63,9 @@ def kill(syscall_nr: int = -1) -> PolicyRule:
     return PolicyRule(syscall_nr=syscall_nr, action="kill")
 
 
-def _slot_of(nr: int) -> int:
-    return TRACE_SYS.index(nr) if nr in TRACE_SYS else SLOT_UNKNOWN
+# Slot resolution lives on the spec table (repro.core.opspec.slot_of);
+# keep the historical private name for in-module callers.
+_slot_of = slot_of
 
 
 # Any legal arm64 syscall number fits comfortably below this; a rule

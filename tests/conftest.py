@@ -40,6 +40,12 @@ def pytest_configure(config):
         "scale up via ASC_TEST_EXAMPLES)")
     config.addinivalue_line(
         "markers",
+        "megastep: Pallas megastep engine suites (pallas==xla==scalar "
+        "bit-exact parity across mechanism x workload x chunk x "
+        "compaction on/off, traced carries included, interpret-mode on "
+        "forced-host devices; scale up via ASC_TEST_EXAMPLES)")
+    config.addinivalue_line(
+        "markers",
         "obs: serving telemetry suites (registry/profiler/span units, "
         "observed-vs-unobserved bit-identity, zero-allocation disabled "
         "path, obs knob round-trip + sink validation, resume-wait ledger, "
