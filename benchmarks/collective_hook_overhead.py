@@ -2,7 +2,7 @@
 
 The paper evaluates each interception mechanism with one process at a time.
 This suite runs the ENTIRE census — every mechanism x workload program x
-iteration count, 400 simulated processes — as a single device dispatch on
+iteration count, 500 simulated processes — as a single device dispatch on
 the batched fleet engine (repro.core.fleet), and compares aggregate
 throughput against looping the scalar engine over the same grid.
 
@@ -10,8 +10,8 @@ Census design:
 
   * **Parameterised workloads** (``programs.*_param``): the iteration count
     arrives in x19 at entry, so every iteration-count lane of a
-    (mechanism, workload) cell shares ONE image — 20 decode tables serve
-    400 processes, exactly the production-fleet shape (many processes, few
+    (mechanism, workload) cell shares ONE image — 25 decode tables serve
+    500 processes, exactly the production-fleet shape (many processes, few
     binaries) the image-dedup path (pack_fleet) exists for.
   * **Calibrated lanes** (rate-benchmark style, like SPECrate): per-cell
     base iteration counts derived from measured steps-per-iteration so
@@ -52,6 +52,10 @@ WORKLOADS = {
     "read": lambda: programs.read_loop_param(1024),
     "mixed": lambda: programs.mixed_ops_param(512),
     "io_bw": lambda: programs.io_bandwidth_param(4096),
+    # guest-kernel emulation churn (repro.emul): every iteration is a real
+    # openat/write/lseek/read/close round-trip against the per-lane fd
+    # table and in-memory filesystem
+    "churn": lambda: programs.file_churn_param(512),
 }
 
 _BASE_ITERS = {  # ~8000 steps / measured steps-per-iter, rounded
@@ -63,6 +67,8 @@ _BASE_ITERS = {  # ~8000 steps / measured steps-per-iter, rounded
               "signal": 60, "ptrace": 220},
     "io_bw": {"none": 350, "ld_preload": 350, "asc": 60,
               "signal": 110, "ptrace": 350},
+    "churn": {"none": 174, "ld_preload": 174, "asc": 32,
+              "signal": 48, "ptrace": 174},
 }
 # 20 points in a NARROW band: the iteration-count axis and the per-call
 # differential only need distinct counts, while fleet efficiency is
@@ -174,7 +180,7 @@ def run_engine_race(chunk: int = 128, pairs: int = 3, quick: bool = False,
     trace records, and per-lane policy histograms — so a perf win can never
     hide a semantic fork.
 
-    ``quick`` shrinks the grid (every 5th scale point -> 80 lanes) and runs
+    ``quick`` shrinks the grid (every 5th scale point -> 100 lanes) and runs
     one pair: the CI sanity shape, not a publishable number.
 
     Honesty note: both arms lower to the same XLA ops on hosts without a
@@ -271,7 +277,7 @@ def main(argv=None) -> None:
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
-                    help="engine-race sanity only: 80-lane grid, one "
+                    help="engine-race sanity only: 100-lane grid, one "
                          "interleaved pair (the CI shape)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")

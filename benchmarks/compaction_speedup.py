@@ -5,7 +5,7 @@ Two workload shapes, both measured against the fixed-width path with the
 SAME lanes and the results asserted bit-identical and lane-ordered in the
 benchmark itself:
 
-  * **Tail-heavy census** — the 400-lane mechanism x workload grid of
+  * **Tail-heavy census** — the 500-lane mechanism x workload grid of
     ``collective_hook_overhead`` with one deliberately long lane per cell
     (the production shape where one slow process pins the whole batch).
     The fixed-width dispatch steps every lane to the longest lane's last
@@ -43,7 +43,7 @@ FUEL = 10_000_000
 SPEEDUP_BAR = 1.2          # serving-mix acceptance bar (x vs fixed width)
 
 # The _cond_holds_v satellite of the same PR, measured on this box's
-# 400-lane census (fixed-width, chunk 128): the [B, 16] NZCV predicate
+# 500-lane census (fixed-width, chunk 128): the [B, 16] NZCV predicate
 # stack + take_along_axis rebuilt as a fused select chain.
 COND_PICK_NOTE = {
     "before_steps_per_sec": 457001,

@@ -2,7 +2,7 @@
 
 The durable server journals every generation and snapshots the full
 fleet carry every ``snapshot_interval`` generations; this census prices
-that insurance on the same 400-lane mechanism x workload x
+that insurance on the same 500-lane mechanism x workload x
 iteration-count grid as ``collective_hook_overhead``, pushed through the
 continuous-batching server twice — plain, then with a write-ahead
 journal + snapshots at the default interval 8 — and reports the
@@ -43,7 +43,7 @@ OVERHEAD_BAR_PCT = 10.0
 
 
 def build_requests(scale: float = 1.0):
-    """The 400-lane census as an arrival stream: (prepared process,
+    """The 500-lane census as an arrival stream: (prepared process,
     regs) pairs — 12 distinct images, bimodal-ish iteration counts."""
     from benchmarks.collective_hook_overhead import census_grid, _prepare_cells
     grid = census_grid()

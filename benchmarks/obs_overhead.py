@@ -3,7 +3,7 @@
 The telemetry layer (``repro.obs``) claims to observe without steering:
 counters, phase timers and lifecycle spans on every generation, with
 published guest states bit-identical to an unobserved run.  This census
-prices that claim on the same 400-lane mechanism x workload x
+prices that claim on the same 500-lane mechanism x workload x
 iteration-count grid as ``collective_hook_overhead``, pushed through the
 continuous-batching server twice — obs off, then obs on — in
 interleaved pairs with the median-ratio pair reported (the
@@ -42,7 +42,7 @@ COVERAGE_BAR = 0.90
 
 
 def build_requests(scale: float = 1.0):
-    """The 400-lane census as an arrival stream: (prepared process,
+    """The 500-lane census as an arrival stream: (prepared process,
     regs) pairs — 12 distinct images, bimodal-ish iteration counts."""
     from benchmarks.collective_hook_overhead import census_grid, _prepare_cells
     grid = census_grid()

@@ -24,13 +24,18 @@
                                policy updates; writes BENCH_sched.json
                                itself
   * durability_overhead      — write-ahead journal + snapshot cost on the
-                               400-lane census (<10% bar) and a
+                               500-lane census (<10% bar) and a
                                kill-and-recover wall-clock; writes
                                BENCH_durability.json itself
   * obs_overhead             — telemetry layer (registry + phase profiler
-                               + spans) cost on the 400-lane census (<5%
+                               + spans) cost on the 500-lane census (<5%
                                bar, >=90% phase coverage, bit-identical
                                states); writes BENCH_obs.json itself
+  * emul_overhead            — guest-kernel emulation (repro.emul) vs the
+                               legacy enosys stubs on a 400-lane
+                               file-churn census (<15% bar, zero -ENOSYS
+                               fall-throughs, xla==pallas bit-identity);
+                               writes BENCH_emul.json itself
   * roofline                 — dry-run roofline table (§Roofline)
 
 Besides the CSV stream, writes ``benchmarks/results/BENCH_fleet.json`` with
@@ -52,7 +57,7 @@ import traceback
 SUITES = ["hook_overhead", "svc_census", "app_bandwidth", "collective_census",
           "collective_hook_overhead", "serving_throughput", "trace_overhead",
           "compaction_speedup", "policy_scheduler", "durability_overhead",
-          "obs_overhead", "roofline"]
+          "obs_overhead", "emul_overhead", "roofline"]
 
 # suites feeding the BENCH_fleet.json record (collect_fleet_bench)
 _FLEET_BENCH_INPUTS = {"hook_overhead", "collective_hook_overhead"}
@@ -69,7 +74,7 @@ def collect_fleet_bench() -> dict:
     """The machine-readable fleet benchmark record (BENCH_fleet.json).
 
     Schema v2 adds the ``engines`` block: the xla-vs-pallas (megastep
-    kernel) race on the 400-lane census — interleaved median-ratio pairs,
+    kernel) race on the 500-lane census — interleaved median-ratio pairs,
     with final states, decoded traces and histograms asserted bit-identical
     inside the benchmark before anything is timed.  ``platform`` /
     ``interpret`` qualify the ratio: on hosts without a Pallas backend both

@@ -3,7 +3,7 @@
 The paper's pitch is that ASC-Hook keeps hooks cheap enough to leave ON
 (~3.7% app-level overhead); our serving-scale analog is that turning the
 syscall trace + policy subsystem (repro.trace) on must not cost the fleet
-its one-dispatch speedup.  This census runs the SAME 400-lane mechanism x
+its one-dispatch speedup.  This census runs the SAME 500-lane mechanism x
 workload x iteration-count grid as ``collective_hook_overhead`` three
 ways — untraced, ring-traced (classic fixed ring, drop-oldest on wrap)
 and *streamed* (double-buffered rings flipped at span boundaries, cold

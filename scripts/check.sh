@@ -1,11 +1,12 @@
 #!/usr/bin/env bash
 # CI-style gate: tier-1, the smoke + serving + trace + compaction +
-# sched + stream + durability + obs + megastep tiers, and seconds-long
-# sanity passes — several on 2 forced host devices (the sharded serving
-# pool, the lane-partitioned census, a compaction rung, and the durability
-# kill-recover pass) plus the trace-overhead, compaction, scheduler,
-# durability, obs, and two-engine (xla vs pallas megastep) benchmarks
-# (--quick).  See tests/README.md for the tiers.
+# sched + stream + durability + obs + megastep + emul tiers, and
+# seconds-long sanity passes — several on 2 forced host devices (the
+# sharded serving pool, the lane-partitioned census, a compaction rung,
+# and the durability kill-recover pass) plus the trace-overhead,
+# compaction, scheduler, durability, obs, guest-kernel emulation, and
+# two-engine (xla vs pallas megastep) benchmarks (--quick).  See
+# tests/README.md for the tiers.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -41,6 +42,9 @@ ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m obs
 echo "== megastep tier (heavier example counts) =="
 ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m megastep
 
+echo "== emul tier (guest-kernel emulation) =="
+ASC_TEST_EXAMPLES="${ASC_TEST_EXAMPLES:-15}" python -m pytest -q -m emul
+
 echo "== serving throughput sanity (sharded, 2 host devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
     python -m benchmarks.serving_throughput --quick --shard
@@ -68,6 +72,9 @@ python -m benchmarks.durability_overhead --quick --devices 2
 
 echo "== obs overhead sanity (single device) =="
 python -m benchmarks.obs_overhead --quick
+
+echo "== guest-kernel emulation sanity (stub retirement + engine parity) =="
+python -m benchmarks.emul_overhead --quick
 
 echo "== two-engine sanity (xla vs pallas megastep, bit-identity gate) =="
 python -m benchmarks.collective_hook_overhead --quick

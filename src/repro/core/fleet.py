@@ -49,6 +49,8 @@ from .machine import (COST_TABLE, HALT_BADMEM, HALT_EXIT, HALT_FUEL,
                       HALT_KILL, HALT_SEGV, HALT_TRAP, RUNNING,
                       SIGFRAME_WORDS, DecodedImage, MachineState,
                       _SIGFRAME_IDX)
+from repro.emul import engine as emul_engine
+from repro.emul import state as emul_state
 
 I64 = jnp.int64
 I32 = jnp.int32
@@ -384,6 +386,7 @@ def exec_lanes(fields, s: MachineState, tr: Optional[TraceState],
     # -- syscalls (scalar effects; the I/O word loop is under a cond below) --
     nr = x8
     in_pt = s.ptrace != 0
+    en = s.k_enabled != 0  # per-lane guest-kernel gate (0 = legacy stubs)
     if traced:
         # Seccomp-style gate: resolve nr to a per-lane policy action, then
         # only ALLOW lanes reach the sys_* branches.  The lookup is a chain
@@ -395,41 +398,87 @@ def exec_lanes(fields, s: MachineState, tr: Optional[TraceState],
         action = tr.pol_action[:, SLOT_UNKNOWN]
         pol_arg = tr.pol_arg[:, SLOT_UNKNOWN]
         pol_slot = jnp.full((B,), SLOT_UNKNOWN, I64)
+        emulable = jnp.zeros((B,), bool)
         for i, spec in enumerate(opspec.SYSCALLS):
             hit = nr == spec.nr
             action = jnp.where(hit, tr.pol_action[:, i], action)
             pol_arg = jnp.where(hit, tr.pol_arg[:, i], pol_arg)
             pol_slot = jnp.where(hit, jnp.int64(i), pol_slot)
+            if spec.emul:
+                emulable = emulable | hit
         pol_deny = m_svc & (action == POL_DENY)
         pol_emul = m_svc & (action == POL_EMULATE)
         pol_kill = m_svc & (action == POL_KILL)
-        svc_exec = m_svc & (action == POL_ALLOW)
+        # An EMULATE verdict on a guest-kernel-backed nr routes into the
+        # emulation branch (real fd-table service); on anything else it
+        # returns the policy constant, as it always did.  Both record the
+        # POL_EMULATE verdict and feed emul_count.
+        emul_route = pol_emul & emulable & en
+        pol_emul_const = pol_emul & ~(emulable & en)
+        svc_exec = m_svc & ((action == POL_ALLOW) | emul_route)
     else:
         svc_exec = m_svc
 
     # Per-kind syscall masks generated from the spec's syscall rows; a new
     # constant-returning syscall (K_CONST) is one table row, not a mask +
-    # a select row + a scalar branch.
+    # a select row + a scalar branch.  Guest-kernel kinds split on the
+    # per-lane ``en`` gate: enabled lanes take the fd-table path
+    # (repro.emul), disabled lanes reproduce the legacy semantics exactly
+    # (openat/close keep their constant stubs, the rest fall through to
+    # -ENOSYS).
     false_b = jnp.zeros((B,), bool)
     sys_read = sys_write = sys_getpid = sys_exit = sys_sigret = false_b
+    sys_open = sys_close = sys_lseek = sys_dup = false_b
+    sys_fstat = sys_pipe = sys_rand = sys_ioctl = false_b
     sys_const, known = false_b, false_b
     const_val = zero
+    _EMUL_ONLY = {opspec.K_LSEEK: "lseek", opspec.K_DUP: "dup",
+                  opspec.K_FSTAT: "fstat", opspec.K_PIPE2: "pipe",
+                  opspec.K_GETRANDOM: "rand", opspec.K_IOCTL: "ioctl"}
+    emul_only_masks = {"lseek": sys_lseek, "dup": sys_dup, "fstat": sys_fstat,
+                       "pipe": sys_pipe, "rand": sys_rand, "ioctl": sys_ioctl}
     for spec in opspec.SYSCALLS:
         hit = svc_exec & (nr == spec.nr)
-        known = known | hit
         if spec.kind == opspec.K_IO_READ:
             sys_read = sys_read | hit
+            known = known | hit
         elif spec.kind == opspec.K_IO_WRITE:
             sys_write = sys_write | hit
+            known = known | hit
         elif spec.kind == opspec.K_GETPID:
             sys_getpid = sys_getpid | hit
+            known = known | hit
         elif spec.kind == opspec.K_EXIT:
             sys_exit = sys_exit | hit
+            known = known | hit
         elif spec.kind == opspec.K_SIGRETURN:
             sys_sigret = sys_sigret | hit
+            known = known | hit
+        elif spec.kind in (opspec.K_OPENAT, opspec.K_CLOSE):
+            # enabled: real fd-table open/close; disabled: the historical
+            # constant stub (openat -> 3, close -> 0)
+            m = hit & en
+            if spec.kind == opspec.K_OPENAT:
+                sys_open = sys_open | m
+            else:
+                sys_close = sys_close | m
+            sys_const = sys_const | (hit & ~en)
+            const_val = jnp.where(hit & ~en, jnp.int64(spec.const), const_val)
+            known = known | hit
+        elif spec.kind in _EMUL_ONLY:
+            name = _EMUL_ONLY[spec.kind]
+            emul_only_masks[name] = emul_only_masks[name] | (hit & en)
+            known = known | (hit & en)  # disabled lanes: -ENOSYS, as before
         else:  # K_CONST
             sys_const = sys_const | hit
             const_val = jnp.where(hit, jnp.int64(spec.const), const_val)
+            known = known | hit
+    sys_lseek, sys_dup, sys_fstat = (emul_only_masks["lseek"],
+                                     emul_only_masks["dup"],
+                                     emul_only_masks["fstat"])
+    sys_pipe, sys_rand, sys_ioctl = (emul_only_masks["pipe"],
+                                     emul_only_masks["rand"],
+                                     emul_only_masks["ioctl"])
     sys_enosys = svc_exec & ~known
 
     io_buf, io_n = x1, x2
@@ -437,25 +486,58 @@ def exec_lanes(fields, s: MachineState, tr: Optional[TraceState],
     io_ok = (_mem_ok_v(io_buf) & (io_buf + io_n <= L.MEM_LIMIT)
              & (io_n >= 0) & ((io_n & 7) == 0))
     io_start = _widx_v(io_buf)
-    io_do = (sys_read | sys_write) & io_ok
+
+    # First path word for openat lanes — the one-word namespace key.  Read
+    # from the pre-store memory (like v1/v2 above) behind a batch-uniform
+    # cond so the carry stays aliasable.
+    path_w = lax.cond(
+        jnp.any(sys_open),
+        lambda: mem_flat[lane_base + _widx_v(x1)],
+        lambda: jnp.zeros((B,), I64))
+
+    # -- guest-kernel service (control plane) -------------------------------
+    # The whole fd-table step hides behind one batch-uniform cond: steps
+    # where no lane executes an emulated operation (and no enabled lane is
+    # inside read/write, whose stream-vs-file routing the service decides)
+    # pay a single jnp.any.  The neutral branch is bit-identical to the
+    # service on such a batch.
+    emul_op = (sys_open | sys_close | sys_lseek | sys_dup | sys_fstat
+               | sys_pipe | sys_rand | sys_ioctl)
+    any_kern = jnp.any(emul_op | ((sys_read | sys_write) & en))
+    eff = lax.cond(
+        any_kern,
+        lambda: emul_engine.service(
+            s, en=en, x0=x0, x1=x1, x2=x2, path_w=path_w,
+            io_ok=io_ok, io_n=io_n,
+            sys_open=sys_open, sys_close=sys_close, sys_lseek=sys_lseek,
+            sys_dup=sys_dup, sys_fstat=sys_fstat, sys_pipe=sys_pipe,
+            sys_rand=sys_rand, sys_ioctl=sys_ioctl,
+            sys_read=sys_read, sys_write=sys_write),
+        lambda: emul_engine.neutral(s, sys_read, sys_write))
+    io_do = (eff.rd_stream | eff.wr_stream) & io_ok
 
     virt = in_pt & (s.virt_getpid != 0)
     svc_x0 = jnp.select(
-        [sys_read | sys_write,
+        [eff.rd_stream | eff.wr_stream,
+         eff.is_ret,
          sys_getpid,
          sys_const,
          sys_enosys],
         [jnp.where(io_ok, io_n, jnp.int64(-14)),
+         eff.ret,
          jnp.where(virt, jnp.int64(L.VIRT_PID), s.pid),
          const_val,
          jnp.full((B,), -38, I64)],
         zero)
     svc_x0_en = svc_exec & ~(sys_exit | sys_sigret)
     if traced:
-        # DENY returns -errno, EMULATE returns the policy constant; both
-        # skip the kernel branch entirely and fall through to pc+4.
-        svc_x0 = jnp.select([pol_deny, pol_emul], [-pol_arg, pol_arg], svc_x0)
-        svc_x0_en = svc_x0_en | pol_deny | pol_emul
+        # DENY returns -errno, non-routable EMULATE returns the policy
+        # constant; both skip the kernel branch and fall through to pc+4.
+        # Routed EMULATE lanes already hold their emulated return in
+        # svc_x0 (eff.ret).
+        svc_x0 = jnp.select([pol_deny, pol_emul_const],
+                            [-pol_arg, pol_arg], svc_x0)
+        svc_x0_en = svc_x0_en | pol_deny | pol_emul_const
 
     # -- signal delivery / sigreturn (static 34-word frame window) -----------
     # ``dlv`` is the P_TRAP pc-class mask from the spec gathers above; the
@@ -495,6 +577,17 @@ def exec_lanes(fields, s: MachineState, tr: Optional[TraceState],
             jnp.where(can_sig[:, None], frame_out, cur))
 
     mem = lax.cond(jnp.any(can_sig), push_frames, lambda mm: mm, mem)
+
+    # fstat statbuf / pipe2 fd-pair result words: <= 6 words fleet-wide,
+    # parked out-of-bounds + dropped when masked, behind the same
+    # batch-uniform cond discipline as the sigframe push.
+    def emul_result_words(mm):
+        return mm.reshape(-1).at[eff.scat_idx].set(
+            eff.scat_val, mode="drop",
+            unique_indices=True).reshape(B, L.MEM_WORDS)
+
+    mem = lax.cond(jnp.any(eff.scat_do), emul_result_words,
+                   lambda mm: mm, mem)
 
     # Syscall I/O fill/sum.  Typically only a lane or two is inside
     # read/write on any given step, so iterate over the io lanes (a bare
@@ -545,6 +638,18 @@ def exec_lanes(fields, s: MachineState, tr: Optional[TraceState],
         lambda c: jnp.any(c[2]), io_lane_body,
         (mem.reshape(-1), zero, io_do))
     mem = mem_io.reshape(B, L.MEM_WORDS)
+
+    # Guest-kernel bulk data (file/pipe/proc reads+writes, getrandom
+    # fills): the same bare-while-loop discipline over the (memory,
+    # inode-data) flat planes — zero iterations when no lane moves words.
+    proc_flat = lax.cond(
+        jnp.any(eff.src_is_proc),
+        lambda: emul_engine.proc_rows(s).reshape(-1),
+        lambda: jnp.zeros((B * L.PROC_WORDS,), I64))
+    mem_fio, ino_flat = emul_engine.run_data_loop(
+        mem.reshape(-1), eff.kern.ino_data.reshape(-1), proc_flat, eff)
+    mem = mem_fio.reshape(B, L.MEM_WORDS)
+    k_ino_data = ino_flat.reshape(B, L.MAX_INODES * L.FILE_WORDS)
 
     # Sigreturn frame read — from the FINAL memory, after all writes.  A
     # sigreturn lane performs no store/push/I-O in the same step, so its row
@@ -640,12 +745,17 @@ def exec_lanes(fields, s: MachineState, tr: Optional[TraceState],
                                 jnp.int64(cm.SIGNAL_DELIVERY), zero)
     icount = s.icount + jnp.where(act, jnp.int64(1), zero)
     hook_count = s.hook_count + jnp.where(m_svc & in_pt, jnp.int64(1), zero)
-    in_off = s.in_off + jnp.where(sys_read & io_ok, io_n, zero)
-    out_count = s.out_count + jnp.where(sys_write & io_ok, io_n, zero)
-    out_sum = s.out_sum + jnp.where(sys_write & io_ok, io_sum, zero)
+    # Stream effects follow the service routing: on legacy lanes
+    # rd_stream/wr_stream equal the raw masks, so these reduce to the
+    # historical expressions; on enabled lanes only FD_RSTREAM reads /
+    # FD_WSINK writes touch the modelled stream counters.
+    in_off = s.in_off + jnp.where(eff.rd_stream & io_ok, io_n, zero)
+    out_count = s.out_count + jnp.where(eff.wr_stream & io_ok, io_n, zero)
+    out_sum = s.out_sum + jnp.where(eff.wr_stream & io_ok, io_sum, zero)
     in_signal = jnp.where(can_sig, jnp.int64(1),
                           jnp.where(sys_sigret, jnp.int64(0), s.in_signal))
     enosys_count = s.enosys_count + jnp.where(sys_enosys, jnp.int64(1), zero)
+    emul_served = s.emul_served + jnp.where(eff.served, jnp.int64(1), zero)
 
     # -- trace record append (traced path only) ------------------------------
     if traced:
@@ -658,9 +768,9 @@ def exec_lanes(fields, s: MachineState, tr: Optional[TraceState],
         def append(operand):
             buf, hist = operand
             ret = jnp.select(
-                [pol_deny, pol_emul, pol_kill, sys_exit, sys_sigret],
+                [pol_deny, pol_emul_const, pol_kill, sys_exit, sys_sigret],
                 [-pol_arg, pol_arg, zero, x0, frame_in[:, 0]],
-                svc_x0)
+                svc_x0)  # routed EMULATE lanes: svc_x0 == the emulated ret
             verdict = jnp.select(
                 [pol_deny, pol_emul, pol_kill, sys_enosys],
                 [jnp.full((B,), POL_DENY, I64),
@@ -701,11 +811,18 @@ def exec_lanes(fields, s: MachineState, tr: Optional[TraceState],
             emul_count=tr.emul_count + jnp.where(pol_emul, one, zero),
             kill_count=tr.kill_count + jnp.where(pol_kill, one, zero))
 
+    kern = eff.kern
     return s._replace(
         regs=regs, sp=sp, pc=pc, nzcv=nzcv, mem=mem, cycles=cycles,
         icount=icount, halted=halted, exit_code=exit_code, fault_pc=fault_pc,
         in_signal=in_signal, hook_count=hook_count, in_off=in_off,
-        out_count=out_count, out_sum=out_sum, enosys_count=enosys_count), tr
+        out_count=out_count, out_sum=out_sum, enosys_count=enosys_count,
+        emul_served=emul_served,
+        k_rng=kern.rng, k_fd_ofd=kern.fd_ofd, k_ofd_kind=kern.ofd_kind,
+        k_ofd_ino=kern.ofd_ino, k_ofd_off=kern.ofd_off,
+        k_ofd_flags=kern.ofd_flags, k_ofd_ref=kern.ofd_ref,
+        k_ino_kind=kern.ino_kind, k_ino_name=kern.ino_name,
+        k_ino_size=kern.ino_size, k_ino_data=k_ino_data), tr
 
 
 def _step_core(img: FleetImages, ids: jnp.ndarray, s: MachineState,
@@ -938,17 +1055,19 @@ def finish_halt_codes(halted: np.ndarray, icount: np.ndarray,
 
 def _admit_lanes(s: MachineState, idx: jnp.ndarray, regs: jnp.ndarray,
                  pc: jnp.ndarray, fuel: jnp.ndarray, sig_handler: jnp.ndarray,
-                 ptrace: jnp.ndarray, virt_getpid: jnp.ndarray) -> MachineState:
+                 ptrace: jnp.ndarray, virt_getpid: jnp.ndarray,
+                 k_enabled: jnp.ndarray) -> MachineState:
     """Scatter fresh per-lane initial states into slots ``idx`` in place.
 
     ``idx`` is padded with out-of-range entries (>= B) for unused admission
     slots — those scatter with ``mode="drop"``.  A row admitted here is
     bit-identical to ``runtime.initial_state``: zero memory/flags/counters,
-    ``sp = STACK_TOP``, ``pid = PID``, and the given entry/fuel/mechanism
-    registers.
+    ``sp = STACK_TOP``, ``pid = PID``, the given entry/fuel/mechanism
+    registers, and a fresh preopened guest-kernel state.
     """
     k = idx.shape[0]
     zeros = jnp.zeros((k,), I64)
+    kern = emul_state.fresh_kern(k)
 
     def put(leaf, val):
         return leaf.at[idx].set(val, mode="drop")
@@ -975,6 +1094,12 @@ def _admit_lanes(s: MachineState, idx: jnp.ndarray, regs: jnp.ndarray,
         out_count=put(s.out_count, zeros),
         out_sum=put(s.out_sum, zeros),
         enosys_count=put(s.enosys_count, zeros),
+        emul_served=put(s.emul_served, zeros),
+        # fresh guest kernel: preopened fds 0..3, empty fs, the admitted
+        # lane's own enable gate (from its HookConfig via initial_state)
+        **{f: put(getattr(s, f),
+                  kern[f] if f != "k_enabled" else k_enabled)
+           for f in emul_state.KERN_FIELDS},
     )
 
 
@@ -983,7 +1108,7 @@ _jitted_admit = jax.jit(_admit_lanes, donate_argnums=(0,))
 
 def _admit_lanes_traced(s: MachineState, tr: TraceState, idx: jnp.ndarray,
                         regs, pc, fuel, sig_handler, ptrace, virt_getpid,
-                        pol_action, pol_arg):
+                        k_enabled, pol_action, pol_arg):
     """The traced admission: reset each admitted lane's ring (row + count)
     and install its per-request policy tables, same donated-scatter shape as
     the machine-state admission."""
@@ -1005,7 +1130,7 @@ def _admit_lanes_traced(s: MachineState, tr: TraceState, idx: jnp.ndarray,
         kill_count=tr.kill_count.at[idx].set(zk, mode="drop"),
     )
     return _admit_lanes(s, idx, regs, pc, fuel, sig_handler, ptrace,
-                        virt_getpid), tr
+                        virt_getpid, k_enabled), tr
 
 
 _jitted_admit_traced = jax.jit(_admit_lanes_traced, donate_argnums=(0, 1))
@@ -1038,7 +1163,7 @@ def admit_lanes(states: MachineState, slots: Sequence[int],
         assert policies is None, "policies require a trace carry"
         return _jitted_admit(states, idx, regs, pack("pc"), pack("fuel"),
                              pack("sig_handler"), pack("ptrace"),
-                             pack("virt_getpid"))
+                             pack("virt_getpid"), pack("k_enabled"))
     if policies is None:
         policies = [None] * len(slots)
     assert len(policies) == len(slots)
@@ -1050,6 +1175,7 @@ def admit_lanes(states: MachineState, slots: Sequence[int],
     return _jitted_admit_traced(states, trace, idx, regs, pack("pc"),
                                 pack("fuel"), pack("sig_handler"),
                                 pack("ptrace"), pack("virt_getpid"),
+                                pack("k_enabled"),
                                 jnp.asarray(pa), jnp.asarray(pg))
 
 
@@ -1423,7 +1549,9 @@ def make_halted_states(n: int) -> MachineState:
         exit_code=z(), fault_pc=z(), sig_handler=z(), in_signal=z(),
         ptrace=z(), virt_getpid=z(), hook_count=z(),
         pid=jnp.full((n,), L.PID, I64),
-        in_off=z(), out_count=z(), out_sum=z(), enosys_count=z())
+        in_off=z(), out_count=z(), out_sum=z(), enosys_count=z(),
+        emul_served=z(),
+        **emul_state.fresh_kern(n))  # fresh buffers, same donation rule
 
 
 def make_empty_trace(n: int, cap: int) -> TraceState:
@@ -1737,6 +1865,8 @@ def fleet_summary(states: MachineState) -> List[dict]:
         "icount": np.asarray(states.icount),
         "out_count": np.asarray(states.out_count),
         "out_sum": np.asarray(states.out_sum),
+        "enosys_count": np.asarray(states.enosys_count),
+        "emul_served": np.asarray(states.emul_served),
     }
     hooks = fleet_counters(states)
     n = fields["halted"].shape[0]
@@ -1797,22 +1927,28 @@ def lane_digests(states: MachineState,
     return out
 
 
+# Big mostly-zero planes stored as nonzero (idx, val) pairs in snapshots.
+_SPARSE_CARRY = ("mem", "k_ino_data")
+
+
 def pack_carry(states: MachineState, trace: Optional[TraceState] = None,
                *, prefix: str = "") -> Dict[str, np.ndarray]:
     """Flatten a fleet carry into snapshot arrays: ``state/<field>`` and
-    ``trace/<field>`` host arrays, with the mostly-zero [B, MEM_WORDS]
-    memory leaf stored sparsely (``state/mem@idx`` flat nonzero indices +
-    ``state/mem@val`` values) — a 400-lane pool's dense memory plane is
+    ``trace/<field>`` host arrays, with the mostly-zero big planes — the
+    [B, MEM_WORDS] memory leaf and the [B, MAX_INODES*FILE_WORDS] inode
+    data plane — stored sparsely (``state/<f>@idx`` flat nonzero indices
+    + ``state/<f>@val`` values) — a 400-lane pool's dense memory plane is
     100MB/snapshot, which would sink the <10% durability-overhead budget
     on its own.  :func:`unpack_carry` reverses both encodings."""
     out: Dict[str, np.ndarray] = {}
-    mem = np.asarray(states.mem)
-    idx = np.flatnonzero(mem.reshape(-1))
-    out[f"{prefix}state/mem@idx"] = idx
-    out[f"{prefix}state/mem@val"] = mem.reshape(-1)[idx]
-    out[f"{prefix}state/mem@shape"] = np.asarray(mem.shape, np.int64)
+    for f in _SPARSE_CARRY:
+        dense = np.asarray(getattr(states, f))
+        idx = np.flatnonzero(dense.reshape(-1))
+        out[f"{prefix}state/{f}@idx"] = idx
+        out[f"{prefix}state/{f}@val"] = dense.reshape(-1)[idx]
+        out[f"{prefix}state/{f}@shape"] = np.asarray(dense.shape, np.int64)
     for key, leaf in zip(states._fields, states):
-        if key != "mem":
+        if key not in _SPARSE_CARRY:
             out[f"{prefix}state/{key}"] = np.asarray(leaf)
     if trace is not None:
         for key, leaf in zip(trace._fields, trace):
@@ -1824,13 +1960,15 @@ def unpack_carry(arrays, *, prefix: str = ""
                  ) -> Tuple[MachineState, Optional[TraceState]]:
     """Rebuild ``(MachineState, TraceState | None)`` host trees from
     :func:`pack_carry` snapshot arrays."""
-    shape = tuple(int(x) for x in arrays[f"{prefix}state/mem@shape"])
-    mem = np.zeros(int(np.prod(shape)), I64)
-    mem[np.asarray(arrays[f"{prefix}state/mem@idx"])] = \
-        np.asarray(arrays[f"{prefix}state/mem@val"])
-    fields = {"mem": mem.reshape(shape)}
+    fields = {}
+    for f in _SPARSE_CARRY:
+        shape = tuple(int(x) for x in arrays[f"{prefix}state/{f}@shape"])
+        dense = np.zeros(int(np.prod(shape)), I64)
+        dense[np.asarray(arrays[f"{prefix}state/{f}@idx"])] = \
+            np.asarray(arrays[f"{prefix}state/{f}@val"])
+        fields[f] = dense.reshape(shape)
     for key in MachineState._fields:
-        if key != "mem":
+        if key not in _SPARSE_CARRY:
             fields[key] = np.asarray(arrays[f"{prefix}state/{key}"])
     states = MachineState(**fields)
     if f"{prefix}trace/count" not in arrays:

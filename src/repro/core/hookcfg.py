@@ -109,6 +109,12 @@ class HookConfig:
     # recovery).
     trace_stream: bool = False
     trace_sink: str = ""
+    # Guest-kernel emulation (repro.emul): when on, lanes carry a per-lane
+    # fd table + in-memory filesystem and openat/close/read/write/lseek/
+    # dup/fstat/pipe2/getrandom/ioctl get real semantics; when off, lanes
+    # reproduce the legacy stubs exactly (openat -> 3, close -> 0, the
+    # rest -> -ENOSYS).  Per-lane gate: mixed fleets are fine.
+    emul_enabled: bool = True
     # Policy-driven serving scheduler (repro.sched / FleetServer).  The
     # tenant label is the accounting principal: per-tenant verdict counts,
     # syscall/deny budgets, quarantine and live policy updates all key on

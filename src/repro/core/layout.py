@@ -33,14 +33,42 @@ MEM_LIMIT = 0x80000
 MEM_WORDS = (MEM_LIMIT - DATA_BASE) // 8
 
 # -- Linux arm64 syscall numbers (faithful) ----------------------------------
+SYS_DUP = 23
+SYS_IOCTL = 29
 SYS_OPENAT = 56
 SYS_CLOSE = 57
+SYS_PIPE2 = 59
+SYS_LSEEK = 62
 SYS_READ = 63
 SYS_WRITE = 64
+SYS_FSTAT = 80
 SYS_EXIT = 93
 SYS_RT_SIGRETURN = 139
 SYS_GETPID = 172
+SYS_GETRANDOM = 278
 MAX_SYSCALL_NR = 600         # the paper's "< 600" discrimination bound
+
+# -- guest-kernel emulation sizing (repro.emul) ------------------------------
+# Per-lane fd table and in-memory filesystem: MAX_FDS open-file slots (and
+# as many open-file descriptions), MAX_INODES fixed-size inodes of
+# FILE_WORDS data words each (4 KiB files), and a PROC_WORDS synthetic
+# /proc window rendered from live lane counters.
+MAX_FDS = 16
+MAX_INODES = 8
+FILE_WORDS = 512
+FILE_BYTES = FILE_WORDS * 8
+PROC_WORDS = 32
+
+# open(2) flag bits consumed by the emulated openat (Linux arm64 values)
+O_CREAT = 0o100
+O_EXCL = 0o200
+O_TRUNC = 0o1000
+O_APPEND = 0o2000
+
+# lseek(2) whence
+SEEK_SET = 0
+SEEK_CUR = 1
+SEEK_END = 2
 
 # -- signal numbers ----------------------------------------------------------
 SIGILL = 4

@@ -83,6 +83,25 @@ class MachineState(NamedTuple):
     out_count: jnp.ndarray    # modelled output effects (write)
     out_sum: jnp.ndarray
     enosys_count: jnp.ndarray  # syscalls that fell through to -ENOSYS
+    emul_served: jnp.ndarray   # syscalls serviced by the guest kernel
+    # -- guest-kernel emulation carry (repro.emul) -------------------------
+    # Flat ``k_``-prefixed leaves rather than a nested pytree: every fleet
+    # mechanism (admission, compaction, checkpoints, sharding, snapshots,
+    # megastep refs) iterates MachineState._fields generically, so flat
+    # leaves ride all of them for free.  repro.emul.state.KernelState is
+    # the typed view.
+    k_enabled: jnp.ndarray    # per-lane emulation gate (0 = legacy stubs)
+    k_rng: jnp.ndarray        # getrandom counter state
+    k_fd_ofd: jnp.ndarray     # int64[MAX_FDS]: open-file-description id, -1 free
+    k_ofd_kind: jnp.ndarray   # int64[MAX_FDS]: emul.state.FD_* kind
+    k_ofd_ino: jnp.ndarray    # int64[MAX_FDS]: backing inode id
+    k_ofd_off: jnp.ndarray    # int64[MAX_FDS]: file offset in bytes
+    k_ofd_flags: jnp.ndarray  # int64[MAX_FDS]: open(2) flags (O_APPEND...)
+    k_ofd_ref: jnp.ndarray    # int64[MAX_FDS]: fd refcount (dup sharing)
+    k_ino_kind: jnp.ndarray   # int64[MAX_INODES]: emul.state.INO_* kind
+    k_ino_name: jnp.ndarray   # int64[MAX_INODES]: first 8 path bytes
+    k_ino_size: jnp.ndarray   # int64[MAX_INODES]: size / pipe write pos, bytes
+    k_ino_data: jnp.ndarray   # int64[MAX_INODES * FILE_WORDS] data words
 
 
 def decode_image(code_words: np.ndarray) -> DecodedImage:
@@ -115,6 +134,10 @@ COST_TABLE = opspec.COST_TABLE
 
 
 def make_state(entry_pc: int, fuel: int = 2_000_000) -> MachineState:
+    # deferred: emul.state imports only layout, but keep core importable
+    # without pulling the emul package at module-load time
+    from repro.emul import state as emul_state
+
     z = jnp.int64(0)
     return MachineState(
         regs=jnp.zeros(31, jnp.int64),
@@ -126,7 +149,8 @@ def make_state(entry_pc: int, fuel: int = 2_000_000) -> MachineState:
         halted=z, exit_code=z, fault_pc=z,
         sig_handler=z, in_signal=z, ptrace=z, virt_getpid=z,
         hook_count=z, pid=jnp.int64(L.PID), in_off=z, out_count=z, out_sum=z,
-        enosys_count=z,
+        enosys_count=z, emul_served=z,
+        **emul_state.fresh_kern_scalar(),
     )
 
 

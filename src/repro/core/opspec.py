@@ -246,30 +246,48 @@ TABLES = SpecTables(
 
 # Kernel-branch kinds.  K_CONST returns ``const`` (the whole family of
 # "succeed with a fixed value" syscalls); everything not in the table falls
-# through to -ENOSYS and the UNKNOWN policy slot.
-K_IO_READ, K_IO_WRITE, K_GETPID, K_EXIT, K_SIGRETURN, K_CONST = range(6)
+# through to -ENOSYS and the UNKNOWN policy slot.  The K_OPENAT..K_IOCTL
+# kinds are serviced by the guest-kernel emulation subsystem
+# (:mod:`repro.emul`) on lanes with ``k_enabled`` set; on legacy lanes
+# (``k_enabled == 0``) K_OPENAT/K_CLOSE fall back to their historical
+# constant returns and the remaining emulated kinds to -ENOSYS, which is
+# exactly the pre-emulation surface.
+(K_IO_READ, K_IO_WRITE, K_GETPID, K_EXIT, K_SIGRETURN, K_CONST,
+ K_OPENAT, K_CLOSE, K_LSEEK, K_DUP, K_FSTAT, K_PIPE2, K_GETRANDOM,
+ K_IOCTL) = range(14)
 
 
 @dataclasses.dataclass(frozen=True)
 class SyscallSpec:
     """One modelled syscall: its arm64 number, kernel-branch kind and (for
-    K_CONST rows) the constant return value.  Row order fixes the policy /
-    histogram slot numbering, so append new families at the end."""
+    K_CONST rows, or the disabled-emulation fallback of K_OPENAT/K_CLOSE)
+    the constant return value.  ``emul`` marks rows serviced by the
+    guest-kernel emulation branch — the rows an EMULATE policy verdict can
+    route into instead of substituting a constant.  Row order fixes the
+    policy / histogram slot numbering, so append new families at the end.
+    """
 
     name: str
     nr: int
     kind: int
     const: int = 0
+    emul: bool = False
 
 
 SYSCALLS = (
-    SyscallSpec("read", L.SYS_READ, K_IO_READ),
-    SyscallSpec("write", L.SYS_WRITE, K_IO_WRITE),
+    SyscallSpec("read", L.SYS_READ, K_IO_READ, emul=True),
+    SyscallSpec("write", L.SYS_WRITE, K_IO_WRITE, emul=True),
     SyscallSpec("getpid", L.SYS_GETPID, K_GETPID),
     SyscallSpec("exit", L.SYS_EXIT, K_EXIT),
     SyscallSpec("rt_sigreturn", L.SYS_RT_SIGRETURN, K_SIGRETURN),
-    SyscallSpec("openat", L.SYS_OPENAT, K_CONST, const=3),
-    SyscallSpec("close", L.SYS_CLOSE, K_CONST, const=0),
+    SyscallSpec("openat", L.SYS_OPENAT, K_OPENAT, const=3, emul=True),
+    SyscallSpec("close", L.SYS_CLOSE, K_CLOSE, const=0, emul=True),
+    SyscallSpec("lseek", L.SYS_LSEEK, K_LSEEK, emul=True),
+    SyscallSpec("dup", L.SYS_DUP, K_DUP, emul=True),
+    SyscallSpec("fstat", L.SYS_FSTAT, K_FSTAT, emul=True),
+    SyscallSpec("pipe2", L.SYS_PIPE2, K_PIPE2, emul=True),
+    SyscallSpec("getrandom", L.SYS_GETRANDOM, K_GETRANDOM, emul=True),
+    SyscallSpec("ioctl", L.SYS_IOCTL, K_IOCTL, emul=True),
 )
 
 # Policy table slots: one per table row, plus the catch-all UNKNOWN slot

@@ -11,7 +11,11 @@ The set mirrors the paper's benchmarks at simulation scale:
 * ``indirect_svc``  — the Figure 4 program: an indirect jump whose target is
   an svc instruction (completeness strategy C3);
 * ``retry_loop``    — a direct back-edge onto an svc (strategy C2);
-* ``caller_x8``     — x8 assigned by the caller of a raw svc (strategy C1).
+* ``caller_x8``     — x8 assigned by the caller of a raw svc (strategy C1);
+* ``file_churn_param`` / ``proc_probe_param`` / ``bad_fd_probe`` — guest
+  kernel emulation workloads (repro.emul): real open/write/seek/read/close
+  churn against the in-memory filesystem, the synthetic procfs window, and
+  the errno paths (-EBADF / -ENOENT).
 """
 from __future__ import annotations
 
@@ -216,6 +220,140 @@ def io_bandwidth_param(nbytes: int = 4096) -> Asm:
     a.bl_to("libc.so:write")
     a.emit(isa.subsi(19, 19, 1))
     a.b_to("loop", cond="ne")
+    _exit0(a)
+    return a
+
+
+# -- guest-kernel emulation workloads (repro.emul) ---------------------------
+#
+# These exercise the emulated syscall surface: per-lane fd tables, the
+# in-memory filesystem and the synthetic procfs.  New syscall numbers go
+# through ``libc.so:raw_svc`` with a caller-side x8 assignment (the C1
+# pattern) rather than new libc wrappers, so the library's svc-site census
+# — and with it the rewriter/classification oracles — stays fixed.  Path
+# names are identified by their first 8 bytes (repro.emul.state.path_key),
+# so a program "writes a path" by storing one 8-byte little-endian word.
+
+def _raw(a: Asm, nr: int) -> None:
+    a.emit(isa.movz(8, nr, sf=0))
+    a.bl_to("libc.so:raw_svc")
+
+
+def _mov_imm64(rd: int, value: int) -> list:
+    """movz + 3x movk: a full 64-bit immediate (path-key words)."""
+    assert 0 <= value < (1 << 64), value
+    return [isa.movz(rd, value & 0xFFFF, 0),
+            isa.movk(rd, (value >> 16) & 0xFFFF, 1),
+            isa.movk(rd, (value >> 32) & 0xFFFF, 2),
+            isa.movk(rd, (value >> 48) & 0xFFFF, 3)]
+
+
+def _store_path(a: Asm, reg_addr: int, reg_tmp: int, name: bytes) -> None:
+    """Place ``name``'s path-key word at the buffer held in ``reg_addr``."""
+    from repro.emul.state import path_key
+    a.emit(*_mov_imm64(reg_tmp, path_key(name)))
+    a.emit(isa.str_imm(reg_tmp, reg_addr))
+
+
+def file_churn_param(nbytes: int = 512) -> Asm:
+    """x19 iterations of openat(O_CREAT|O_TRUNC) -> write -> lseek(0,SET) ->
+    read -> close on one regular file of the in-memory filesystem — the
+    emulation subsystem's churn workload (BENCH_emul).  The last read's
+    return lands at SCRATCH (= nbytes when the kernel personality is on)."""
+    assert nbytes % 8 == 0 and 0 < nbytes <= L.FILE_BYTES
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(*isa.mov_imm48(21, L.HEAP_BASE))          # data buffer
+    a.emit(*isa.mov_imm48(24, L.HEAP_BASE + 2048))   # path buffer
+    _store_path(a, 24, 25, b"churn.da")
+    a.label("loop")
+    a.emit(isa.movz(0, 0))                           # dirfd (ignored)
+    a.emit(isa.mov_r(1, 24))
+    a.emit(*isa.mov_imm48(2, L.O_CREAT | L.O_TRUNC))
+    _raw(a, L.SYS_OPENAT)
+    a.emit(isa.mov_r(23, 0))                         # fd
+    a.emit(isa.mov_r(0, 23))
+    a.emit(isa.mov_r(1, 21))
+    a.emit(*isa.mov_imm48(2, nbytes))
+    a.bl_to("libc.so:write")
+    a.emit(isa.mov_r(0, 23))
+    a.emit(isa.movz(1, 0))
+    a.emit(isa.movz(2, L.SEEK_SET))
+    _raw(a, L.SYS_LSEEK)
+    a.emit(isa.mov_r(0, 23))
+    a.emit(isa.mov_r(1, 21))
+    a.emit(*isa.mov_imm48(2, nbytes))
+    a.bl_to("libc.so:read")
+    a.emit(isa.mov_r(20, 0))                         # last read count
+    a.emit(isa.mov_r(0, 23))
+    a.bl_to("libc.so:close")
+    a.emit(isa.subsi(19, 19, 1))
+    a.b_to("loop", cond="ne")
+    a.emit(isa.movz(10, L.SCRATCH & 0xFFFF), isa.movk(10, L.SCRATCH >> 16, 1))
+    a.emit(isa.str_imm(20, 10))
+    _exit0(a)
+    return a
+
+
+def proc_probe_param() -> Asm:
+    """x19 iterations of openat("/proc/se...") -> read the counter window ->
+    close.  The procfs read snapshots per-lane kernel statistics (virtual
+    pid, icount, cycles, hook/enosys/emul counts...) into the heap buffer;
+    the program stores the observed pid word at SCRATCH — under PTRACE
+    with virtualize=True, procfs must agree with the virtualised getpid
+    (VIRT_PID); under ASC the library virtualises getpid before any svc
+    fires, so the kernel's procfs view shows the real PID."""
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(*isa.mov_imm48(21, L.HEAP_BASE))
+    a.emit(*isa.mov_imm48(24, L.HEAP_BASE + 2048))
+    from repro.emul.state import PROC_KEY
+    a.emit(*_mov_imm64(25, PROC_KEY))
+    a.emit(isa.str_imm(25, 24))
+    a.label("loop")
+    a.emit(isa.movz(0, 0))
+    a.emit(isa.mov_r(1, 24))
+    a.emit(isa.movz(2, 0))
+    _raw(a, L.SYS_OPENAT)
+    a.emit(isa.mov_r(23, 0))
+    a.emit(isa.mov_r(0, 23))
+    a.emit(isa.mov_r(1, 21))
+    a.emit(*isa.mov_imm48(2, L.PROC_WORDS * 8))
+    a.bl_to("libc.so:read")
+    a.emit(isa.mov_r(0, 23))
+    a.bl_to("libc.so:close")
+    a.emit(isa.subsi(19, 19, 1))
+    a.b_to("loop", cond="ne")
+    a.emit(isa.ldr_imm(20, 21))                      # proc word 0: virt pid
+    a.emit(isa.movz(10, L.SCRATCH & 0xFFFF), isa.movk(10, L.SCRATCH >> 16, 1))
+    a.emit(isa.str_imm(20, 10))
+    _exit0(a)
+    return a
+
+
+def bad_fd_probe() -> Asm:
+    """Errno paths: read(9) on a never-opened fd, then openat of a missing
+    name without O_CREAT.  With the kernel personality on the returns are
+    -EBADF and -ENOENT; they land at SCRATCH and SCRATCH+8.  (Legacy lanes
+    see the stub semantics instead: a stream read and openat -> 3.)"""
+    a = Asm(APP_BASE)
+    a.label("main")
+    a.emit(*isa.mov_imm48(21, L.HEAP_BASE))
+    a.emit(isa.movz(0, 9))
+    a.emit(isa.mov_r(1, 21))
+    a.emit(isa.movz(2, 64))
+    a.bl_to("libc.so:read")
+    a.emit(isa.mov_r(20, 0))
+    a.emit(*isa.mov_imm48(24, L.HEAP_BASE + 2048))
+    _store_path(a, 24, 25, b"no-such")
+    a.emit(isa.movz(0, 0))
+    a.emit(isa.mov_r(1, 24))
+    a.emit(isa.movz(2, 0))
+    _raw(a, L.SYS_OPENAT)
+    a.emit(isa.mov_r(22, 0))
+    a.emit(isa.movz(10, L.SCRATCH & 0xFFFF), isa.movk(10, L.SCRATCH >> 16, 1))
+    a.emit(isa.str_imm(20, 10))
+    a.emit(isa.str_imm(22, 10, 8))
     _exit0(a)
     return a
 

@@ -105,6 +105,8 @@ def initial_state(pp: PreparedProcess, *, fuel: int = 2_000_000,
         ptrace=jnp.int64(1 if pp.mechanism is Mechanism.PTRACE else 0),
         virt_getpid=jnp.int64(
             1 if (pp.mechanism is Mechanism.PTRACE and pp.virtualize) else 0),
+        k_enabled=jnp.int64(
+            1 if (pp.cfg is None or pp.cfg.emul_enabled) else 0),
     )
 
 

@@ -1,0 +1,15 @@
+"""In-fleet guest kernel personality: batched syscall emulation.
+
+``state`` owns the per-lane fd-table / in-memory-filesystem carry layout
+(flat ``k_`` leaves of MachineState); ``engine`` is the batched service
+step + data mover called from the one shared executor body, so XLA,
+Pallas megastep and the generated scalar engine all inherit it.
+"""
+from repro.emul import engine, state
+from repro.emul.state import (ERRNOS, KERN_FIELDS, KernelState, fresh_kern,
+                              fresh_kern_scalar, kern_of, path_key, with_kern)
+
+__all__ = [
+    "engine", "state", "ERRNOS", "KERN_FIELDS", "KernelState",
+    "fresh_kern", "fresh_kern_scalar", "kern_of", "path_key", "with_kern",
+]

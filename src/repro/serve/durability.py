@@ -363,8 +363,11 @@ def request_from_meta(meta: dict, *, store: ImageStore,
     mech = Mechanism[meta["mechanism"]]
     virt = bool(meta["virtualize"])
     fn = resolve_builder(meta.get("builder"), builders)
+    # the config is part of the key: requests sharing one image may still
+    # prepare under different configs (e.g. emul_enabled), and pp.cfg
+    # feeds the lane's initial state
     key = (meta["digest"], meta["entry"], meta["sig_handler"],
-           meta["mechanism"], virt)
+           meta["mechanism"], virt, json.dumps(meta["cfg"], sort_keys=True))
     pp = cache.get(key)
     if pp is None:
         if fn is not None:

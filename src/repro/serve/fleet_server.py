@@ -216,6 +216,7 @@ class FleetServer:
         self.harvested_steps = 0                 # steps of published attempts
         self.discarded_steps = 0                 # steps of faulted C3 attempts
         self.enosys_total = 0                    # -ENOSYS fall-throughs seen
+        self.emul_served_total = 0               # guest-kernel-serviced svcs
         self.trace_records = 0                   # ring records published
         self.trace_dropped = 0                   # ring overflow drops
         # host-side observability (repro.obs): None/False keeps the server
@@ -931,6 +932,7 @@ class FleetServer:
         done = patched != M.RUNNING
         if done.any():  # one transfer per field, only when publishing
             enosys = np.asarray(self._states.enosys_count)
+            emul_served = np.asarray(self._states.emul_served)
             if self._trace is not None:
                 if self._stream is None:
                     # classic mode decodes rings from the carry; streamed
@@ -1035,6 +1037,7 @@ class FleetServer:
                 tenant=req.tenant, preemptions=req.preemptions))
             self.harvested_steps += int(icount[i])
             self.enosys_total += int(enosys[i])
+            self.emul_served_total += int(emul_served[i])
             self.trace_records += len(recs)
             self.trace_dropped += dropped
             self.completed += 1
@@ -1361,6 +1364,7 @@ class FleetServer:
             "image_admissions": self.table.admissions,
             "image_dedup_hits": self.table.dedup_hits,
             "enosys_total": self.enosys_total,
+            "emul_served_total": self.emul_served_total,
             "trace_enabled": self.trace_enabled,
             "trace_records": self.trace_records,
             "trace_dropped": self.trace_dropped,

@@ -44,18 +44,20 @@ _SYS_SIG = {
     L.SYS_RT_SIGRETURN: ("rt_sigreturn", 0),
     L.SYS_OPENAT: ("openat", 3),
     L.SYS_CLOSE: ("close", 1),
+    L.SYS_DUP: ("dup", 1),
+    L.SYS_IOCTL: ("ioctl", 3),
+    L.SYS_PIPE2: ("pipe2", 2),
+    L.SYS_LSEEK: ("lseek", 3),
+    L.SYS_FSTAT: ("fstat", 2),
+    L.SYS_GETRANDOM: ("getrandom", 3),
     # unmodelled-but-named AArch64 numbers (arity per the syscall table)
     17: ("getcwd", 2),
-    23: ("dup", 1),
     25: ("fcntl", 3),
-    29: ("ioctl", 3),
     35: ("unlinkat", 3),
     48: ("faccessat", 3),
-    62: ("lseek", 3),
     66: ("writev", 3),
     78: ("readlinkat", 3),
     79: ("fstatat", 3),
-    80: ("fstat", 2),
     94: ("exit_group", 1),
     96: ("set_tid_address", 1),
     98: ("futex", 3),
@@ -76,14 +78,14 @@ _SYS_SIG = {
     222: ("mmap", 3),
     226: ("mprotect", 3),
     260: ("wait4", 3),
-    278: ("getrandom", 3),
     291: ("statx", 3),
 }
 
 _ERRNO_NAMES = {
     1: "EPERM", 2: "ENOENT", 4: "EINTR", 5: "EIO", 9: "EBADF", 11: "EAGAIN",
     12: "ENOMEM", 13: "EACCES", 14: "EFAULT", 16: "EBUSY", 17: "EEXIST",
-    20: "ENOTDIR", 21: "EISDIR", 22: "EINVAL", 28: "ENOSPC", 32: "EPIPE",
+    20: "ENOTDIR", 21: "EISDIR", 22: "EINVAL", 23: "ENFILE", 24: "EMFILE",
+    25: "ENOTTY", 27: "EFBIG", 28: "ENOSPC", 29: "ESPIPE", 32: "EPIPE",
     34: "ERANGE", 38: "ENOSYS", 110: "ETIMEDOUT",
 }
 

@@ -46,6 +46,12 @@ def pytest_configure(config):
         "forced-host devices; scale up via ASC_TEST_EXAMPLES)")
     config.addinivalue_line(
         "markers",
+        "emul: guest-kernel emulation suites (per-lane fd tables + in-memory "
+        "filesystem semantics, errno paths, scalar==xla==pallas bit-exact "
+        "parity, kernel carry through compaction/preemption/kill-and-recover, "
+        "legacy stub equivalence with emul_enabled=False)")
+    config.addinivalue_line(
+        "markers",
         "obs: serving telemetry suites (registry/profiler/span units, "
         "observed-vs-unobserved bit-identity, zero-allocation disabled "
         "path, obs knob round-trip + sink validation, resume-wait ledger, "

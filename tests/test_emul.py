@@ -1,0 +1,534 @@
+"""Guest-kernel emulation suite (marked ``emul``).
+
+The subsystem under test is :mod:`repro.emul`: a batched, fully on-device
+kernel personality — per-lane fd tables, an in-memory filesystem, a
+synthetic procfs window and an ioctl device — that gives real semantics to
+openat/close/read/write/lseek/dup/fstat/pipe2/getrandom/ioctl.
+
+Three invariant families:
+
+* **Filesystem semantics** (scalar engine, tiny inline guest programs):
+  offset tracking through write/lseek/read, O_APPEND/O_TRUNC, dup sharing
+  one open file description, fd and inode exhaustion, pipe round-trips,
+  deterministic getrandom, the ioctl control surface, and every errno
+  path — all observed exactly as a guest would, through registers and
+  guest memory.
+* **Engine parity**: the emulation lives in the one spec-generated
+  executor body, so scalar == xla fleet == pallas megastep, bit for bit,
+  including every kernel-carry table — and compaction, preemption and
+  kill-anywhere durability recovery must carry open fd tables through
+  untouched.
+* **Legacy equivalence**: a lane with ``emul_enabled=False`` reproduces
+  the historical stubs exactly (openat -> 3, close -> 0, any-fd stream
+  read/write, new numbers -> -ENOSYS), so mixed fleets and old oracles
+  keep working.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (HookConfig, Mechanism, pack_fleet, prepare, programs,
+                        run_fleet_prepared, run_prepared, unstack_state)
+from repro.core import fleet, isa
+from repro.core import layout as L
+from repro.core.image import APP_BASE
+from repro.core.isa import Asm
+from repro.core.machine import mem_read, mem_read_block
+from repro.emul import state as emul_state
+from repro.sched import PolicyScheduler
+from repro.serve.durability import BUILDERS, DurabilityManager, register_builder
+from repro.serve.fleet_server import FleetServer
+
+pytestmark = pytest.mark.emul
+
+FUEL = 300_000
+HEAP = L.HEAP_BASE
+PATHBUF = L.HEAP_BASE + 2048
+
+register_builder("emul-churn", lambda: programs.file_churn_param(256))
+register_builder("emul-proc", lambda: programs.proc_probe_param())
+
+
+# -- inline guest-program helpers ---------------------------------------------
+
+def _store(a, reg, slot):
+    """SCRATCH[slot] = reg — how a guest reports a value to the host."""
+    a.emit(isa.movz(10, L.SCRATCH & 0xFFFF), isa.movk(10, L.SCRATCH >> 16, 1))
+    a.emit(isa.str_imm(reg, 10, 8 * slot))
+
+
+def _openat(a, flags, path_reg=24):
+    a.emit(isa.movz(0, 0))
+    a.emit(isa.mov_r(1, path_reg))
+    a.emit(*isa.mov_imm48(2, flags))
+    programs._raw(a, L.SYS_OPENAT)
+
+
+def _rw(a, nr, fd_reg, buf, nbytes):
+    a.emit(isa.mov_r(0, fd_reg))
+    a.emit(*isa.mov_imm48(1, buf))
+    a.emit(*isa.mov_imm48(2, nbytes))
+    programs._raw(a, nr)
+
+
+def _run_asm(build, *, mech=Mechanism.ASC, cfg=None, regs=None):
+    a = Asm(APP_BASE)
+    a.label("main")
+    build(a)
+    programs._exit0(a)
+    pp = prepare(a, mech, virtualize=True, cfg=cfg)
+    return run_prepared(pp, fuel=FUEL, regs=regs)
+
+
+def scratch(st, slot=0):
+    return mem_read(st, L.SCRATCH + 8 * slot)
+
+
+def _assert_state_equal(ref, got, ctx):
+    for field in ref._fields:
+        a, b = np.asarray(getattr(ref, field)), np.asarray(getattr(got, field))
+        assert np.array_equal(a, b), f"{ctx}: field {field!r} diverged"
+
+
+# -- filesystem semantics -----------------------------------------------------
+
+def test_file_churn_reads_back_written_bytes():
+    """The packaged churn workload: every iteration's final read returns
+    the full write size, and every call was served by the emulation."""
+    pp = prepare(programs.file_churn_param(256), Mechanism.ASC,
+                 virtualize=True)
+    st = run_prepared(pp, fuel=FUEL, regs={19: 3})
+    assert int(st.halted) and int(st.exit_code) == 0
+    assert scratch(st) == 256
+    assert int(st.emul_served) == 3 * 5  # openat/write/lseek/read/close
+    assert int(st.enosys_count) == 0
+
+
+def test_offset_tracking_write_lseek_read():
+    """Sequential writes advance the shared offset; lseek(SEEK_END) sees
+    the file size; data read back from an absolute seek equals what was
+    written there (verified through guest memory)."""
+    W0, W1, W2 = 0x1111, 0x2222, 0x3333
+
+    def build(a):
+        a.emit(*isa.mov_imm48(24, PATHBUF))
+        programs._store_path(a, 24, 25, b"file.dat")
+        for i, w in enumerate((W0, W1, W2)):
+            a.emit(*isa.mov_imm48(25, w))
+            a.emit(*isa.mov_imm48(10, HEAP + 8 * i))
+            a.emit(isa.str_imm(25, 10))
+        _openat(a, L.O_CREAT)
+        a.emit(isa.mov_r(23, 0))
+        _rw(a, L.SYS_WRITE, 23, HEAP, 16)        # [W0 W1], offset -> 16
+        _store(a, 0, 0)
+        _rw(a, L.SYS_WRITE, 23, HEAP + 16, 8)    # [.. W2], offset -> 24
+        _store(a, 0, 1)
+        a.emit(isa.mov_r(0, 23))
+        a.emit(isa.movz(1, 0))
+        a.emit(isa.movz(2, L.SEEK_END))
+        programs._raw(a, L.SYS_LSEEK)            # -> 24 (the size)
+        _store(a, 0, 2)
+        a.emit(isa.mov_r(0, 23))
+        a.emit(isa.movz(1, 8))
+        a.emit(isa.movz(2, L.SEEK_SET))
+        programs._raw(a, L.SYS_LSEEK)            # -> 8
+        _store(a, 0, 3)
+        _rw(a, L.SYS_READ, 23, HEAP + 1024, 16)  # reads [W1 W2]
+        _store(a, 0, 4)
+
+    st = _run_asm(build)
+    assert [scratch(st, i) for i in range(5)] == [16, 8, 24, 8, 16]
+    assert mem_read_block(st, HEAP + 1024, 2).tolist() == [W1, W2]
+
+
+def test_dup_shares_open_file_description():
+    """dup() shares offset and refcount: reads through the duplicate see
+    the original's seek position, and closing the original keeps the
+    description alive for the duplicate."""
+    def build(a):
+        a.emit(*isa.mov_imm48(24, PATHBUF))
+        programs._store_path(a, 24, 25, b"shared")
+        _openat(a, L.O_CREAT)
+        a.emit(isa.mov_r(23, 0))
+        _rw(a, L.SYS_WRITE, 23, HEAP, 16)        # offset now 16 (EOF)
+        a.emit(isa.mov_r(0, 23))
+        programs._raw(a, L.SYS_DUP)
+        a.emit(isa.mov_r(26, 0))
+        _store(a, 26, 0)                         # the new fd
+        _rw(a, L.SYS_READ, 26, HEAP + 1024, 16)  # shared offset: EOF -> 0
+        _store(a, 0, 1)
+        a.emit(isa.mov_r(0, 23))                 # rewind via the ORIGINAL
+        a.emit(isa.movz(1, 0))
+        a.emit(isa.movz(2, L.SEEK_SET))
+        programs._raw(a, L.SYS_LSEEK)
+        a.emit(isa.mov_r(0, 23))                 # close the original
+        programs._raw(a, L.SYS_CLOSE)
+        _rw(a, L.SYS_READ, 26, HEAP + 1024, 16)  # dup still open -> 16
+        _store(a, 0, 2)
+
+    st = _run_asm(build)
+    fd_dup = scratch(st, 0)
+    assert fd_dup == emul_state.N_PREOPEN + 1    # first free after the open
+    assert scratch(st, 1) == 0                   # shared offset sat at EOF
+    assert scratch(st, 2) == 16                  # refcount survived close
+
+
+def test_fd_exhaustion_returns_emfile():
+    """Opening the same file until the per-lane fd table fills: every free
+    slot is handed out, then -EMFILE."""
+    free = L.MAX_FDS - emul_state.N_PREOPEN
+
+    def build(a):
+        a.emit(*isa.mov_imm48(24, PATHBUF))
+        programs._store_path(a, 24, 25, b"one.file")
+        a.label("loop")
+        _openat(a, L.O_CREAT)
+        a.emit(isa.mov_r(20, 0))
+        a.emit(isa.subsi(19, 19, 1))
+        a.b_to("loop", cond="ne")
+        _store(a, 20, 0)
+
+    st = _run_asm(build, regs={19: free})
+    assert scratch(st) == L.MAX_FDS - 1          # last grant: highest slot
+    st = _run_asm(build, regs={19: free + 1})
+    assert scratch(st) == -emul_state.EMFILE
+
+
+def test_inode_exhaustion_returns_enospc():
+    """Creating more distinct names than MAX_INODES: the table fills and
+    then -ENOSPC (paths are identified by their first 8 bytes)."""
+    def build(a):
+        a.emit(*isa.mov_imm48(24, PATHBUF))
+        for i in range(L.MAX_INODES + 1):
+            programs._store_path(a, 24, 25, b"f%d" % i)
+            _openat(a, L.O_CREAT)
+            a.emit(isa.mov_r(20, 0))
+        _store(a, 20, 0)
+
+    st = _run_asm(build)
+    assert scratch(st) == -emul_state.ENOSPC
+
+
+def test_open_excl_and_trunc_and_append():
+    """O_EXCL on an existing name -> -EEXIST; O_TRUNC zeroes the size;
+    O_APPEND writes land at EOF regardless of the descriptor offset."""
+    def build(a):
+        a.emit(*isa.mov_imm48(24, PATHBUF))
+        programs._store_path(a, 24, 25, b"app.file")
+        _openat(a, L.O_CREAT)
+        a.emit(isa.mov_r(23, 0))
+        _rw(a, L.SYS_WRITE, 23, HEAP, 16)
+        a.emit(isa.mov_r(0, 23))
+        programs._raw(a, L.SYS_CLOSE)
+        _openat(a, L.O_CREAT | L.O_EXCL)         # exists -> -EEXIST
+        _store(a, 0, 0)
+        _openat(a, L.O_APPEND)                   # fresh offset 0, but...
+        a.emit(isa.mov_r(23, 0))
+        _rw(a, L.SYS_WRITE, 23, HEAP, 8)         # ...APPEND writes at 16
+        a.emit(isa.mov_r(0, 23))
+        a.emit(*isa.mov_imm48(1, HEAP + 1024))   # fstat statbuf
+        programs._raw(a, L.SYS_FSTAT)
+        _store(a, 0, 1)
+        _openat(a, L.O_TRUNC)
+        a.emit(isa.mov_r(23, 0))
+        a.emit(isa.mov_r(0, 23))
+        a.emit(*isa.mov_imm48(1, HEAP + 1280))
+        programs._raw(a, L.SYS_FSTAT)
+
+    st = _run_asm(build)
+    assert scratch(st, 0) == -emul_state.EEXIST
+    assert scratch(st, 1) == 0                   # fstat succeeded
+    kind, ino, size, nlink = mem_read_block(st, HEAP + 1024, 4).tolist()
+    assert kind == emul_state.FD_FILE and size == 24 and nlink == 1
+    assert mem_read_block(st, HEAP + 1280, 4).tolist()[2] == 0  # O_TRUNC
+
+
+def test_pipe_roundtrip_and_eagain():
+    """pipe2 hands back a read/write fd pair; bytes written come back in
+    order; overfilling the pipe inode returns -EAGAIN."""
+    def build(a):
+        a.emit(*isa.mov_imm48(25, 0xBEEF))
+        a.emit(*isa.mov_imm48(10, HEAP))
+        a.emit(isa.str_imm(25, 10))
+        a.emit(*isa.mov_imm48(0, HEAP + 1024))   # pipefd array
+        a.emit(isa.movz(1, 0))
+        programs._raw(a, L.SYS_PIPE2)
+        _store(a, 0, 0)
+        a.emit(*isa.mov_imm48(10, HEAP + 1024))
+        a.emit(isa.ldr_imm(27, 10))              # read end
+        a.emit(isa.ldr_imm(28, 10, 8))           # write end
+        _rw(a, L.SYS_WRITE, 28, HEAP, 8)
+        _store(a, 0, 1)
+        _rw(a, L.SYS_READ, 27, HEAP + 2048 + 1024, 8)
+        _store(a, 0, 2)
+        # fill the pipe inode to the brim, then one more write -> -EAGAIN
+        _rw(a, L.SYS_WRITE, 28, HEAP, L.FILE_BYTES - 8)
+        _store(a, 0, 3)
+        _rw(a, L.SYS_WRITE, 28, HEAP, 16)
+        _store(a, 0, 4)
+
+    st = _run_asm(build)
+    assert scratch(st, 0) == 0
+    fds = mem_read_block(st, HEAP + 1024, 2).tolist()
+    assert fds[0] == emul_state.N_PREOPEN and fds[1] == emul_state.N_PREOPEN + 1
+    assert scratch(st, 1) == 8 and scratch(st, 2) == 8
+    assert mem_read(st, HEAP + 2048 + 1024) == 0xBEEF
+    assert scratch(st, 3) == L.FILE_BYTES - 8    # fills the inode exactly
+    assert scratch(st, 4) == -emul_state.EAGAIN
+
+
+def test_getrandom_deterministic_nonzero_and_einval():
+    """getrandom fills the buffer with per-lane deterministic words,
+    short-reads at FILE_BYTES, and rejects misaligned lengths."""
+    def build(a):
+        a.emit(*isa.mov_imm48(0, HEAP))
+        a.emit(*isa.mov_imm48(1, 64))
+        a.emit(isa.movz(2, 0))
+        programs._raw(a, L.SYS_GETRANDOM)
+        _store(a, 0, 0)
+        a.emit(*isa.mov_imm48(0, HEAP + 1024))
+        a.emit(*isa.mov_imm48(1, 64))
+        a.emit(isa.movz(2, 0))
+        programs._raw(a, L.SYS_GETRANDOM)
+        a.emit(*isa.mov_imm48(0, HEAP))
+        a.emit(*isa.mov_imm48(1, L.FILE_BYTES + 64))
+        a.emit(isa.movz(2, 0))
+        programs._raw(a, L.SYS_GETRANDOM)        # short read
+        _store(a, 0, 1)
+        a.emit(*isa.mov_imm48(0, HEAP))
+        a.emit(isa.movz(1, 7))                   # misaligned
+        a.emit(isa.movz(2, 0))
+        programs._raw(a, L.SYS_GETRANDOM)
+        _store(a, 0, 2)
+
+    st = _run_asm(build)
+    assert scratch(st, 0) == 64
+    assert scratch(st, 1) == L.FILE_BYTES
+    assert scratch(st, 2) == -emul_state.EINVAL
+    first = mem_read_block(st, HEAP + 1024, 8)
+    assert np.all(first != 0)                    # splitmix64 never zero here
+    st2 = _run_asm(build)                        # same lane seed -> same words
+    assert np.array_equal(first, mem_read_block(st2, HEAP + 1024, 8))
+
+
+def test_ioctl_device_surface():
+    """ioctl works only on the /dev/asc fd: introspection values on the
+    device, -ENOTTY on a regular file, -EINVAL for unknown requests."""
+    def build(a):
+        a.emit(*isa.mov_imm48(24, PATHBUF))
+        a.emit(*programs._mov_imm64(25, emul_state.DEV_KEY))
+        a.emit(isa.str_imm(25, 24))
+        _openat(a, 0)
+        a.emit(isa.mov_r(23, 0))
+        a.emit(isa.mov_r(0, 23))
+        a.emit(*isa.mov_imm48(1, emul_state.ASC_IOCTL_PID))
+        programs._raw(a, L.SYS_IOCTL)
+        _store(a, 0, 0)
+        a.emit(isa.mov_r(0, 23))
+        a.emit(*isa.mov_imm48(1, 0x7777))        # unknown request
+        programs._raw(a, L.SYS_IOCTL)
+        _store(a, 0, 1)
+        programs._store_path(a, 24, 25, b"reg.file")
+        _openat(a, L.O_CREAT)
+        a.emit(isa.mov_r(23, 0))
+        a.emit(isa.mov_r(0, 23))
+        a.emit(*isa.mov_imm48(1, emul_state.ASC_IOCTL_PID))
+        programs._raw(a, L.SYS_IOCTL)            # not the device
+        _store(a, 0, 2)
+
+    st = _run_asm(build)
+    assert scratch(st, 0) == L.PID
+    assert scratch(st, 1) == -emul_state.EINVAL
+    assert scratch(st, 2) == -emul_state.ENOTTY
+
+
+def test_errno_paths_ebadf_enoent():
+    pp = prepare(programs.bad_fd_probe(), Mechanism.ASC, virtualize=True)
+    st = run_prepared(pp, fuel=FUEL)
+    assert scratch(st, 0) == -emul_state.EBADF
+    assert scratch(st, 1) == -emul_state.ENOENT
+
+
+def test_proc_window_mirrors_pid_virtualisation():
+    """The synthetic procfs pid word follows the kernel-level (ptrace)
+    virtualisation; under ASC the library virtualises getpid before any
+    svc, so the kernel's view keeps the real pid."""
+    for mech, want in ((Mechanism.ASC, L.PID), (Mechanism.PTRACE, L.VIRT_PID)):
+        pp = prepare(programs.proc_probe_param(), mech, virtualize=True)
+        st = run_prepared(pp, fuel=FUEL, regs={19: 2})
+        assert int(st.exit_code) == 0
+        assert scratch(st) == want, mech
+
+
+# -- legacy equivalence -------------------------------------------------------
+
+def test_disabled_lane_reproduces_stub_semantics():
+    """emul_enabled=False: openat -> 3, close -> 0, any-fd stream reads,
+    emulated-only numbers -> -ENOSYS, and the emul_served counter stays 0."""
+    legacy = HookConfig(emul_enabled=False)
+    pp = prepare(programs.bad_fd_probe(), Mechanism.ASC, virtualize=True,
+                 cfg=legacy)
+    st = run_prepared(pp, fuel=FUEL)
+    assert scratch(st, 0) == 64                  # stream read served any fd
+    assert scratch(st, 1) == 3                   # the openat stub constant
+    assert int(st.emul_served) == 0
+
+    def build(a):
+        a.emit(isa.movz(0, 5))
+        a.emit(isa.movz(1, 0))
+        a.emit(isa.movz(2, L.SEEK_SET))
+        programs._raw(a, L.SYS_LSEEK)
+        _store(a, 0, 0)
+
+    st = _run_asm(build, cfg=legacy)
+    assert scratch(st) == -emul_state.ENOSYS     # modelled, not stubbed
+    assert int(st.enosys_count) == 1
+
+
+def test_stub_workloads_bit_identical_with_emulation_on():
+    """Pre-emulation workloads that only touch the preopened stream fds
+    (0/1/2/3) must be bit-identical whether the personality is on or off:
+    the preopen table exists precisely to keep them unperturbed."""
+    for builder in (lambda: programs.read_loop(4, 256),
+                    lambda: programs.io_bandwidth(3, 4096),
+                    lambda: programs.getpid_loop(20)):
+        on = run_prepared(prepare(builder(), Mechanism.ASC, virtualize=True),
+                          fuel=FUEL)
+        off = run_prepared(prepare(builder(), Mechanism.ASC, virtualize=True,
+                                   cfg=HookConfig(emul_enabled=False)),
+                           fuel=FUEL)
+        for field in on._fields:
+            if field in ("emul_served",) + emul_state.KERN_FIELDS:
+                continue                         # the carry itself differs
+            assert np.array_equal(np.asarray(getattr(on, field)),
+                                  np.asarray(getattr(off, field))), field
+
+
+# -- engine parity ------------------------------------------------------------
+
+def _emul_grid():
+    cells = [
+        ("churn", lambda: programs.file_churn_param(256), {19: 3}, None),
+        ("proc", lambda: programs.proc_probe_param(), {19: 2}, None),
+        ("badfd", programs.bad_fd_probe, None, None),
+        ("mixed", lambda: programs.mixed_ops(3, 128), None, None),
+        ("legacy-churn", lambda: programs.file_churn_param(256), {19: 3},
+         HookConfig(emul_enabled=False)),
+    ]
+    pps, regs, keys = [], [], []
+    for mech in (Mechanism.NONE, Mechanism.ASC, Mechanism.PTRACE):
+        for name, builder, rg, cfg in cells:
+            pps.append(prepare(builder(), mech,
+                               virtualize=mech is not Mechanism.NONE,
+                               cfg=cfg))
+            regs.append(rg)
+            keys.append((mech.value, name))
+    return pps, regs, keys
+
+
+def test_parity_scalar_xla_pallas_bit_exact():
+    """Every emulation workload x mechanism x {xla, pallas}: full-state
+    equality against the scalar engine — fd tables, inode tables, file
+    data and the rng cursor included (they are MachineState fields, so
+    the generic comparison covers them)."""
+    pps, regs, keys = _emul_grid()
+    refs = [run_prepared(pp, fuel=FUEL, regs=rg)
+            for pp, rg in zip(pps, regs)]
+    for engine in ("xla", "pallas"):
+        out = run_fleet_prepared(pps, fuel=FUEL, chunk=8, regs=regs,
+                                 engine=engine)
+        for i, (key, ref) in enumerate(zip(keys, refs)):
+            _assert_state_equal(ref, unstack_state(out, i),
+                                f"{engine} lane {key}")
+
+
+def test_compaction_carries_kernel_state_bit_exact():
+    """A bimodal churn/proc fleet that drains through ladder rungs: the
+    compacted run equals the fixed-width run on every field — the kernel
+    carry rides the compaction permutation like any other lane state."""
+    pps, regs = [], []
+    for mech in (Mechanism.ASC, Mechanism.NONE):
+        for builder in (lambda: programs.file_churn_param(256),
+                        lambda: programs.proc_probe_param()):
+            for n in (2, 12):
+                pps.append(prepare(builder(), mech,
+                                   virtualize=mech is not Mechanism.NONE))
+                regs.append({19: n})
+    imgs, ids, states = pack_fleet(pps, fuel=FUEL, regs=regs)
+    ref = fleet.run_fleet(imgs, states, ids, chunk=8)
+    imgs, ids, states = pack_fleet(pps, fuel=FUEL, regs=regs)
+    stats = {}
+    out = fleet.run_fleet_compact(imgs, states, ids, chunk=8, min_bucket=1,
+                                  interval=32, stats=stats)
+    _assert_state_equal(ref, out, "compacted emul fleet")
+    assert stats["compactions"], "fleet never compacted"
+    assert int(np.asarray(out.emul_served).sum()) > 0
+
+
+def test_preempted_churn_lane_resumes_bit_exact():
+    """A churn lane preempted mid-file (open fds in the carry) and later
+    re-admitted publishes the exact solo state: checkpoint/restore carries
+    the fd table and file contents."""
+    srv = FleetServer(pool=1, gen_steps=48, chunk=8, fuel=FUEL, trace=True,
+                      scheduler=PolicyScheduler())
+    churn_regs = {19: 8}
+    noisy = srv.submit(prepare(programs.file_churn_param(256), Mechanism.ASC,
+                               virtualize=True), regs=churn_regs,
+                       tenant="noisy", priority=0)
+    srv.step()                                   # churn lane mid-flight
+    vip = srv.submit(prepare(programs.getpid_loop_param(), Mechanism.ASC,
+                             virtualize=True), regs={19: 3},
+                     tenant="vip", priority=10, deadline_steps=48)
+    results = {r.rid: r for r in srv.run(max_generations=20000)}
+    assert set(results) == {noisy, vip}
+    assert srv.stats()["preemptions"] >= 1
+    ref = run_prepared(prepare(programs.file_churn_param(256), Mechanism.ASC,
+                               virtualize=True), fuel=FUEL, regs=churn_regs)
+    _assert_state_equal(ref, results[noisy].state, "preempted churn lane")
+    assert int(results[noisy].state.emul_served) == 8 * 5
+
+
+def test_durability_kill_recover_preserves_fd_tables(tmp_path):
+    """A durable server killed mid-churn recovers from journal + snapshot
+    and drains to the exact states of an uninterrupted run — including
+    the full kernel carry of lanes that died with files open."""
+    def mk(d):
+        cfg = HookConfig(snapshot_interval=2, journal_fsync=False)
+        return FleetServer(2, cfg=cfg, gen_steps=48, fuel=FUEL,
+                           durability=DurabilityManager(d))
+
+    def feed(srv):
+        srv.submit(BUILDERS["emul-churn"], virtualize=True, regs={19: 6})
+        srv.submit(BUILDERS["emul-proc"], virtualize=True, regs={19: 4})
+        srv.submit(BUILDERS["emul-churn"], virtualize=True, regs={19: 3},
+                   cfg=HookConfig(emul_enabled=False,
+                                  snapshot_interval=2, journal_fsync=False))
+
+    ref = mk(tmp_path / "ref")
+    feed(ref)
+    ref_out = {r.rid: r for r in ref.run(5000)}
+
+    vic = mk(tmp_path / "vic")
+    feed(vic)
+    pre = []
+    for _ in range(3):                           # kill mid-flight
+        pre.extend(vic.step())
+    del vic
+    srv, replayed = FleetServer.recover(tmp_path / "vic")
+    post = list(srv.run(5000))
+    union = {r.rid: r for r in pre + replayed + post}
+    assert set(union) == set(ref_out)
+    for rid, r in ref_out.items():
+        _assert_state_equal(r.state, union[rid].state, f"recovered rid={rid}")
+    assert srv.stats()["emul_served_total"] > 0
+
+
+def test_fleet_summary_and_server_expose_emul_served():
+    pps, regs, _ = _emul_grid()
+    out = run_fleet_prepared(pps, fuel=FUEL, chunk=8, regs=regs)
+    rows = fleet.fleet_summary(out)
+    assert sum(r["emul_served"] for r in rows) > 0
+    assert all("enosys_count" in r for r in rows)
+    # legacy lanes never count emulated serves
+    served = np.asarray(out.emul_served)
+    ken = np.asarray(out.k_enabled)
+    assert np.all(served[ken == 0] == 0)

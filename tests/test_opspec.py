@@ -21,6 +21,7 @@ import repro.core.opspec as opspec
 from repro.core import costmodel as cm
 from repro.core import layout as L
 from repro.core.isa import Op
+from repro.emul import state as emul_state
 
 import jax
 import jax.numpy as jnp
@@ -84,6 +85,7 @@ class Lane:
         self.out_count = 0
         self.out_sum = 0
         self.enosys_count = 0
+        self.emul_served = 0  # sweep runs with the guest kernel disabled
 
 
 def _rr(st, i):
@@ -575,7 +577,11 @@ def _batch_inputs(batch):
         pid=jnp.full(B, L.PID, jnp.int64),
         in_off=jnp.asarray(np.asarray([l.in_off for l in lanes], np.int64)),
         out_count=jnp.zeros(B, jnp.int64), out_sum=jnp.zeros(B, jnp.int64),
-        enosys_count=jnp.zeros(B, jnp.int64))
+        enosys_count=jnp.zeros(B, jnp.int64),
+        emul_served=jnp.zeros(B, jnp.int64),
+        # guest kernel disabled: the oracle transcribes the legacy
+        # pre-emulation semantics (openat -> 3, close -> 0, new -> -ENOSYS)
+        **emul_state.fresh_kern(B, enabled=False))
     fields = tuple(jnp.asarray(f[k]) for k in
                    ("op", "rd", "rn", "rm", "sh", "cond", "sf")) \
         + (jnp.asarray(imm),)
@@ -592,7 +598,8 @@ def _exec_batch(fields, st):
 _CHECK_FIELDS = ("regs", "sp", "pc", "nzcv", "mem", "cycles", "icount",
                  "halted", "exit_code", "fault_pc", "sig_handler",
                  "in_signal", "ptrace", "virt_getpid", "hook_count", "pid",
-                 "in_off", "out_count", "out_sum", "enosys_count")
+                 "in_off", "out_count", "out_sum", "enosys_count",
+                 "emul_served")
 
 
 def _assert_lane(case_i, case, got, want: Lane):
@@ -655,7 +662,8 @@ def test_scalar_step_matches_legacy_oracle():
             in_signal=jnp.int64(lane.in_signal),
             ptrace=jnp.int64(lane.ptrace),
             virt_getpid=jnp.int64(lane.virt_getpid),
-            in_off=jnp.int64(lane.in_off))
+            in_off=jnp.int64(lane.in_off),
+            k_enabled=jnp.int64(0))  # legacy semantics for the oracle
         got = jstep(img, st)
         oracle_step(case, lane)
         _assert_lane(-1, case, got, lane)
@@ -687,6 +695,14 @@ def test_specs_cover_every_op():
     assert set(opspec.SPECS) == {Op(i) for i in range(int(Op.N_OPS))}
     assert opspec.TRACE_SYS == (L.SYS_READ, L.SYS_WRITE, L.SYS_GETPID,
                                 L.SYS_EXIT, L.SYS_RT_SIGRETURN,
-                                L.SYS_OPENAT, L.SYS_CLOSE)
+                                L.SYS_OPENAT, L.SYS_CLOSE, L.SYS_LSEEK,
+                                L.SYS_DUP, L.SYS_FSTAT, L.SYS_PIPE2,
+                                L.SYS_GETRANDOM, L.SYS_IOCTL)
     assert opspec.slot_of(L.SYS_READ) == 0
+    assert opspec.slot_of(L.SYS_IOCTL) == len(opspec.SYSCALLS) - 1
     assert opspec.slot_of(12345) == opspec.SLOT_UNKNOWN
+    # the guest-kernel rows are flagged for EMULATE routing
+    emul_nrs = {s.nr for s in opspec.SYSCALLS if s.emul}
+    assert emul_nrs == {L.SYS_READ, L.SYS_WRITE, L.SYS_OPENAT, L.SYS_CLOSE,
+                       L.SYS_LSEEK, L.SYS_DUP, L.SYS_FSTAT, L.SYS_PIPE2,
+                       L.SYS_GETRANDOM, L.SYS_IOCTL}
